@@ -1,0 +1,175 @@
+"""CPU-scale contrastive representation training on the synthetic stream —
+the measurement substrate for Fig 8 (probe), Table 3 (retrieval) and
+Table 5 (loss ablation under frame drops).
+
+Modes:
+  streamsplit  N=8 batches + GMM virtual negatives + hybrid (SWD+Lap)
+  edge_only    N=8 batches, plain InfoNCE (the collapse-prone baseline)
+  server       N=64 large-batch InfoNCE (upper bound)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gmm as G
+from repro.core.hybrid import HybridCfg, hybrid_loss
+from repro.core.infonce import (batch_infonce, infonce_with_virtual_negatives,
+                                streaming_infonce)
+from repro.data.audio_stream import AudioStream, StreamCfg, augment_pair
+from repro.models.audio_encoder import AudioEncCfg, encode, init_audio_encoder
+from repro.optim import adamw_init, adamw_update
+
+ENC = AudioEncCfg(widths=(16, 16, 32, 32), strides=(1, 2, 1, 2),
+                  d_embed=32, groups=4, frames=97)
+
+
+@dataclass
+class TrainResult:
+    params: dict
+    eval_z: np.ndarray
+    eval_y: np.ndarray
+    probe_acc: float
+    collapse: float   # mean pairwise |cos| of eval embeddings
+
+
+def _encode(params, mel):
+    return encode(ENC, params, mel)
+
+
+def make_loss(mode, variant="hybrid", n_syn=16):
+    # at this scale (d=32, N=8) SWD values are tiny; λ₁ rescaled accordingly
+    hcfg = HybridCfg(lam_sw=2.0, lam_lap=0.01, n_dirs=32, knn=3)
+
+    def loss_fn(params, key, m1, m2, gmm_state, mask, cold, zbuf):
+        z1 = _encode(params, m1)
+        z2 = _encode(params, m2)
+        if mode in ("server", "edge_only"):
+            return batch_infonce(z1, z2, tau=0.1), z1
+        # streamsplit: virtual negatives decouple quality from batch size.
+        # Cold start (paper §4.1.2): conservative local policy (batch
+        # negatives) until the GMM sufficient statistics are populated.
+        task_virtual = infonce_with_virtual_negatives(
+            key, gmm_state, z1, z2, n_syn=n_syn, tau=0.1, boundary_tau=0.1)
+        task_cold = batch_infonce(z1, z2, tau=0.1)
+        # after cold start keep a symmetric real-negative anchor term: the
+        # one-sided (stop-grad) virtual repulsion alone drifts (see
+        # tests/test_infonce.py::test_stopgrad_negative_drift)
+        task = jnp.where(cold, task_cold,
+                         0.5 * task_cold + 0.5 * task_virtual)
+        # ... + the server-side hybrid regularizers.  As on the server, the
+        # SWD quantiles are estimated over the temporal BUFFER (current
+        # frames + stop-gradient history), not the 8-frame batch.  The
+        # buffer is stored newest-first; the Laplacian needs true temporal
+        # order (oldest .. newest, then the current chronological batch) or
+        # its edges connect random pairs and it becomes a collapse force.
+        z_seq = jnp.concatenate([zbuf[::-1], z1], axis=0)
+        buf_mask = jnp.concatenate([jnp.ones((zbuf.shape[0],)), mask])
+        reg, _ = hybrid_loss(key, z_seq[None], hcfg, mask=buf_mask[None],
+                             variant=variant)
+        return task + reg, z1
+
+    return loss_fn
+
+
+def train_representation(mode="streamsplit", *, steps=250, batch=8,
+                         drop_rate=0.0, variant="hybrid", seed=0,
+                         eval_n=240, lr=2e-3, n_syn=16):
+    key = jax.random.PRNGKey(seed)
+    params = init_audio_encoder(ENC, key)
+    opt = adamw_init(params)
+    gmm = G.init_gmm(jax.random.PRNGKey(seed + 1), 16, ENC.d_embed)
+    stream = AudioStream(StreamCfg(seed=seed))
+    rng = np.random.default_rng(seed)
+    loss_fn = make_loss(mode, variant, n_syn=n_syn)
+    eff_batch = 64 if mode == "server" else batch
+
+    zbuf = jnp.zeros((96, ENC.d_embed))
+    zbuf = zbuf.at[:, 0].set(1.0)  # arbitrary unit vectors until filled
+
+    @jax.jit
+    def step(params, opt, key, m1, m2, gmm_state, mask, cold, zbuf):
+        (l, z1), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, key, m1, m2, gmm_state, mask, cold, zbuf)
+        params, opt = adamw_update(params, g, opt, lr=lr)
+        return params, opt, l, z1
+
+    for i in range(steps):
+        mels, _, _ = stream.batch(eff_batch)
+        m1s, m2s = [], []
+        for m in mels:
+            a, b = augment_pair(rng, m[: ENC.frames])
+            m1s.append(a)
+            m2s.append(b)
+        m1 = jnp.asarray(np.stack(m1s))
+        m2 = jnp.asarray(np.stack(m2s))
+        mask = jnp.asarray(
+            (rng.random(eff_batch) >= drop_rate).astype(np.float32))
+        key, sub = jax.random.split(key)
+        cold = jnp.bool_(i < 50)   # T_coldstart = 50 frames (paper §4.1.2)
+        params, opt, l, z1 = step(params, opt, sub, m1, m2, gmm, mask, cold,
+                                  zbuf)
+        if mode == "streamsplit":
+            zbuf = jnp.concatenate(
+                [jax.lax.stop_gradient(z1), zbuf], 0)[: zbuf.shape[0]]
+            # lazy sync (paper §4.3.3): the GMM is fit server-side on the
+            # *temporal buffer* (diverse across the stream) and downlinked —
+            # NOT on the edge's instantaneous 8-frame batch, which would
+            # track any incipient collapse.
+            gmm = G.em_update(gmm, zbuf, decay=0.1)
+
+    # evaluation set
+    ev = AudioStream(StreamCfg(seed=seed + 100))
+    mels, ys, _ = ev.batch(eval_n)
+    z = np.asarray(jax.jit(_encode)(params,
+                                    jnp.asarray(mels[:, : ENC.frames])))
+    acc = linear_probe(z, ys, seed=seed)
+    sim = np.abs(z @ z.T)
+    collapse = float((sim.sum() - eval_n) / (eval_n * (eval_n - 1)))
+    return TrainResult(params, z, ys, acc, collapse)
+
+
+def linear_probe(z, y, *, seed=0, train_frac=0.75, steps=300, lr=0.5):
+    """Multinomial logistic probe on frozen embeddings."""
+    n = len(y)
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(n)
+    n_tr = int(n * train_frac)
+    tr, te = idx[:n_tr], idx[n_tr:]
+    n_cls = int(y.max()) + 1
+    W = jnp.zeros((z.shape[1], n_cls))
+    b = jnp.zeros((n_cls,))
+    zt = jnp.asarray(z[tr])
+    yt = jnp.asarray(y[tr])
+
+    def loss(Wb):
+        W, b = Wb
+        logits = zt @ W + b
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, yt[:, None], 1))
+
+    Wb = (W, b)
+    g_fn = jax.jit(jax.grad(loss))
+    for _ in range(steps):
+        g = g_fn(Wb)
+        Wb = jax.tree.map(lambda p, g: p - lr * g, Wb, g)
+    W, b = Wb
+    pred = np.asarray(jnp.argmax(jnp.asarray(z[te]) @ W + b, -1))
+    return float((pred == y[te]).mean())
+
+
+def retrieval_metrics(z, y, *, k=10):
+    """mAP@k and R@1 with cosine similarity (Table 3)."""
+    zn = z / np.maximum(np.linalg.norm(z, axis=1, keepdims=True), 1e-9)
+    sim = zn @ zn.T
+    np.fill_diagonal(sim, -np.inf)
+    order = np.argsort(-sim, axis=1)[:, :k]
+    rel = (y[order] == y[:, None]).astype(float)
+    # mAP@k
+    prec = np.cumsum(rel, 1) / np.arange(1, k + 1)[None]
+    denom = np.maximum(rel.sum(1), 1)
+    ap = (prec * rel).sum(1) / denom
+    return float(ap.mean()), float(rel[:, 0].mean())

@@ -1,0 +1,67 @@
+"""Kernel microbenchmarks (§5 overheads).
+
+NOTE: Pallas kernels execute in interpret mode on this CPU container (the
+TPU is the target, not the runtime), so wall times here measure the jnp
+reference implementations and the interpreted kernel bodies — the paper-
+comparable numbers are the jnp paths; kernel wall times are correctness
+artifacts, not perf claims (the perf claims live in EXPERIMENTS.md
+§Roofline, derived from the compiled dry-run)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_us
+from repro.core.swd import random_directions, sphere_prior_samples
+from repro.kernels import ops, ref
+
+
+def run_all():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 6)
+    B, d, C, N, M = 256, 128, 64, 256, 50
+    z = jax.random.normal(ks[0], (B, d))
+    z = z / jnp.linalg.norm(z, axis=-1, keepdims=True)
+    mu = 0.5 * jax.random.normal(ks[1], (C, d))
+    var = jax.random.uniform(ks[2], (C, d), minval=0.05, maxval=0.5)
+    logpi = jax.nn.log_softmax(jax.random.normal(ks[3], (C,)))
+    zp = z + 0.05 * jax.random.normal(ks[4], (B, d))
+    zp = zp / jnp.linalg.norm(zp, axis=-1, keepdims=True)
+    zn = jax.random.normal(ks[5], (B, N, d))
+    zn = zn / jnp.linalg.norm(zn, axis=-1, keepdims=True)
+
+    gmm_ref = jax.jit(ref.gmm_posterior_ref)
+    row("kernel_gmm_posterior_ref_jnp",
+        time_us(gmm_ref, z, mu, var, logpi), f"B={B},C={C},d={d}")
+    row("kernel_gmm_posterior_pallas_interp",
+        time_us(lambda *a: ops.gmm_posterior(*a), z, mu, var, logpi),
+        "interpret mode (CPU correctness path)")
+
+    inf_ref = jax.jit(lambda a, b, c: ref.infonce_vneg_ref(a, b, c, 0.1))
+    row("kernel_infonce_vneg_ref_jnp", time_us(inf_ref, z, zp, zn),
+        f"paper GMM-synthesis class: 0.8ms/batch on Pi4")
+    row("kernel_infonce_vneg_pallas_interp",
+        time_us(lambda *a: ops.infonce_vneg(*a), z, zp, zn), "")
+
+    def swd_jnp(k, x):
+        from repro.core.swd import swd_loss
+        return swd_loss(k, x, n_dirs=M)
+
+    swd_ref_j = jax.jit(swd_jnp)
+    row("kernel_swd_ref_jnp", time_us(swd_ref_j, key, z),
+        "paper SWD class: 1.2ms/batch on Pi4")
+    row("kernel_swd_pallas_interp",
+        time_us(lambda k, x: ops.swd(k, x, n_dirs=M), key, z), "")
+
+    x8 = jax.random.normal(key, (64, 4096))
+    q_ref = jax.jit(ref.int8_quantize_ref)
+    row("kernel_int8_quant_ref_jnp", time_us(q_ref, x8),
+        "paper: <0.5ms/frame")
+    row("kernel_int8_quant_pallas_interp",
+        time_us(lambda x: ops.int8_quantize(x), x8), "")
+
+    z3 = jax.random.normal(key, (8, 100, 128))
+    m3 = jnp.ones((8, 100))
+    lap_jit = jax.jit(lambda z, m: ops.laplacian_energy(z, m, k=5))
+    row("kernel_laplacian_pallas_interp", time_us(lap_jit, z3, m3),
+        "paper server graph: ~3ms/100-frame batch")

@@ -1,0 +1,50 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(dirname="experiments/dryrun"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_table(recs, mesh="single"):
+    rows = []
+    hdr = ("| arch | shape | params | compute(ms) | memory(ms) | coll(ms) | "
+           "bottleneck | useful-FLOP | MFU≤ | peak mem/chip |")
+    sep = "|" + "---|" * 10
+    rows.append(hdr)
+    rows.append(sep)
+    for r in recs:
+        if "error" in r:
+            if (mesh in r.get("mesh", "")):
+                rows.append(f"| {r['arch']} | {r['shape']} | ERROR: "
+                            f"{r['error'][:60]} |" + " |" * 7)
+            continue
+        is_single = r["mesh"].count("x") == 1
+        if (mesh == "single") != is_single:
+            continue
+        rl = r["roofline"]
+        peak = r["memory"].get("peak_memory_in_bytes", 0) / 2 ** 30
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['n_params']/1e9:.2f}B "
+            f"| {rl['compute_s']*1e3:.1f} | {rl['memory_s']*1e3:.1f} "
+            f"| {rl['collective_s']*1e3:.1f} | {rl['bottleneck']} "
+            f"| {rl['useful_flop_fraction']:.2f} "
+            f"| {rl['mfu_upper_bound']*100:.1f}% | {peak:.1f} GB |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")
+    print("## single-pod (16x16)\n")
+    print(fmt_table(recs, "single"))
+    print("\n## multi-pod (2x16x16)\n")
+    print(fmt_table(recs, "multi"))

@@ -1,0 +1,40 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (value semantics per row name:
+KB, ms, mJ, %, correlation r, ... — the derived column carries the paper's
+number for side-by-side comparison).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only PREFIX]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run only benches whose module matches")
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slowest (training-based) benches")
+    args = ap.parse_args()
+
+    from benchmarks import kernels_bench, quality_tables, system_tables
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    suites = [("system", system_tables.run_all),
+              ("kernels", kernels_bench.run_all)]
+    if not args.quick:
+        suites.insert(1, ("quality", quality_tables.run_all))
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        print(f"# --- {name} ---", file=sys.stderr)
+        fn()
+    print(f"# total {time.time() - t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Elastic scaling: reshard a training state onto a different mesh.
+
+Checkpoints are mesh-agnostic (full arrays); re-entry onto a new mesh is a
+``jax.device_put`` against the new rules — so a job can restart on a
+degraded fleet (e.g. 512 -> 448 chips after failures) as long as the new
+mesh divides the sharded dims.  ``largest_feasible_mesh`` picks the biggest
+(data, model) grid for a surviving-device count.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import AxisRules, make_rules, param_sharding
+
+
+def reshard_state(state, axes_tree, new_mesh: Mesh, *, fsdp=False):
+    """Place a host-side state pytree onto ``new_mesh`` per logical axes."""
+    rules = make_rules(new_mesh, fsdp=fsdp)
+    from repro.distributed import sharding as shd
+    with shd.axis_rules(rules):
+        shardings = param_sharding(axes_tree, new_mesh)
+    return jax.device_put(state, shardings)
+
+
+def largest_feasible_mesh(devices, *, model_divisors, prefer_model=None):
+    """Choose (data, model) from a (possibly degraded) device list.
+
+    model must divide head/expert counts — callers pass the divisor set;
+    data gets the rest.  Returns a Mesh or None."""
+    n = len(devices)
+    candidates = sorted(model_divisors, reverse=True)
+    if prefer_model in model_divisors:
+        candidates = [prefer_model] + [c for c in candidates
+                                       if c != prefer_model]
+    for m in candidates:
+        if n % m == 0 and n // m >= 1:
+            import numpy as np
+            arr = np.array(devices[: (n // m) * m]).reshape(n // m, m)
+            return Mesh(arr, ("data", "model"))
+    return None

@@ -1,0 +1,38 @@
+"""Pytree <-> npz serialization (no orbax offline; self-contained)."""
+from __future__ import annotations
+
+import io
+import os
+
+import jax
+import numpy as np
+
+
+def _paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = []
+    for path, _ in flat:
+        keys.append("/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                             for p in path))
+    return keys, [v for _, v in flat], treedef
+
+
+def save_tree(path, tree):
+    keys, vals, _ = _paths(tree)
+    arrs = {k: np.asarray(v) for k, v in zip(keys, vals)}
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **arrs)
+    os.replace(tmp, path)
+
+
+def load_tree(path, template):
+    """Restore into the structure of ``template`` (values replaced)."""
+    keys, vals, treedef = _paths(template)
+    with np.load(path) as data:
+        new_vals = []
+        for k, v in zip(keys, vals):
+            arr = data[k]
+            if hasattr(v, "dtype"):
+                arr = arr.astype(v.dtype)
+            new_vals.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, new_vals)

@@ -1,0 +1,5 @@
+"""Import every arch config so registration side-effects run."""
+from repro.configs import (arctic_480b, gemma2_2b, kimi_k2_1t, llava_next_34b,
+                           mamba2_780m, musicgen_large, nemotron_4_15b,
+                           qwen1p5_0p5b, qwen3_1p7b, streamsplit_audio,
+                           zamba2_1p2b)  # noqa: F401

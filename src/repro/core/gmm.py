@@ -1,0 +1,181 @@
+"""Distributional Memory: streaming Gaussian Mixture Model (paper §4.1).
+
+Replaces the O(N·d) contrastive memory bank with a C-component diagonal GMM
+(~33 KB at C=64, d=128, fp16) updated by *stepwise online EM*
+(Cappé–Moulines EMA over sufficient statistics).  Provides:
+
+- ``responsibilities`` / ``entropy``  — the zero-cost uncertainty signal
+  U_t = H(p(c|z)) (Eq. 11) that drives the RL splitter;
+- ``sample_virtual_negatives`` — boundary-aware virtual hard negatives
+  (Eq. 9), synthesized, l2-normalized and discarded after the gradient;
+- ``em_update`` — optionally *distributed*: sufficient statistics are
+  psum'd over a mesh axis, giving exact data-parallel streaming EM.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+LOG2PI = 1.8378770664093453
+
+
+class GMMState(NamedTuple):
+    s0: jax.Array      # (C,)    EMA count per component
+    s1: jax.Array      # (C, d)  EMA sum of r*z
+    s2: jax.Array      # (C, d)  EMA sum of r*z^2
+    step: jax.Array    # ()      update counter
+
+    @property
+    def n_components(self):
+        return self.s0.shape[0]
+
+    @property
+    def dim(self):
+        return self.s1.shape[1]
+
+
+def init_gmm(key, n_components, dim, *, var0=0.05):
+    mu = jax.random.normal(key, (n_components, dim), jnp.float32)
+    mu = mu / jnp.linalg.norm(mu, axis=-1, keepdims=True)
+    s0 = jnp.ones((n_components,), jnp.float32)
+    s1 = mu
+    s2 = jnp.square(mu) + var0
+    return GMMState(s0=s0, s1=s1, s2=s2, step=jnp.zeros((), jnp.int32))
+
+
+def params_of(state: GMMState, *, var_floor=1e-4):
+    """-> (pi (C,), mu (C,d), var (C,d))."""
+    s0 = jnp.maximum(state.s0, 1e-8)
+    pi = s0 / jnp.sum(s0)
+    mu = state.s1 / s0[:, None]
+    var = jnp.maximum(state.s2 / s0[:, None] - jnp.square(mu), var_floor)
+    return pi, mu, var
+
+
+def size_bytes(state: GMMState, *, dtype_bytes=2):
+    """Wire/storage size of the distributional memory (Eq. 8)."""
+    C, d = state.n_components, state.dim
+    return 2 * C * d * dtype_bytes + C * dtype_bytes
+
+
+def log_joint(state: GMMState, z):
+    """log pi_c + log N(z; mu_c, diag var_c) -> (B, C)."""
+    pi, mu, var = params_of(state)
+    z = z.astype(jnp.float32)
+    diff = z[:, None, :] - mu[None]                       # (B, C, d)
+    maha = jnp.sum(jnp.square(diff) / var[None], axis=-1)
+    logdet = jnp.sum(jnp.log(var), axis=-1)               # (C,)
+    d = z.shape[-1]
+    return jnp.log(pi)[None] - 0.5 * (maha + logdet + d * LOG2PI)
+
+
+def responsibilities(state: GMMState, z):
+    """Posterior p(c | z) via Bayes' rule -> (B, C)."""
+    return jax.nn.softmax(log_joint(state, z), axis=-1)
+
+
+def entropy(state: GMMState, z):
+    """U_t = H(p(c|z_t)) in nats (Eq. 11) -> (B,)."""
+    lj = log_joint(state, z)
+    logp = lj - jax.nn.logsumexp(lj, axis=-1, keepdims=True)
+    p = jnp.exp(logp)
+    return -jnp.sum(p * logp, axis=-1)
+
+
+def normalized_entropy(state: GMMState, z):
+    """U_t / log C in [0, 1] — the RL state feature."""
+    return entropy(state, z) / jnp.log(state.n_components)
+
+
+def em_update(state: GMMState, z, *, decay=0.05, axis_name=None,
+              reseed_frac=0.2) -> GMMState:
+    """One streaming-EM step on a batch of embeddings z: (B, d).
+
+    Stepwise EM: S <- (1-λ) S + λ * batch_sufficient_stats.  When
+    ``axis_name`` is given the batch statistics are psum'd across that mesh
+    axis first — distributed streaming EM with identical fixed point.
+
+    Dead-component reinitialization: components whose mixing weight falls
+    below ``reseed_frac / C`` are re-seeded at the batch's *least-explained*
+    frames (the novel/hard ones).  Without this, stale components keep
+    frozen means forever (the EMA shrinks s0 and s1 at the same rate) and
+    the virtual negatives they generate go permanently easy — the failure
+    mode behind dimensional collapse with distributional memory.
+    """
+    z = z.astype(jnp.float32)
+    r = responsibilities(state, z)                        # (B, C)
+    b0 = jnp.sum(r, axis=0)                               # (C,)
+    b1 = r.T @ z                                          # (C, d)
+    b2 = r.T @ jnp.square(z)                              # (C, d)
+    n = jnp.float32(z.shape[0])
+    if axis_name is not None:
+        b0 = jax.lax.psum(b0, axis_name)
+        b1 = jax.lax.psum(b1, axis_name)
+        b2 = jax.lax.psum(b2, axis_name)
+        n = jax.lax.psum(n, axis_name)
+    # normalize batch stats to per-sample scale so decay is batch-size free
+    scale = jnp.sum(state.s0) / jnp.maximum(n, 1.0)
+    lam = jnp.float32(decay)
+    s0 = (1 - lam) * state.s0 + lam * b0 * scale
+    s1 = (1 - lam) * state.s1 + lam * b1 * scale
+    s2 = (1 - lam) * state.s2 + lam * b2 * scale
+
+    if reseed_frac:
+        C = s0.shape[0]
+        pi = s0 / jnp.maximum(jnp.sum(s0), 1e-8)
+        dead = pi < (reseed_frac / C)                      # (C,)
+        # least-explained frames first (novelty = low max responsibility)
+        novelty_order = jnp.argsort(jnp.max(r, axis=-1))   # (B,)
+        rank = jnp.cumsum(dead.astype(jnp.int32)) - 1      # slot per dead c
+        rows = novelty_order[jnp.clip(rank, 0, z.shape[0] - 1)]
+        seed_z = z[rows]                                   # (C, d)
+        s0_new = jnp.full_like(s0, jnp.mean(s0))
+        mean_var = jnp.mean(jnp.maximum(
+            s2 / jnp.maximum(s0[:, None], 1e-8)
+            - jnp.square(s1 / jnp.maximum(s0[:, None], 1e-8)), 1e-4))
+        s1_new = seed_z * s0_new[:, None]
+        s2_new = (jnp.square(seed_z) + mean_var) * s0_new[:, None]
+        s0 = jnp.where(dead, s0_new, s0)
+        s1 = jnp.where(dead[:, None], s1_new, s1)
+        s2 = jnp.where(dead[:, None], s2_new, s2)
+
+    return GMMState(s0=s0, s1=s1, s2=s2, step=state.step + 1)
+
+
+def assign(state: GMMState, z):
+    """Hard component assignment c* -> (B,) int32."""
+    return jnp.argmax(log_joint(state, z), axis=-1).astype(jnp.int32)
+
+
+def boundary_logits(state: GMMState, c_star, *, tau=0.1):
+    """Eq. 9: p(c | z+, c*) ∝ pi_c * exp(-||mu_c* - mu_c||² / 2τ²), c != c*.
+
+    c_star: (B,) -> (B, C) sampling logits."""
+    pi, mu, _ = params_of(state)
+    d2 = jnp.sum(jnp.square(mu[:, None] - mu[None]), axis=-1)  # (C, C)
+    logits = jnp.log(pi)[None] - d2 / (2.0 * tau * tau)        # (C, C)
+    logits = jnp.where(jnp.eye(len(pi), dtype=bool), -jnp.inf, logits)
+    return logits[c_star]                                      # (B, C)
+
+
+def sample_virtual_negatives(key, state: GMMState, z_anchor, n_syn,
+                             *, tau=0.1):
+    """Boundary-aware virtual negatives (Eq. 9) -> (B, n_syn, d), l2-normed.
+
+    Samples a component near the anchor's decision boundary per negative,
+    then draws from that component's Gaussian and projects to the sphere.
+    """
+    B = z_anchor.shape[0]
+    _, mu, var = params_of(state)
+    c_star = assign(state, z_anchor)
+    logits = boundary_logits(state, c_star, tau=tau)           # (B, C)
+    k1, k2 = jax.random.split(key)
+    comps = jax.random.categorical(k1, logits[:, None, :],
+                                   axis=-1, shape=(B, n_syn))  # (B, n_syn)
+    eps = jax.random.normal(k2, (B, n_syn, state.dim), jnp.float32)
+    z = mu[comps] + eps * jnp.sqrt(var[comps])
+    z = z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-6)
+    return z

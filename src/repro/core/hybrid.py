@@ -1,0 +1,73 @@
+"""The Hybrid Loss (paper Eq. 13):
+
+    L_server = L_task + λ₁·L_SW(p_θ, U) + λ₂·L_Lap(G)
+
+L_task is InfoNCE over the buffer in the self-supervised setting, or CE
+when sparse labels are available.  Also exposes the ablation variants of
+Table 5 (MSE-only, KL, task+SW, task+Lap).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.infonce import batch_infonce
+from repro.core.laplacian import laplacian_loss
+from repro.core.swd import swd_loss
+
+
+@dataclass(frozen=True)
+class HybridCfg:
+    lam_sw: float = 0.1      # λ₁ (paper grid search)
+    lam_lap: float = 0.01    # λ₂
+    n_dirs: int = 50         # SWD projections M
+    knn: int = 5             # temporal graph neighbours
+    tau: float = 0.1
+
+
+def task_loss(z, *, labels=None, logits=None, z_pos=None, tau=0.1):
+    if logits is not None and labels is not None:
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+    if z_pos is not None:
+        return batch_infonce(z, z_pos, tau=tau)
+    return jnp.float32(0.0)
+
+
+def hybrid_loss(key, z_seq, cfg: HybridCfg = HybridCfg(), *, mask=None,
+                labels=None, logits=None, z_pos=None, axis_name=None,
+                variant="hybrid"):
+    """z_seq: (T, d) or (B, T, d) temporally ordered embeddings.
+
+    variant ∈ {hybrid, task_sw, task_lap, mse, kl} (Table 5 ablation)."""
+    z_flat = z_seq.reshape(-1, z_seq.shape[-1])
+    t = task_loss(z_flat if z_pos is None else z_flat, labels=labels,
+                  logits=logits, z_pos=z_pos, tau=cfg.tau)
+    parts = {"task": t}
+    if variant in ("hybrid", "task_sw"):
+        parts["sw"] = swd_loss(key, z_flat, n_dirs=cfg.n_dirs,
+                               axis_name=axis_name)
+    if variant in ("hybrid", "task_lap"):
+        parts["lap"] = laplacian_loss(z_seq, k=cfg.knn, mask=mask)
+    if variant == "mse":
+        # naive consistency: pull adjacent frames together with plain MSE
+        d = z_seq[..., 1:, :] - z_seq[..., :-1, :]
+        parts["mse"] = jnp.mean(jnp.square(d))
+    if variant == "kl":
+        # KL of the batch feature distribution to N(0, I) (moment-matched)
+        mu = jnp.mean(z_flat, 0)
+        var = jnp.var(z_flat, 0) + 1e-6
+        parts["kl"] = 0.5 * jnp.mean(mu ** 2 + var - jnp.log(var) - 1.0)
+
+    loss = parts["task"]
+    if "sw" in parts:
+        loss = loss + cfg.lam_sw * parts["sw"]
+    if "lap" in parts:
+        loss = loss + cfg.lam_lap * parts["lap"]
+    if "mse" in parts:
+        loss = loss + parts["mse"]
+    if "kl" in parts:
+        loss = loss + parts["kl"]
+    return loss, parts

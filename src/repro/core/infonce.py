@@ -1,0 +1,78 @@
+"""Contrastive objectives: streaming InfoNCE with GMM virtual negatives
+(paper Eq. 10) and the standard large-batch InfoNCE used by the server
+(L_task) and the Server-Only / FedCL baselines.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gmm as gmm_mod
+
+
+def cosine(a, b):
+    a = a / jnp.maximum(jnp.linalg.norm(a, axis=-1, keepdims=True), 1e-9)
+    b = b / jnp.maximum(jnp.linalg.norm(b, axis=-1, keepdims=True), 1e-9)
+    return jnp.sum(a * b, axis=-1)
+
+
+def streaming_infonce(z, z_pos, z_neg, *, tau=0.1):
+    """Eq. 10.  z, z_pos: (B, d); z_neg: (B, N_syn, d) virtual negatives.
+
+    -log  exp(s⁺/τ) / (exp(s⁺/τ) + Σ_j exp(s⁻_j/τ))
+    """
+    zn = z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-9)
+    pos = cosine(z, z_pos) / tau                              # (B,)
+    negs = jnp.einsum("bd,bnd->bn", zn.astype(jnp.float32),
+                      z_neg.astype(jnp.float32)) / tau        # (B, N)
+    logits = jnp.concatenate([pos[:, None], negs], axis=1)
+    return jnp.mean(jax.nn.logsumexp(logits, axis=1) - pos)
+
+
+def infonce_with_virtual_negatives(key, gmm_state, z, z_pos, *,
+                                   n_syn=256, tau=0.1, boundary_tau=0.1,
+                                   use_batch_negatives=True):
+    """The edge objective: sample boundary-aware virtual negatives from the
+    GMM, compute Eq. 10, and *discard* the negatives (no memory bank).
+
+    ``use_batch_negatives`` additionally appends the (N-1) other in-batch
+    embeddings to the denominator.  This is a zero-memory-cost robustness
+    fix beyond the paper: Eq. 9's ``c != c*`` exclusion means frames lumped
+    into the SAME component never repel each other, so a collapsed
+    embedding cannot escape through virtual negatives alone (EXPERIMENTS.md
+    §Fig8 documents the ablation).  The resident batch supplies exactly the
+    within-component repulsion that closes this hole."""
+    z_neg = gmm_mod.sample_virtual_negatives(
+        key, gmm_state, jax.lax.stop_gradient(z), n_syn, tau=boundary_tau)
+    z_neg = jax.lax.stop_gradient(z_neg)
+    if use_batch_negatives:
+        B = z.shape[0]
+        zn = z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True),
+                             1e-9)
+        # gradients DO flow through the in-batch negatives: one-sided
+        # (stop-grad) repulsion from a shared negative cloud has a net
+        # drift toward its antipode — symmetric repulsion is what keeps
+        # the loss collapse-free (see tests/test_infonce.py).
+        others = jnp.broadcast_to(zn[None], (B, B, z.shape[-1]))
+        # mask self-pairs by replacing own row with the antipode of z_pos
+        # (an always-easy negative, contributes ~0 to the denominator)
+        eye = jnp.eye(B, dtype=bool)[..., None]
+        filler = -z_pos[:, None, :]
+        others = jnp.where(eye, jax.lax.stop_gradient(filler), others)
+        z_neg = jnp.concatenate([z_neg, others], axis=1)
+    return streaming_infonce(z, z_pos, z_neg, tau=tau)
+
+
+def batch_infonce(z1, z2, *, tau=0.1):
+    """Standard NT-Xent over a batch (SimCLR-style, both directions).
+
+    z1, z2: (B, d) two views. Requires B > 1 — this is exactly the
+    large-batch dependency (C1) that StreamSplit removes on the edge."""
+    B = z1.shape[0]
+    z1 = z1 / jnp.maximum(jnp.linalg.norm(z1, axis=-1, keepdims=True), 1e-9)
+    z2 = z2 / jnp.maximum(jnp.linalg.norm(z2, axis=-1, keepdims=True), 1e-9)
+    logits = (z1.astype(jnp.float32) @ z2.astype(jnp.float32).T) / tau
+    labels = jnp.arange(B)
+    l12 = -jnp.mean(jax.nn.log_softmax(logits, axis=1)[labels, labels])
+    l21 = -jnp.mean(jax.nn.log_softmax(logits, axis=0)[labels, labels])
+    return 0.5 * (l12 + l21)

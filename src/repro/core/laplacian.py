@@ -1,0 +1,101 @@
+"""Affinity metric: temporal-graph Dirichlet energy (paper §3.2, Eq. 4/6/14).
+
+The temporal graph connects each frame to its k nearest *temporal*
+neighbours (|i−j| ≤ k).  Missing frames (dropped by the splitter or the
+network) are expressed with a validity mask: edges touching a missing
+frame vanish, which is exactly the paper's "buffer with temporal gaps".
+
+Minimizing the energy is the "manifold stitching" spring force
+(Fig. 5); Theorem 3.2's interpolation bound is implemented in
+``interpolation_error_bound`` and property-tested.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dirichlet_energy(z, *, k=5, mask=None, weights=None):
+    """(1/|E|) Σ_{(i,j)∈E} w_ij ||z_i − z_j||²  over the temporal k-window.
+
+    z: (T, d) or (B, T, d); mask: matching (T,)/(B, T) validity (1=present).
+    """
+    batched = z.ndim == 3
+    if not batched:
+        z = z[None]
+        if mask is not None:
+            mask = mask[None]
+    B, T, d = z.shape
+    if mask is None:
+        mask = jnp.ones((B, T), jnp.float32)
+    mask = mask.astype(jnp.float32)
+    z = z.astype(jnp.float32)
+    total = jnp.float32(0.0)
+    count = jnp.float32(0.0)
+    for delta in range(1, min(k, T - 1) + 1):
+        w = 1.0 if weights is None else weights[delta - 1]
+        diff = z[:, delta:] - z[:, :-delta]
+        pair = mask[:, delta:] * mask[:, :-delta]
+        total = total + w * jnp.sum(jnp.sum(jnp.square(diff), -1) * pair)
+        count = count + jnp.sum(pair)
+    return total / jnp.maximum(count, 1.0)
+
+
+def laplacian_loss(z, *, k=5, mask=None):
+    """L_Lap (Eq. 14) — alias with the paper's name."""
+    return dirichlet_energy(z, k=k, mask=mask)
+
+
+# ---------------------------------------------------------------------------
+# Dense-graph utilities (validation / theorem checks — numpy-scale)
+# ---------------------------------------------------------------------------
+
+def temporal_adjacency(T, k=5, mask=None):
+    """Dense (T, T) adjacency of the temporal k-window graph."""
+    idx = np.arange(T)
+    A = (np.abs(idx[:, None] - idx[None, :]) <= k) & (idx[:, None] != idx[None, :])
+    A = A.astype(np.float64)
+    if mask is not None:
+        m = np.asarray(mask, np.float64)
+        A = A * m[:, None] * m[None, :]
+    return A
+
+
+def graph_laplacian(A):
+    return np.diag(A.sum(1)) - A
+
+
+def spectral_gap(A):
+    """λ₂ of the Laplacian (second-smallest eigenvalue)."""
+    L = graph_laplacian(A)
+    ev = np.linalg.eigvalsh(L)
+    return float(ev[1])
+
+
+def dirichlet_energy_dense(z, A):
+    """Tr(ZᵀLZ)/|E| against an explicit adjacency (oracle for tests)."""
+    z = np.asarray(z, np.float64)
+    L = graph_laplacian(A)
+    e = float(np.trace(z.T @ L @ z))
+    n_edges = A.sum()  # directed count = 2|E|; energy double-counts too
+    return e / max(n_edges / 1.0, 1.0) * (1.0 if n_edges else 0.0)
+
+
+def neighbor_average(z, A, t):
+    """ẑ_t = weighted neighbour average (Theorem 3.2's reconstruction)."""
+    w = A[t]
+    deg = w.sum()
+    return (w @ z) / max(deg, 1e-12)
+
+
+def interpolation_error_bound(z, A, t):
+    """RHS of Eq. 5: 2·α·|E| / (λ₂·|N(t)|) with α = Tr(ZᵀLZ)/|E|."""
+    z = np.asarray(z, np.float64)
+    L = graph_laplacian(A)
+    tr = float(np.trace(z.T @ L @ z)) / 2.0  # undirected total energy
+    n_edges = A.sum() / 2.0
+    alpha = tr / max(n_edges, 1e-12)
+    lam2 = spectral_gap(A)
+    deg = A[t].sum()
+    return 2.0 * alpha * n_edges / max(lam2 * deg, 1e-12)

@@ -1,0 +1,164 @@
+"""PPO for the Uncertainty-Guided Adaptive Splitter (paper §4.2.3).
+
+Pure-JAX PPO (clipped objective, GAE) with the paper's lightweight
+policy: a two-layer MLP whose first layer is *shared* between the policy
+and value heads.  Trained offline on simulator traces (core/env.py) across
+platforms/network profiles, deployed label-free (state-only).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PPOCfg:
+    hidden: int = 64
+    lr: float = 3e-4
+    gamma: float = 0.99
+    lam: float = 0.95
+    clip: float = 0.2
+    epochs: int = 4
+    minibatch: int = 256
+    steps_per_iter: int = 2048
+    iters: int = 40
+    ent_coef: float = 0.01
+    vf_coef: float = 0.5
+    seed: int = 0
+
+
+def init_policy(key, obs_dim, n_actions, hidden=64):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = lambda k, shp: (1.0 / np.sqrt(shp[0])) * jax.random.normal(k, shp)
+    return {
+        "w1": s(k1, (obs_dim, hidden)), "b1": jnp.zeros((hidden,)),
+        "wp": 0.01 * s(k2, (hidden, n_actions)), "bp": jnp.zeros((n_actions,)),
+        "wv": s(k3, (hidden, 1)), "bv": jnp.zeros((1,)),
+    }
+
+
+def policy_apply(params, obs):
+    h = jnp.tanh(obs @ params["w1"] + params["b1"])   # shared first layer
+    logits = h @ params["wp"] + params["bp"]
+    value = (h @ params["wv"] + params["bv"])[..., 0]
+    return logits, value
+
+
+@jax.jit
+def _act(params, obs, key):
+    logits, value = policy_apply(params, obs)
+    a = jax.random.categorical(key, logits)
+    logp = jax.nn.log_softmax(logits)[a]
+    return a, logp, value
+
+
+def greedy_action(params, obs):
+    logits, _ = policy_apply(params, jnp.asarray(obs, jnp.float32))
+    return int(jnp.argmax(logits))
+
+
+def gae(rewards, values, dones, last_value, gamma, lam):
+    T = len(rewards)
+    adv = np.zeros(T, np.float32)
+    last = 0.0
+    next_v = last_value
+    for t in reversed(range(T)):
+        nonterm = 1.0 - dones[t]
+        delta = rewards[t] + gamma * next_v * nonterm - values[t]
+        last = delta + gamma * lam * nonterm * last
+        adv[t] = last
+        next_v = values[t]
+    return adv, adv + values
+
+
+@partial(jax.jit, static_argnames=("clip", "ent_coef", "vf_coef", "lr"))
+def _update(params, opt_state, batch, *, clip, ent_coef, vf_coef, lr):
+    def loss_fn(p):
+        logits, value = policy_apply(p, batch["obs"])
+        logp_all = jax.nn.log_softmax(logits)
+        logp = jnp.take_along_axis(logp_all, batch["act"][:, None], 1)[:, 0]
+        ratio = jnp.exp(logp - batch["logp"])
+        adv = batch["adv"]
+        adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+        pg = -jnp.mean(jnp.minimum(
+            ratio * adv, jnp.clip(ratio, 1 - clip, 1 + clip) * adv))
+        vf = jnp.mean(jnp.square(value - batch["ret"]))
+        ent = -jnp.mean(jnp.sum(jnp.exp(logp_all) * logp_all, -1))
+        return pg + vf_coef * vf - ent_coef * ent, (pg, vf, ent)
+
+    (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    # inline Adam
+    m, v, step = opt_state
+    step = step + 1
+    m = jax.tree.map(lambda a, g: 0.9 * a + 0.1 * g, m, grads)
+    v = jax.tree.map(lambda a, g: 0.999 * a + 0.001 * g * g, v, grads)
+    mh = jax.tree.map(lambda a: a / (1 - 0.9 ** step), m)
+    vh = jax.tree.map(lambda a: a / (1 - 0.999 ** step), v)
+    params = jax.tree.map(
+        lambda p, a, b: p - lr * a / (jnp.sqrt(b) + 1e-8), params, mh, vh)
+    return params, (m, v, step), loss
+
+
+def train_ppo(env_factory, n_actions, cfg: PPOCfg = PPOCfg(), *,
+              obs_dim=3, verbose=False):
+    """env_factory() -> fresh env (cycled across profiles by the caller)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    key, k0 = jax.random.split(key)
+    params = init_policy(k0, obs_dim, n_actions, cfg.hidden)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    opt_state = (zeros, jax.tree.map(jnp.zeros_like, params), jnp.int32(0))
+    env = env_factory()
+    obs = env.reset()
+    history = []
+    rng = np.random.default_rng(cfg.seed)
+
+    for it in range(cfg.iters):
+        T = cfg.steps_per_iter
+        buf = {k: np.zeros((T,) + s, np.float32) for k, s in
+               [("obs", (obs_dim,)), ("logp", ()), ("adv", ()), ("ret", ())]}
+        buf["act"] = np.zeros((T,), np.int32)
+        rewards = np.zeros(T, np.float32)
+        values = np.zeros(T, np.float32)
+        dones = np.zeros(T, np.float32)
+        ep_rews = []
+        ep_acc = 0.0
+        for t in range(T):
+            key, ka = jax.random.split(key)
+            a, logp, v = _act(params, jnp.asarray(obs), ka)
+            a = int(a)
+            buf["obs"][t] = obs
+            buf["act"][t] = a
+            buf["logp"][t] = float(logp)
+            values[t] = float(v)
+            obs, r, done, info = env.step(a)
+            rewards[t] = r
+            ep_acc += r
+            dones[t] = float(done)
+            if done:
+                ep_rews.append(ep_acc)
+                ep_acc = 0.0
+                env = env_factory()
+                obs = env.reset(seed=int(rng.integers(1 << 31)))
+        _, last_v = policy_apply(params, jnp.asarray(obs))
+        adv, ret = gae(rewards, values, dones, float(last_v),
+                       cfg.gamma, cfg.lam)
+        buf["adv"], buf["ret"] = adv, ret
+
+        idx = np.arange(T)
+        for _ in range(cfg.epochs):
+            rng.shuffle(idx)
+            for s in range(0, T, cfg.minibatch):
+                mb = idx[s:s + cfg.minibatch]
+                batch = {k: jnp.asarray(v[mb]) for k, v in buf.items()}
+                params, opt_state, loss = _update(
+                    params, opt_state, batch, clip=cfg.clip,
+                    ent_coef=cfg.ent_coef, vf_coef=cfg.vf_coef, lr=cfg.lr)
+        mean_rew = float(np.mean(ep_rews)) if ep_rews else float(rewards.sum())
+        history.append(mean_rew)
+        if verbose:
+            print(f"[ppo] iter {it:3d}  mean episode reward {mean_rew:9.2f}")
+    return params, history

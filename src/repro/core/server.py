@@ -1,0 +1,105 @@
+"""Server Refiner (paper §4.3): temporal buffer with gap tolerance +
+hybrid-loss refinement over the buffered manifold.
+
+The buffer is a ring keyed by absolute frame index (window W=100 ≈ 1 s of
+context).  Frames dropped by the splitter / network leave gaps; the
+snapshot exposes a validity mask that the Laplacian term uses to "stitch"
+across outages (Fig. 5) instead of hallucinating interpolations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hybrid import HybridCfg, hybrid_loss
+
+
+class TemporalBuffer:
+    def __init__(self, window=100, dim=128):
+        self.window = window
+        self.dim = dim
+        self.z = np.zeros((window, dim), np.float32)
+        # sentinel far below any reachable negative window index
+        self.t = np.full((window,), -(1 << 60), np.int64)
+        self.label = np.full((window,), -1, np.int64)
+        self.newest = -1
+
+    def insert(self, t, z, label=-1):
+        slot = t % self.window
+        self.z[slot] = np.asarray(z, np.float32)
+        self.t[slot] = t
+        self.label[slot] = label
+        self.newest = max(self.newest, t)
+
+    def snapshot(self):
+        """-> (z (W, d), mask (W,), labels (W,)) in temporal order, where
+        mask=0 marks gaps (never filled or expired)."""
+        if self.newest < 0:
+            return (np.zeros((self.window, self.dim), np.float32),
+                    np.zeros((self.window,), np.float32),
+                    np.full((self.window,), -1, np.int64))
+        lo = self.newest - self.window + 1
+        order = np.arange(lo, self.newest + 1)
+        slots = order % self.window
+        valid = (self.t[slots] == order)
+        z = np.where(valid[:, None], self.z[slots], 0.0).astype(np.float32)
+        labels = np.where(valid, self.label[slots], -1)
+        return z, valid.astype(np.float32), labels
+
+    @property
+    def fill_fraction(self):
+        _, m, _ = self.snapshot()
+        return float(m.mean())
+
+
+@dataclass
+class RefinerState:
+    params: dict
+    opt_state: tuple
+    step: int = 0
+
+
+class ServerRefiner:
+    """Optimizes L_server = L_task + λ₁ L_SW + λ₂ L_Lap over buffer
+    snapshots.  ``head_apply(params, z) -> logits`` is the task head; when
+    labels are absent, L_task falls back to buffer InfoNCE (paper §4.3.2).
+    """
+
+    def __init__(self, head_init, head_apply, *, cfg: HybridCfg = HybridCfg(),
+                 lr=1e-2, seed=0):
+        from repro.optim.sgd import sgd_init, sgd_update
+        self.cfg = cfg
+        self.head_apply = head_apply
+        key = jax.random.PRNGKey(seed)
+        params = head_init(key)
+        self._sgd_update = sgd_update
+        self.state = RefinerState(params, sgd_init(params), 0)
+        self.lr = lr
+
+        def loss_fn(params, key, z, mask, labels):
+            logits = head_apply(params, z)
+            have_labels = labels >= 0
+            lab = jnp.maximum(labels, 0)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+            ce = -jnp.take_along_axis(logp, lab[:, None], 1)[:, 0]
+            w = mask * have_labels.astype(jnp.float32)
+            task = jnp.sum(ce * w) / jnp.maximum(jnp.sum(w), 1.0)
+            reg, parts = hybrid_loss(key, z, cfg, mask=mask, variant="hybrid")
+            # hybrid_loss's task term is 0 here (no pairs); add CE on top
+            return task + reg, {"task": task, **parts}
+
+        self._grad = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+
+    def refine(self, key, buffer: TemporalBuffer):
+        z, mask, labels = buffer.snapshot()
+        (loss, parts), grads = self._grad(
+            self.state.params, key, jnp.asarray(z), jnp.asarray(mask),
+            jnp.asarray(labels))
+        params, opt_state = self._sgd_update(
+            self.state.params, grads, self.state.opt_state, lr=self.lr,
+            momentum=0.9)
+        self.state = RefinerState(params, opt_state, self.state.step + 1)
+        return float(loss), {k: float(v) for k, v in parts.items()}

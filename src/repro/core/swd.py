@@ -1,0 +1,77 @@
+"""Diversity metric: Sliced-Wasserstein distance to the uniform
+hypersphere prior (paper §3.1, Eq. 3).
+
+Projects embeddings onto M random directions; the per-slice 1-D
+Wasserstein-2 distance has the closed form  ∫|F_p^{-1} - F_q^{-1}|² dτ,
+computed by sorting.  The uniform-on-S^{d-1} prior's slice quantiles are
+drawn empirically (standard practice; exact inverse-CDF has no closed
+form for general d).
+
+Minimizing L_SW drives H(p_θ(z)) up — the anti-collapse "repulsive force"
+that substitutes for large negative batches (Theorem 3.1).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def random_directions(key, n_dirs, dim):
+    w = jax.random.normal(key, (n_dirs, dim), jnp.float32)
+    return w / jnp.linalg.norm(w, axis=-1, keepdims=True)
+
+
+def sphere_prior_samples(key, n, dim):
+    z = jax.random.normal(key, (n, dim), jnp.float32)
+    return z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-9)
+
+
+def diff_sort(x, axis=0):
+    """Differentiable sort: argsort (constant indices) + gather.  Same
+    subgradient as jnp.sort; works around this jaxlib's broken sort-JVP."""
+    idx = jnp.argsort(jax.lax.stop_gradient(x), axis=axis)
+    return jnp.take_along_axis(x, idx, axis=axis)
+
+
+def sliced_w2(x, y, dirs):
+    """Empirical SW₂² between point sets x (N,d), y (N,d) over `dirs` (M,d)."""
+    px = diff_sort(x.astype(jnp.float32) @ dirs.T, axis=0)   # (N, M)
+    py = diff_sort(y.astype(jnp.float32) @ dirs.T, axis=0)
+    return jnp.mean(jnp.square(px - py))
+
+
+def swd_to_uniform(key, z, *, n_dirs=50):
+    """L_SW(p_θ, U(S^{d-1})) for a batch of embeddings z: (N, d)."""
+    kd, kp = jax.random.split(key)
+    dirs = random_directions(kd, n_dirs, z.shape[-1])
+    prior = sphere_prior_samples(kp, z.shape[0], z.shape[-1])
+    return sliced_w2(z, prior, dirs)
+
+
+def swd_loss(key, z, *, n_dirs=50, axis_name=None):
+    """Differentiable-through-sort SWD loss.
+
+    With ``axis_name`` this is the *sharded* estimator: each data shard
+    computes its local SWD against an equal-size prior draw and the results
+    are pmean'd — an unbiased estimate of the global SWD for iid shards
+    (DESIGN.md §2)."""
+    val = swd_to_uniform(key, z, n_dirs=n_dirs)
+    if axis_name is not None:
+        val = jax.lax.pmean(val, axis_name)
+    return val
+
+
+def wasserstein1_1d(x, y):
+    """Exact 1-D W₁ between equal-size samples (for tests/validation)."""
+    return jnp.mean(jnp.abs(jnp.sort(x) - jnp.sort(y)))
+
+
+def mmd_rbf(x, y, *, sigma=1.0):
+    """Gaussian-kernel MMD² — the weaker baseline metric the paper compares
+    against in §3.3 (r = 0.82 vs SWD's r = −0.96)."""
+    def k(a, b):
+        d2 = jnp.sum(jnp.square(a[:, None] - b[None]), -1)
+        return jnp.exp(-d2 / (2 * sigma * sigma))
+    return jnp.mean(k(x, x)) + jnp.mean(k(y, y)) - 2 * jnp.mean(k(x, y))

@@ -1,0 +1,246 @@
+"""Logical-axis sharding rules + context.
+
+Model code annotates params and activations with *logical* axis names
+("batch", "heads", "mlp", ...).  The launcher installs a rule set mapping
+logical names to mesh axes; outside any context (unit tests, smoke runs on
+one device) every annotation is a no-op.
+
+Params and activations use separate rule dicts because the same logical
+name ("embed") is FSDP-sharded on params but replicated on activations.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX = threading.local()
+
+
+class AxisRules:
+    """A mapping logical-axis-name -> mesh axis (str | tuple | None)."""
+
+    def __init__(self, param_rules: dict, act_rules: dict, mesh: Mesh | None):
+        self.param_rules = dict(param_rules)
+        self.act_rules = dict(act_rules)
+        self.mesh = mesh
+
+    def spec(self, axes: tuple, *, kind: str = "act") -> P:
+        rules = self.param_rules if kind == "param" else self.act_rules
+        return P(*[rules.get(a) for a in axes])
+
+
+def current_rules() -> AxisRules | None:
+    return getattr(_CTX, "rules", None)
+
+
+@contextmanager
+def axis_rules(rules: AxisRules):
+    prev = getattr(_CTX, "rules", None)
+    _CTX.rules = rules
+    try:
+        yield rules
+    finally:
+        _CTX.rules = prev
+
+
+def logical_spec(axes: tuple, *, kind: str = "act") -> P:
+    rules = current_rules()
+    if rules is None:
+        return P()
+    return rules.spec(axes, kind=kind)
+
+
+def shard(x, *axes):
+    """Constrain activation ``x`` to the sharding implied by logical axes.
+
+    No-op when no rules are installed (single-device tests) so model code can
+    annotate unconditionally.
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.spec(axes, kind="act")
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def param_sharding(axes_tree, mesh: Mesh | None = None):
+    """Tree of NamedShardings for a params tree of logical-axes tuples."""
+    rules = current_rules()
+    if rules is None:
+        return None
+    mesh = mesh or rules.mesh
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, rules.spec(axes, kind="param")),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def param_pspecs(axes_tree):
+    """Tree of PartitionSpecs for a params tree of logical-axes tuples."""
+    rules = current_rules()
+    if rules is None:
+        return jax.tree.map(
+            lambda axes: P(), axes_tree, is_leaf=lambda x: isinstance(x, tuple)
+        )
+    return jax.tree.map(
+        lambda axes: rules.spec(axes, kind="param"),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Standard rule sets.
+# ---------------------------------------------------------------------------
+
+def make_rules(
+    mesh: Mesh,
+    *,
+    fsdp: bool = False,
+    seq_sharded: bool = False,
+) -> AxisRules:
+    """Build the standard DP/TP(/EP/SP) rules for a ('pod'?,'data','model') mesh.
+
+    - batch      -> ('pod','data')  (DP; 'pod' folded in when present)
+    - heads/mlp/vocab/experts -> 'model'  (TP / EP)
+    - embed      -> 'data' on *params* when fsdp=True (FSDP weight shard)
+    - seq        -> 'data' on activations when seq_sharded (SP, used by the
+                    500k-context cells where batch==1)
+    """
+    axis_names = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in axis_names)
+    batch = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
+
+    common = {
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_mlp": None,
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "ssm_group": None,
+        "conv": None,
+        "layers": None,
+        "stack": None,
+        "proj": None,
+        "classes": None,
+    }
+    param_rules = dict(common)
+    param_rules["embed"] = "data" if fsdp else None
+    param_rules["batch"] = None
+    param_rules["seq"] = None
+
+    act_rules = dict(common)
+    act_rules["embed"] = None
+    act_rules["batch"] = batch
+    act_rules["seq"] = "data" if seq_sharded else None
+    # activations never sharded along these on top of batch:
+    act_rules["experts"] = "model"
+
+    return AxisRules(param_rules, act_rules, mesh)
+
+
+def rules_for(mesh: Mesh, cfg, *, batch=None, kind="train",
+              fsdp=False) -> AxisRules:
+    """Arch- and shape-aware rules for the production mesh.
+
+    TP strategy per tensor class (DESIGN.md / EXPERIMENTS.md §Dry-run):
+    - q/kv heads shard over 'model' when the head count divides it
+      (column-parallel); otherwise the projection falls back to
+      *row-parallel* (contract dim over 'model', psum'd output) so the
+      matmul FLOPs still shard even when heads don't (arctic/llava 56H,
+      gemma2 8H on a 16-way axis).
+    - mlp/vocab/experts always shard over 'model'.
+    - fsdp=True additionally shards the weights' embed dim over 'data'
+      (gathered per layer inside the scan) — required for >=15B archs.
+    - decode KV caches shard kv_heads over 'model' when divisible, else
+      the *sequence* dim ("kv_seq") — flash-decoding style.
+    - batch shards over ('pod','data') when divisible; the 500k-context
+      batch=1 cells leave batch unsharded and shard cache seq over 'data'.
+    """
+    ms = mesh.shape["model"]
+    ds = mesh.shape.get("data", 1)
+    axis_names = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in axis_names)
+    dp = 1
+    for a in batch_axes:
+        dp *= mesh.shape[a]
+    batch_spec = (batch_axes if len(batch_axes) > 1 else batch_axes[0]) \
+        if (batch is None or batch % dp == 0) and batch != 1 else None
+
+    heads_ok = bool(getattr(cfg, "n_heads", 0)) and cfg.n_heads % ms == 0
+    kv_ok = bool(getattr(cfg, "n_kv_heads", 0)) and cfg.n_kv_heads % ms == 0
+    hd = getattr(cfg, "head_dim", 0) or 0
+    hd_ok = hd % ds == 0 if hd else False
+    small_batch = batch == 1
+
+    param_rules = {
+        # attention.  (A replicated-k/v variant for GQA with kv < TP was
+        # explored — it cuts the collective term 2.4x but doubles the
+        # memory/compute terms via replicated score tensors; net MFU
+        # regression, so row-parallel k/v stays the default.  See
+        # EXPERIMENTS.md §Perf iterations 2-3.)
+        "heads": "model" if heads_ok else None,
+        "kv_heads": "model" if kv_ok else None,
+        "q_in": (("data" if fsdp else None) if heads_ok else "model"),
+        "kv_in": (("data" if fsdp else None) if kv_ok else "model"),
+        "q_hd": ("data" if (fsdp and not heads_ok and hd_ok) else None),
+        "kv_hd": ("data" if (fsdp and not kv_ok and hd_ok) else None),
+        "o_hd": None if heads_ok else "model",
+        # mlp / embeddings / moe / ssm
+        "embed": "data" if fsdp else None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_mlp": None,
+        "router": None,
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "ssm_group": None,
+        "conv": None,
+        "head_dim": None,
+        "layers": None,
+        "batch": None,
+        "seq": None,
+        "kv_seq": None,
+        "classes": None,
+        "stack": "pod" if "pod" in axis_names else None,
+    }
+    act_rules = {
+        "batch": batch_spec,
+        "seq": ("data" if small_batch and kind != "train" else None),
+        "embed": None,
+        "heads": "model" if heads_ok else None,
+        "kv_heads": "model" if kv_ok else None,
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "layers": None,
+        "conv": None,
+        "kv_seq": ("model" if not kv_ok else
+                   ("data" if small_batch else None)),
+        "classes": None,
+    }
+    return AxisRules(param_rules, act_rules, mesh)
+
+
+def mesh_axis_size(name: str) -> int:
+    rules = current_rules()
+    if rules is None or rules.mesh is None or name not in rules.mesh.axis_names:
+        return 1
+    return rules.mesh.shape[name]
+
+
+def get_mesh() -> Mesh | None:
+    rules = current_rules()
+    return None if rules is None else rules.mesh

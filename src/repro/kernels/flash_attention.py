@@ -1,0 +1,243 @@
+"""Flash attention (Pallas, TPU target) with a recompute backward.
+
+This is the designated fix for the memory-bound attention cells in
+EXPERIMENTS.md §Perf iteration 1: the pure-jnp chunked-softmax path must
+stack per-chunk probabilities (scan-carry saves) for the backward, so
+score tiles hit HBM; a fused kernel keeps them in VMEM and the
+custom-vjp backward *recomputes* them from the saved (out, m+log l) row
+statistics — O(S) residuals instead of O(S²).
+
+Forward grid: (B·H, Q_tiles) with an inner fori over KV tiles (causal
+tiles skipped).  Backward: two passes — dq over (B·H, Q_tiles), dk/dv
+over (B·H, KV_tiles).  MHA layout (B, H, S, hd); GQA callers expand KV
+heads first (cheap — see models/attention.py).  Causal masking only
+(softcap/windows stay on the jnp path).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, scale, block_q,
+                block_k, seq_k, causal):
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale           # (bq, d)
+    m = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l = jnp.zeros((block_q,), jnp.float32)
+    acc = jnp.zeros((block_q, q.shape[-1]), jnp.float32)
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    n_kv = seq_k // block_k
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.dslice(j * block_k, block_k),
+                            slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(j * block_k, block_k),
+                            slice(None))).astype(jnp.float32)
+        s = q @ k.T                                      # (bq, bk)
+        if causal:
+            k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return m_new, l, acc
+
+    upper = n_kv if not causal else \
+        jnp.minimum(n_kv, (qi + 1) * block_q // block_k + 1)
+    m, l, acc = jax.lax.fori_loop(0, upper, body, (m, l, acc))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    lse_ref[...] = m + jnp.log(jnp.maximum(l, 1e-30))
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *,
+               scale, block_q, block_k, seq_k, causal):
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale
+    do = do_ref[...].astype(jnp.float32)
+    lse = lse_ref[...]
+    delta = delta_ref[...]
+    dq = jnp.zeros_like(q)
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+    n_kv = seq_k // block_k
+
+    def body(j, dq):
+        k = pl.load(k_ref, (pl.dslice(j * block_k, block_k),
+                            slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(j * block_k, block_k),
+                            slice(None))).astype(jnp.float32)
+        s = q @ k.T
+        if causal:
+            k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+            s = jnp.where(q_pos[:, None] >= k_pos[None, :], s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])                   # recomputed probs
+        dp = do @ v.T
+        ds = p * (dp - delta[:, None])
+        return dq + ds @ k
+
+    upper = n_kv if not causal else \
+        jnp.minimum(n_kv, (qi + 1) * block_q // block_k + 1)
+    dq = jax.lax.fori_loop(0, upper, body, dq)
+    dq_ref[...] = (dq * scale).astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref,
+                dv_ref, *, scale, block_q, block_k, seq_q, causal):
+    kj = pl.program_id(1)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    dk = jnp.zeros_like(k)
+    dv = jnp.zeros_like(v)
+    k_pos = kj * block_k + jax.lax.iota(jnp.int32, block_k)
+    n_q = seq_q // block_q
+
+    def body(i, carry):
+        dk, dv = carry
+        q = pl.load(q_ref, (pl.dslice(i * block_q, block_q),
+                            slice(None))).astype(jnp.float32) * scale
+        do = pl.load(do_ref, (pl.dslice(i * block_q, block_q),
+                              slice(None))).astype(jnp.float32)
+        lse = pl.load(lse_ref, (pl.dslice(i * block_q, block_q),))
+        delta = pl.load(delta_ref, (pl.dslice(i * block_q, block_q),))
+        s = q @ k.T
+        if causal:
+            q_pos = i * block_q + jax.lax.iota(jnp.int32, block_q)
+            s = jnp.where(q_pos[:, None] >= k_pos[None, :], s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dv = dv + p.T @ do
+        dp = do @ v.T
+        ds = p * (dp - delta[:, None])
+        dk = dk + (ds.T @ q)
+        return dk, dv
+
+    lower = 0 if not causal else kj * block_k // block_q
+    dk, dv = jax.lax.fori_loop(lower, n_q, body, (dk, dv))
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+def _flat(x):
+    B, H, S, d = x.shape
+    return x.reshape(B * H, S, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                    interpret=True):
+    """q, k, v: (B, H, S, hd) — returns (B, H, S, hd)."""
+    o, _ = _fwd(q, k, v, causal, block_q, block_k, interpret)
+    return o
+
+
+def _fwd(q, k, v, causal, block_q, block_k, interpret):
+    B, H, Sq, d = q.shape
+    Sk = k.shape[2]
+    scale = 1.0 / math.sqrt(d)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0
+    qf, kf, vf = _flat(q), _flat(k), _flat(v)
+    grid = (B * H, Sq // bq)
+    o, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=scale, block_q=bq, block_k=bk,
+                          seq_k=Sk, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((None, Sk, d), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((None, Sk, d), lambda h, i: (h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, bq, d), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((None, bq), lambda h, i: (h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Sq, d), q.dtype),
+            jax.ShapeDtypeStruct((B * H, Sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return o.reshape(B, H, Sq, d), lse
+
+
+def _fwd_rule(q, k, v, causal, block_q, block_k, interpret):
+    o, lse = _fwd(q, k, v, causal, block_q, block_k, interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _bwd_rule(causal, block_q, block_k, interpret, res, do):
+    q, k, v, o, lse = res
+    B, H, Sq, d = q.shape
+    Sk = k.shape[2]
+    scale = 1.0 / math.sqrt(d)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    qf, kf, vf = _flat(q), _flat(k), _flat(v)
+    dof, of = _flat(do), _flat(o)
+    delta = jnp.sum(dof.astype(jnp.float32) * of.astype(jnp.float32), -1)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, block_q=bq, block_k=bk,
+                          seq_k=Sk, causal=causal),
+        grid=(B * H, Sq // bq),
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((None, Sk, d), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((None, Sk, d), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((None, bq, d), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((None, bq), lambda h, i: (h, i)),
+            pl.BlockSpec((None, bq), lambda h, i: (h, i)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, d), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf, dof, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, block_q=bq, block_k=bk,
+                          seq_q=Sq, causal=causal),
+        grid=(B * H, Sk // bk),
+        in_specs=[
+            pl.BlockSpec((None, Sq, d), lambda h, j: (h, 0, 0)),
+            pl.BlockSpec((None, bk, d), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((None, bk, d), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((None, Sq, d), lambda h, j: (h, 0, 0)),
+            pl.BlockSpec((None, Sq), lambda h, j: (h, 0)),
+            pl.BlockSpec((None, Sq), lambda h, j: (h, 0)),
+        ],
+        out_specs=[pl.BlockSpec((None, bk, d), lambda h, j: (h, j, 0)),
+                   pl.BlockSpec((None, bk, d), lambda h, j: (h, j, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B * H, Sk, d), k.dtype),
+                   jax.ShapeDtypeStruct((B * H, Sk, d), v.dtype)],
+        interpret=interpret,
+    )(qf, kf, vf, dof, lse, delta)
+    rs = lambda x: x.reshape(B, H, -1, d)
+    return rs(dq), rs(dk), rs(dv)
+
+
+flash_attention.defvjp(_fwd_rule, _bwd_rule)
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """jnp oracle (B, H, S, d)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    if causal:
+        Sq, Sk = s.shape[-2:]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,73 @@
+"""Fused GMM posterior + entropy Pallas kernel — the "zero-cost
+uncertainty" hot path (paper Eq. 11, §4.2.2).
+
+Computes, for a block of embeddings z (Bb, d) against all C components:
+    log N(z; mu_c, diag var_c) + log pi_c  ->  softmax  ->  entropy
+in one VMEM-resident pass.  The Mahalanobis term is decomposed into three
+MXU matmuls:
+    maha = z² @ (1/var)ᵀ − 2 z @ (mu/var)ᵀ + Σ mu²/var
+so the (B, C) logit tile never round-trips to HBM, and mu/var (C×d, ≤64 KB
+at the paper's C=64, d=128) stay pinned in VMEM across the whole batch.
+
+Grid: (B // Bb,) — batch-parallel; C and d are kept whole per block (both
+MXU-aligned at the paper's sizes; pad otherwise via ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LOG2PI = 1.8378770664093453
+
+
+def _kernel(z_ref, mu_ref, var_ref, logpi_ref, resp_ref, ent_ref, *, d):
+    z = z_ref[...].astype(jnp.float32)            # (Bb, d)
+    mu = mu_ref[...].astype(jnp.float32)          # (C, d)
+    var = var_ref[...].astype(jnp.float32)        # (C, d)
+    logpi = logpi_ref[...].astype(jnp.float32)    # (C,)
+
+    inv = 1.0 / var                               # (C, d)
+    # maha(b,c) = z²·inv − 2 z·(mu*inv) + Σ mu²·inv     (two MXU matmuls)
+    t1 = jnp.dot(z * z, inv.T, preferred_element_type=jnp.float32)
+    t2 = jnp.dot(z, (mu * inv).T, preferred_element_type=jnp.float32)
+    t3 = jnp.sum(mu * mu * inv, axis=-1)          # (C,)
+    maha = t1 - 2.0 * t2 + t3[None, :]
+    logdet = jnp.sum(jnp.log(var), axis=-1)       # (C,)
+    lj = logpi[None, :] - 0.5 * (maha + logdet[None, :] + d * LOG2PI)
+
+    m = jnp.max(lj, axis=-1, keepdims=True)
+    e = jnp.exp(lj - m)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    logp = lj - m - jnp.log(s)
+    p = e / s
+    resp_ref[...] = p.astype(resp_ref.dtype)
+    ent_ref[...] = (-jnp.sum(p * logp, axis=-1)).astype(ent_ref.dtype)
+
+
+def gmm_posterior_pallas(z, mu, var, logpi, *, block_b=128, interpret=True):
+    B, d = z.shape
+    C = mu.shape[0]
+    assert B % block_b == 0, (B, block_b)
+    grid = (B // block_b,)
+    return pl.pallas_call(
+        functools.partial(_kernel, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((C, d), lambda i: (0, 0)),
+            pl.BlockSpec((C, d), lambda i: (0, 0)),
+            pl.BlockSpec((C,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, C), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, C), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(z, mu, var, logpi)

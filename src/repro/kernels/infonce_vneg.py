@@ -1,0 +1,78 @@
+"""Flash-style streaming-softmax InfoNCE over virtual negatives
+(paper Eq. 10) — the edge contrastive hot loop.
+
+Never materializes the (B, N_syn) logit matrix in HBM: the grid iterates
+(batch tile × negative tile) with the negative axis innermost; a running
+(m, l) online-logsumexp pair lives in VMEM scratch across the inner
+iterations (the same trick as flash attention's softmax).  The per-tile
+similarity z·z_synᵀ is a batched MXU matvec.
+
+Grid: (B/Bb, N/Nb), dimension order guarantees out/scratch blocks for a
+given batch tile stay resident while negatives stream.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_BIG = -1e30
+
+
+def _kernel(z_ref, zp_ref, zn_ref, loss_ref, m_ref, l_ref, *, tau, n_tiles):
+    j = pl.program_id(1)
+    z = z_ref[...].astype(jnp.float32)            # (Bb, d)
+    zn = zn_ref[...].astype(jnp.float32)          # (Bb, Nb, d)
+    s = jnp.einsum("bd,bnd->bn", z, zn) / tau     # (Bb, Nb)
+
+    @pl.when(j == 0)
+    def _init():
+        zp = zp_ref[...].astype(jnp.float32)
+        pos = jnp.sum(z * zp, axis=-1) / tau      # (Bb,)
+        m_ref[...] = pos                          # running max seeded w/ pos
+        l_ref[...] = jnp.ones_like(pos)           # exp(pos - m) = 1
+        loss_ref[...] = pos                       # stash pos in the output
+
+    m = m_ref[...]
+    l = l_ref[...]
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    l = l * jnp.exp(m - m_new) + jnp.sum(jnp.exp(s - m_new[:, None]), -1)
+    m_ref[...] = m_new
+    l_ref[...] = l
+
+    @pl.when(j == n_tiles - 1)
+    def _fin():
+        pos = loss_ref[...]
+        # logsumexp = m + log l ;  loss = lse - pos
+        loss_ref[...] = m_ref[...] + jnp.log(l_ref[...]) - pos
+
+
+def infonce_vneg_pallas(z, z_pos, z_neg, *, tau=0.1, block_b=128,
+                        block_n=256, interpret=True):
+    """z, z_pos: (B, d) l2-normalized; z_neg: (B, N, d). -> (B,) loss."""
+    B, d = z.shape
+    N = z_neg.shape[1]
+    assert B % block_b == 0 and N % block_n == 0, (B, N)
+    grid = (B // block_b, N // block_n)
+    return pl.pallas_call(
+        functools.partial(_kernel, tau=tau, n_tiles=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, block_n, d), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.float32),   # loss
+            jax.ShapeDtypeStruct((B,), jnp.float32),   # m (discarded)
+            jax.ShapeDtypeStruct((B,), jnp.float32),   # l (discarded)
+        ],
+        interpret=interpret,
+    )(z, z_pos, z_neg)[0]

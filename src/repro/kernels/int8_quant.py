@@ -1,0 +1,92 @@
+"""Asymmetric INT8 quantization Pallas kernels — the split-link wire
+format (paper §5 "Quantization Implementation", <0.5 ms class).
+
+Two-pass: (1) blockwise min/max reduction, (2) fused affine quantize with
+the agreed per-tensor scale/zero.  Both passes stream 1-D tiles through
+VMEM; pass 2 writes int8 — a 4x HBM-write saving vs fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _minmax_kernel(x_ref, lo_ref, hi_ref):
+    x = x_ref[...].astype(jnp.float32)
+    lo_ref[...] = jnp.min(x, keepdims=True).reshape(lo_ref.shape)
+    hi_ref[...] = jnp.max(x, keepdims=True).reshape(hi_ref.shape)
+
+
+def _quant_kernel(x_ref, sz_ref, q_ref):
+    x = x_ref[...].astype(jnp.float32)
+    scale = sz_ref[0]
+    zero = sz_ref[1]
+    q = jnp.clip(jnp.round(x / scale + zero), -128, 127)
+    q_ref[...] = q.astype(jnp.int8)
+
+
+def _dequant_kernel(q_ref, sz_ref, x_ref):
+    q = q_ref[...].astype(jnp.float32)
+    x_ref[...] = ((q - sz_ref[1]) * sz_ref[0]).astype(x_ref.dtype)
+
+
+def int8_quantize_pallas(x, *, block=4096, interpret=True):
+    """-> (q int8 flat-shaped-like-x, scale (), zero ())."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.full((pad,), flat[0], flat.dtype)])
+    g = flat.shape[0] // block
+    lo, hi = pl.pallas_call(
+        _minmax_kernel,
+        grid=(g,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((1,), lambda i: (i,)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((g,), jnp.float32),
+                   jax.ShapeDtypeStruct((g,), jnp.float32)],
+        interpret=interpret,
+    )(flat)
+    lo = jnp.min(lo)
+    hi = jnp.max(hi)
+    scale = jnp.maximum((hi - lo) / 255.0, 1e-12)
+    zero = -128.0 - lo / scale
+    sz = jnp.stack([scale, zero])
+    q = pl.pallas_call(
+        _quant_kernel,
+        grid=(g,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((2,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((g * block,), jnp.int8),
+        interpret=interpret,
+    )(flat, sz)
+    q = q[:n].reshape(shape)
+    return q, scale, zero
+
+
+def int8_dequantize_pallas(q, scale, zero, *, block=4096, dtype=jnp.float32,
+                           interpret=True):
+    shape = q.shape
+    flat = q.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    g = flat.shape[0] // block
+    sz = jnp.stack([scale, zero])
+    x = pl.pallas_call(
+        _dequant_kernel,
+        grid=(g,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((2,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((g * block,), dtype),
+        interpret=interpret,
+    )(flat, sz)
+    return x[:n].reshape(shape)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LOG2PI = 1.8378770664093453
+
+
+def gmm_posterior_ref(z, mu, var, logpi):
+    """-> (responsibilities (B, C), entropy (B,))."""
+    z = z.astype(jnp.float32)
+    mu = mu.astype(jnp.float32)
+    var = var.astype(jnp.float32)
+    d = z.shape[-1]
+    maha = jnp.sum(jnp.square(z[:, None, :] - mu[None]) / var[None], -1)
+    logdet = jnp.sum(jnp.log(var), -1)
+    lj = logpi[None] - 0.5 * (maha + logdet + d * LOG2PI)
+    logp = lj - jax.nn.logsumexp(lj, axis=-1, keepdims=True)
+    p = jnp.exp(logp)
+    ent = -jnp.sum(p * logp, -1)
+    return p, ent
+
+
+def swd_ref(x, prior, dirs):
+    """Sliced-W2² between x and prior point sets (both (N, d)) over dirs."""
+    px = jnp.sort(x.astype(jnp.float32) @ dirs.T.astype(jnp.float32), axis=0)
+    py = jnp.sort(prior.astype(jnp.float32) @ dirs.T.astype(jnp.float32),
+                  axis=0)
+    return jnp.mean(jnp.square(px - py))
+
+
+def infonce_vneg_ref(z, z_pos, z_neg, tau):
+    """Streaming InfoNCE (Eq. 10); z/z_pos (B, d), z_neg (B, N, d).
+    All inputs assumed l2-normalized. -> per-sample loss (B,)."""
+    z = z.astype(jnp.float32)
+    pos = jnp.sum(z * z_pos.astype(jnp.float32), -1) / tau
+    negs = jnp.einsum("bd,bnd->bn", z, z_neg.astype(jnp.float32)) / tau
+    logits = jnp.concatenate([pos[:, None], negs], 1)
+    return jax.nn.logsumexp(logits, axis=1) - pos
+
+
+def int8_quantize_ref(x):
+    """-> (q int8, scale, zero) — asymmetric per-tensor (quant/int8.py)."""
+    x = x.astype(jnp.float32)
+    lo, hi = jnp.min(x), jnp.max(x)
+    scale = jnp.maximum((hi - lo) / 255.0, 1e-12)
+    zero = -128.0 - lo / scale
+    q = jnp.clip(jnp.round(x / scale + zero), -128, 127).astype(jnp.int8)
+    return q, scale, zero
+
+
+def laplacian_energy_ref(z, mask, k):
+    """Temporal k-window Dirichlet energy (core/laplacian.py semantics),
+    returning (total, count) so callers can combine partials."""
+    z = z.astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    T = z.shape[0]
+    total = jnp.float32(0.0)
+    count = jnp.float32(0.0)
+    for delta in range(1, min(k, T - 1) + 1):
+        diff = z[delta:] - z[:-delta]
+        pair = m[delta:] * m[:-delta]
+        total += jnp.sum(jnp.sum(jnp.square(diff), -1) * pair)
+        count += jnp.sum(pair)
+    return total, count

@@ -1,0 +1,289 @@
+# The multi-pod dry-run needs 512 placeholder devices; jax locks the device
+# count at first init, so this MUST precede every other import.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+    + " " + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, prove it fits (memory_analysis), and extract the
+roofline terms (cost_analysis + collective-bytes from the partitioned HLO).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  python -m repro.launch.dryrun --all                # every cell, 16x16
+  python -m repro.launch.dryrun --all --multi-pod    # every cell, 2x16x16
+"""
+import argparse
+import json
+import time
+import traceback
+from dataclasses import replace
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, cells, get_config, input_specs
+from repro.distributed import sharding as shd
+from repro.launch import hlo_analysis, roofline
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.optim import get_optimizer
+from repro.runtime.trainer import TrainCfg, make_train_step
+
+# per-arch large-scale policy: optimizer / FSDP / microbatching.
+# microbatch counts were hillclimbed (EXPERIMENTS.md §Perf): FSDP weight
+# regathers scale linearly with microbatch count, so fewer+larger
+# microbatches win as long as the MoE all-to-all buffers stay in HBM
+# (kimi: mb 8 -> 2 lifted the MFU bound 2.5% -> 5.8%).
+POLICY = {
+    "kimi-k2-1t-a32b": dict(optimizer="adafactor", fsdp=True, microbatches=2),
+    "arctic-480b": dict(optimizer="adafactor", fsdp=True, microbatches=2),
+    "llava-next-34b": dict(optimizer="adamw", fsdp=True, microbatches=2),
+    "nemotron-4-15b": dict(optimizer="adamw", fsdp=True, microbatches=2),
+}
+DEFAULT_POLICY = dict(optimizer="adamw", fsdp=False, microbatches=1)
+
+
+def policy_for(arch):
+    return {**DEFAULT_POLICY, **POLICY.get(arch, {})}
+
+
+def _opt_axes(optname, params_axes):
+    is_ax = lambda x: isinstance(x, tuple)
+    if optname == "adamw":
+        return {"m": params_axes, "v": params_axes, "step": ()}
+    if optname == "sgd":
+        return (params_axes,)
+    if optname == "adafactor":
+        def leaf(a):
+            if len(a) >= 2:
+                return {"vr": a[:-1], "vc": a[:-2] + a[-1:]}
+            return {"v": a}
+        return {"stats": jax.tree.map(leaf, params_axes, is_leaf=is_ax),
+                "step": ()}
+    raise ValueError(optname)
+
+
+def _shardings(axes_tree, rules, mesh):
+    is_ax = lambda x: isinstance(x, tuple)
+    return jax.tree.map(
+        lambda a: NamedSharding(mesh, rules.spec(a, kind="param")),
+        axes_tree, is_leaf=is_ax)
+
+
+def _act_shardings(axes_tree, rules, mesh):
+    is_ax = lambda x: isinstance(x, tuple)
+    return jax.tree.map(
+        lambda a: NamedSharding(mesh, rules.spec(a, kind="act")),
+        axes_tree, is_leaf=is_ax)
+
+
+def eval_params(cfg, key):
+    box = {}
+
+    def f(k):
+        p, a = lm.init_lm(cfg, k)
+        box["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(f, key)
+    return shapes, box["axes"]
+
+
+def build_and_compile(arch, shape_name, mesh, *, dtype="bfloat16",
+                      overrides=None, want_hlo=False):
+    """Lower + compile one cell. Returns the result record."""
+    cfg = get_config(arch)
+    cfg = replace(cfg, dtype=dtype, param_dtype=dtype)
+    if overrides:
+        cfg = replace(cfg, **{k: v for k, v in overrides.items()
+                              if hasattr(cfg, k)})
+    shape = SHAPES[shape_name]
+    pol = policy_for(arch)
+    rules = shd.rules_for(mesh, cfg, batch=shape.global_batch,
+                          kind=shape.kind, fsdp=pol["fsdp"])
+    key = jax.random.PRNGKey(0)
+    t0 = time.time()
+
+    with shd.axis_rules(rules), mesh:
+        params_shapes, params_axes = eval_params(cfg, key)
+        p_shard = _shardings(params_axes, rules, mesh)
+        params_sds = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            params_shapes, p_shard)
+        data = input_specs(cfg, shape, dtype=dtype)
+        data_axes = {
+            "tokens": ("batch", "seq"), "labels": ("batch", "seq"),
+            "embeds": ("batch", "seq", "embed"),
+        }
+        batch_sds = {
+            k: jax.ShapeDtypeStruct(
+                v.shape, v.dtype,
+                sharding=NamedSharding(
+                    mesh, rules.spec(data_axes[k][: len(v.shape)],
+                                     kind="act")))
+            for k, v in data.items()}
+
+        if shape.kind == "train":
+            tcfg = TrainCfg(optimizer=pol["optimizer"],
+                            microbatches=pol["microbatches"],
+                            lr=1e-4, total_steps=10_000, warmup=100)
+            opt_init, _ = get_optimizer(pol["optimizer"])
+            opt_shapes = jax.eval_shape(opt_init, params_shapes)
+            opt_axes = _opt_axes(pol["optimizer"], params_axes)
+            o_shard = _shardings(opt_axes, rules, mesh)
+            opt_sds = jax.tree.map(
+                lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                   sharding=sh),
+                opt_shapes, o_shard)
+            step_fn = make_train_step(cfg, tcfg)
+            rep = NamedSharding(mesh, P())
+            step_sds = jax.ShapeDtypeStruct((), jnp.int32, sharding=rep)
+            key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=rep)
+            lowered = jax.jit(
+                step_fn,
+                out_shardings=(p_shard, o_shard, None),
+            ).lower(params_sds, opt_sds, batch_sds, step_sds, key_sds)
+        elif shape.kind == "prefill":
+            def prefill_fn(params, batch):
+                return lm.prefill(cfg, params, **batch)
+            lowered = jax.jit(prefill_fn).lower(params_sds, batch_sds)
+        else:  # decode
+            state_shapes = jax.eval_shape(
+                partial(lm.init_decode_state, cfg, shape.global_batch,
+                        shape.seq_len, dtype=dtype))
+            state_axes = lm.decode_state_specs(cfg, shape.global_batch,
+                                               shape.seq_len)
+            s_shard = _act_shardings(state_axes, rules, mesh)
+            state_sds = jax.tree.map(
+                lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                   sharding=sh),
+                state_shapes, s_shard)
+
+            def decode_fn(params, state, tokens):
+                return lm.decode_step(cfg, params, state, tokens)
+            lowered = jax.jit(
+                decode_fn, out_shardings=(None, s_shard),
+            ).lower(params_sds, state_sds, batch_sds["tokens"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # --- analyses --------------------------------------------------------
+    n_chips = mesh.size
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes", "peak_memory_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_rec[k] = int(v)
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    # NOTE: XLA's cost_analysis counts while(scan) bodies ONCE — recorded
+    # for reference only.  The roofline uses the trip-count-aware HLO
+    # parser (launch/hlo_analysis.py).
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = hlo_analysis.summarize(hlo)
+    flops = coll["hlo_flops"]
+    hbm_bytes = coll["hlo_hbm_bytes"]
+    mflops = roofline.model_flops(cfg, params_shapes, shape)
+    rl = roofline.Roofline(
+        flops=flops, hbm_bytes=hbm_bytes,
+        coll_bytes=float(coll["collective_bytes"]),
+        model_flops=mflops, n_chips=n_chips)
+    n_params = roofline.count_params(params_shapes)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "axes": list(mesh.axis_names),
+        "policy": pol,
+        "n_params": n_params,
+        "n_params_active": roofline.active_params(cfg, params_shapes),
+        "param_bytes_per_chip": int(
+            sum(x.size * x.dtype.itemsize for x in
+                jax.tree.leaves(params_shapes)) / n_chips),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem_rec,
+        "cost": {"flops": flops, "bytes_accessed": hbm_bytes,
+                 "xla_flops_looponce": xla_flops,
+                 "xla_bytes_looponce": xla_bytes},
+        "collectives": {k: v for k, v in coll.items()
+                        if not k.startswith("hlo_")},
+        "roofline": rl.as_dict(),
+    }
+    if want_hlo:
+        rec["_hlo"] = hlo
+    return rec
+
+
+def run_cell(arch, shape_name, *, multi_pod, out_dir, want_hlo=False,
+             overrides=None):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+    print(f"=== {tag} ===", flush=True)
+    try:
+        rec = build_and_compile(arch, shape_name, mesh, want_hlo=want_hlo,
+                                overrides=overrides)
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "multi" if multi_pod else "single",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+        print(f"  FAILED: {rec['error']}", flush=True)
+    else:
+        r = rec["roofline"]
+        print(f"  params {rec['n_params']/1e9:.2f}B  "
+              f"compile {rec['compile_s']:.1f}s  "
+              f"compute {r['compute_s']*1e3:.2f}ms  "
+              f"memory {r['memory_s']*1e3:.2f}ms  "
+              f"collective {r['collective_s']*1e3:.2f}ms  "
+              f"bottleneck={r['bottleneck']}  "
+              f"MFU<= {r['mfu_upper_bound']*100:.1f}%", flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        hlo = rec.pop("_hlo", None)
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        if hlo is not None:
+            with open(os.path.join(out_dir, tag + ".hlo"), "w") as f:
+                f.write(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--hlo", action="store_true")
+    args = ap.parse_args()
+
+    todo = cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for mp in meshes:
+        for arch, shape_name in todo:
+            results.append(run_cell(arch, shape_name, multi_pod=mp,
+                                    out_dir=args.out, want_hlo=args.hlo))
+    n_fail = sum("error" in r for r in results)
+    print(f"\n{len(results) - n_fail}/{len(results)} cells compiled OK")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

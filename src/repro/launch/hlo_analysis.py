@@ -1,0 +1,346 @@
+"""Trip-count-aware post-SPMD HLO cost model.
+
+XLA's built-in ``compiled.cost_analysis()`` counts while-loop (lax.scan)
+bodies ONCE — useless for layer-scanned models (verified: a 2-layer and an
+8-layer qwen stack report identical FLOPs).  This module parses the
+partitioned HLO text (``compiled.as_text()``, per-device shapes) and:
+
+1. builds the computation call graph (fusion ``calls=``, while
+   ``condition=/body=``, ``to_apply=``, conditional branches),
+2. extracts while trip counts from ``backend_config known_trip_count``
+   (fallback: the largest constant in the loop condition),
+3. propagates *multiplicities* from ENTRY so an op inside a layer scan
+   inside a microbatch scan counts layers x microbatches times,
+4. accounts per device:
+     - FLOPs: dot ops (2·result·K, K from the operand symbol table +
+       ``lhs_contracting_dims``) and convolutions,
+     - HBM bytes: operand+result bytes of top-level (non-fusion-body)
+       instructions — post-fusion buffer traffic,
+     - collective bytes: result-shape bytes of all-reduce / all-gather /
+       reduce-scatter / all-to-all / collective-permute (+ async -start
+       forms; -done skipped).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->.*{\s*$")
+_HDR_PARAM = re.compile(r"([\w\.\-]+)\s*:\s*((?:\([^)]*\))|[a-z0-9]+\[[\d,]*\])")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^()]*\))|(?:[a-z0-9]+"
+    r"\[[\d,]*\](?:{[^}]*})?))\s*([\w\-]+)\((.*)$")
+_CALL_ATTR = re.compile(r"(?:calls=|to_apply=)%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations={([^}]*)}")
+_TRIP = re.compile(r"known_trip_count[\"':{\s]+n[\"':\s]+(\d+)")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims={([\d,]*)}")
+_OPERAND_NAME = re.compile(r"%([\w\.\-]+)")
+
+# opcodes whose buffers are aliases/control — no HBM traffic of their own
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "partition-id", "replica-id", "iota",
+}
+
+# opcodes that MUST touch HBM on the target TPU (matmuls, reductions,
+# data movement, collectives, fused groups).  Everything else at the HLO
+# top level is elementwise/shape glue that the TPU compiler fuses into its
+# consumers — the CPU backend leaves it unfused, and counting it would
+# overstate HBM traffic by ~2 orders of magnitude (EXPERIMENTS.md §Method).
+_HBM_OPS = {
+    "dot", "convolution", "fusion", "reduce", "reduce-window", "sort",
+    "gather", "scatter", "dynamic-slice", "dynamic-update-slice", "copy",
+    "concatenate", "pad", "slice", "transpose", "select-and-scatter",
+    "rng", "rng-bit-generator", "cholesky", "triangular-solve", "fft",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "reduce-scatter-start", "all-to-all-start", "collective-permute-start",
+}
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in DTYPE_BYTES:
+            continue
+        total += _shape_elems(m.group(2)) * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    instrs: list = field(default_factory=list)
+    symtab: dict = field(default_factory=dict)   # name -> type str
+
+
+def parse_computations(hlo: str) -> dict:
+    comps = {}
+    cur = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(name=m.group(2),
+                                  is_entry=bool(m.group(1)))
+                for pm in _HDR_PARAM.finditer(m.group(3)):
+                    cur.symtab[pm.group(1)] = pm.group(2)
+                comps[cur.name] = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.symtab[ins.name] = ins.result_type
+            cur.instrs.append(ins)
+    return comps
+
+
+def _while_parts(ins: Instr):
+    mcond = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+    mbody = re.search(r"body=%?([\w\.\-]+)", ins.rest)
+    mtrip = _TRIP.search(ins.rest)
+    return (mcond.group(1) if mcond else None,
+            mbody.group(1) if mbody else None,
+            int(mtrip.group(1)) if mtrip else None)
+
+
+def _cond_trip_fallback(cond: Computation) -> int:
+    best = 1
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            m2 = re.match(r"(\d+)\)", ins.rest)
+            if m2:
+                best = max(best, int(m2.group(1)))
+    return best
+
+
+def compute_multiplicities(comps: dict):
+    """-> ({comp: multiplicity}, {comp: fusion_body_flag})."""
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    callers = defaultdict(list)  # callee -> [(caller, factor, via_fusion)]
+    for c in comps.values():
+        for ins in c.instrs:
+            if ins.opcode == "while":
+                cond, body, trip = _while_parts(ins)
+                if trip is None and cond in comps:
+                    trip = _cond_trip_fallback(comps[cond])
+                trip = trip or 1
+                if body in comps:
+                    callers[body].append((c.name, float(trip), False))
+                if cond in comps:
+                    callers[cond].append((c.name, float(trip + 1), False))
+            elif ins.opcode == "conditional":
+                mb = _BRANCHES.search(ins.rest)
+                if mb:
+                    for b in mb.group(1).split(","):
+                        b = b.strip().lstrip("%")
+                        if b in comps:
+                            callers[b].append((c.name, 1.0, False))
+            else:
+                via_fusion = ins.opcode == "fusion"
+                for callee in _CALL_ATTR.findall(ins.rest):
+                    if callee in comps:
+                        callers[callee].append((c.name, 1.0, via_fusion))
+
+    mult = defaultdict(float)
+    mult[entry.name] = 1.0
+    for _ in range(len(comps) + 2):
+        changed = False
+        for callee, lst in callers.items():
+            m = sum(mult.get(cal, 0.0) * f for cal, f, _ in lst)
+            if m > 0 and abs(mult.get(callee, 0.0) - m) > 1e-9:
+                mult[callee] = m
+                changed = True
+        if not changed:
+            break
+
+    fusion_body = {}
+    for name in comps:
+        lst = callers.get(name, [])
+        fusion_body[name] = bool(lst) and all(via for _, _, via in lst)
+    fusion_body[entry.name] = False
+    return mult, fusion_body
+
+
+def _operands(ins: Instr, comp: Computation, *, limit=None):
+    """Resolve operand types via the computation symbol table."""
+    # cut attrs off: operands live before the first "), " ... attrs follow.
+    text = ins.rest
+    out = []
+    for m in _OPERAND_NAME.finditer(text):
+        t = comp.symtab.get(m.group(1))
+        if t is not None:
+            out.append(t)
+            if limit and len(out) >= limit:
+                break
+    return out
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    m = _SHAPE_RE.search(ins.result_type)
+    if not m or m.group(1) not in DTYPE_BYTES:
+        return 0.0
+    res_elems = _shape_elems(m.group(2))
+    ops = _operands(ins, comp, limit=1)
+    mc = _LHS_CONTRACT.search(ins.rest)
+    if not ops or not mc:
+        return 0.0
+    lhs = _SHAPE_RE.search(ops[0])
+    if not lhs:
+        return 0.0
+    dims = [int(d) for d in lhs.group(2).split(",") if d]
+    k = 1
+    for i in (int(x) for x in mc.group(1).split(",") if x):
+        if i < len(dims):
+            k *= dims[i]
+    return 2.0 * res_elems * k
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    m = _SHAPE_RE.search(ins.result_type)
+    if not m or m.group(1) not in DTYPE_BYTES:
+        return 0.0
+    res_elems = _shape_elems(m.group(2))
+    ops = _operands(ins, comp, limit=2)
+    if len(ops) < 2:
+        return 0.0
+    kern = _SHAPE_RE.search(ops[1])
+    if not kern:
+        return 0.0
+    kdims = [int(d) for d in kern.group(2).split(",") if d]
+    if not kdims:
+        return 0.0
+    out_ch = kdims[-1]
+    return 2.0 * res_elems * (math.prod(kdims) / max(out_ch, 1))
+
+
+def _operand_bytes_list(ins: Instr, comp: Computation):
+    operand_text = ins.rest.split("), ")[0]
+    out = []
+    for m in _OPERAND_NAME.finditer(operand_text):
+        t = comp.symtab.get(m.group(1))
+        if t is not None:
+            out.append(shape_bytes(t))
+    return out
+
+
+# loop-carry copies above this size are buffer-aliasing artifacts of the
+# CPU backend (TPU donates/aliases scan carries); skip them.
+_CARRY_COPY_CUTOFF = 256 * 2 ** 20
+
+
+def _instr_traffic_bytes(ins: Instr, comp: Computation) -> int:
+    if ins.opcode in _NO_TRAFFIC or ins.opcode not in _HBM_OPS:
+        return 0
+    ops = _operand_bytes_list(ins, comp)
+    res = shape_bytes(ins.result_type)
+    if ins.opcode == "fusion":
+        if "dynamic-update-slice" in ins.name:
+            # aliased in-place update: traffic = read+write of the update
+            # window, not the whole carried buffer
+            if len(ops) > 1:
+                return 2 * (sum(ops) - max(ops))
+            return 0
+        if "copy" in ins.name and res > _CARRY_COPY_CUTOFF:
+            return 0
+        return res + sum(ops)
+    if ins.opcode == "copy" and res > _CARRY_COPY_CUTOFF:
+        return 0
+    if ins.opcode in ("dynamic-update-slice",):
+        # in-place: read+write only the updated window (operand 1), not the
+        # aliased buffer — the KV-cache decode path would otherwise count
+        # the whole cache per layer.
+        upd = ops[1] if len(ops) > 1 else 0
+        return 2 * upd
+    if ins.opcode == "scatter":
+        upd = ops[2] if len(ops) > 2 else (ops[-1] if ops else 0)
+        idx = ops[1] if len(ops) > 1 else 0
+        return 3 * upd + idx
+    if ins.opcode == "dynamic-slice":
+        return 2 * res
+    return res + sum(ops)
+
+
+def analyze(hlo: str):
+    """Full per-device analysis -> dict."""
+    comps = parse_computations(hlo)
+    mult, fusion_body = compute_multiplicities(comps)
+    flops = 0.0
+    hbm = 0.0
+    coll = defaultdict(float)
+    counts = defaultdict(int)
+    for name, c in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        for ins in c.instrs:
+            if ins.opcode == "dot":
+                flops += m * _dot_flops(ins, c)
+            elif ins.opcode == "convolution":
+                flops += m * _conv_flops(ins, c)
+            base = ins.opcode.replace("-start", "")
+            if base in COLLECTIVES and not ins.opcode.endswith("-done"):
+                coll[base] += m * shape_bytes(ins.result_type)
+                counts[base] += 1
+            if not fusion_body.get(name, False):
+                hbm += m * _instr_traffic_bytes(ins, c)
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "collective_bytes": sum(coll.values()),
+        "per_kind_bytes": dict(coll),
+        "per_kind_counts": dict(counts),
+        "n_computations": len(comps),
+    }
+
+
+def collective_bytes(hlo_text: str):
+    r = analyze(hlo_text)
+    return (r["collective_bytes"], r["per_kind_bytes"],
+            r["per_kind_counts"])
+
+
+def summarize(hlo_text: str):
+    r = analyze(hlo_text)
+    return {
+        "collective_bytes": r["collective_bytes"],
+        "per_kind_bytes": r["per_kind_bytes"],
+        "per_kind_counts": r["per_kind_counts"],
+        "hlo_flops": r["flops"],
+        "hlo_hbm_bytes": r["hbm_bytes"],
+    }

@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Functions, not module-level constants — importing this module never
+touches jax device state (device count is locked at first jax init, and
+smoke tests must see 1 device while the dry-run sees 512)."""
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (one 256-chip v5e pod) or 2x16x16 (two pods, 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for multi-device CPU tests (subprocesses set
+    --xla_force_host_platform_device_count accordingly)."""
+    return _mk(shape, axes)

@@ -1,0 +1,112 @@
+"""Three-term roofline model for TPU v5e (target hardware).
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+  memory     = HLO_bytes_per_chip / HBM_bw
+  collective = collective_bytes_per_chip / link_bw
+
+``compiled.cost_analysis()`` on the partitioned module reports per-chip
+flops/bytes; collective bytes come from launch/hlo_analysis.py.
+MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) measures how much of the
+compiled compute is "useful" (catches remat/redundancy waste).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# v5e per chip
+PEAK_FLOPS = 197e12       # bf16
+HBM_BW = 819e9            # B/s
+ICI_BW = 50e9             # B/s per link (assignment constant)
+
+
+@dataclass
+class Roofline:
+    flops: float               # per-chip HLO flops
+    hbm_bytes: float           # per-chip bytes accessed
+    coll_bytes: float          # per-chip collective bytes
+    model_flops: float         # global useful flops (6ND)
+    n_chips: int
+
+    @property
+    def compute_s(self):
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self):
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self):
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self):
+        """Optimistic (perfect-overlap) step time = max of the terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flop_fraction(self):
+        """MODEL_FLOPS / (global HLO flops)."""
+        total = self.flops * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_upper_bound(self):
+        """Model-flop utilization implied by the roofline step time."""
+        denom = self.step_s * PEAK_FLOPS * self.n_chips
+        return self.model_flops / denom if denom else 0.0
+
+    def as_dict(self):
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "collective_bytes_per_chip": self.coll_bytes,
+            "model_flops": self.model_flops,
+            "n_chips": self.n_chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_s": self.step_s,
+            "useful_flop_fraction": self.useful_flop_fraction,
+            "mfu_upper_bound": self.mfu_upper_bound,
+        }
+
+
+def count_params(shapes_tree):
+    import jax
+    return sum(int(x.size) for x in jax.tree.leaves(shapes_tree))
+
+
+def active_params(cfg, params_shapes):
+    """Active params per token: MoE expert weights count at top_k/E.
+
+    Expert weights are identified by their experts dim (== cfg.moe.n_experts
+    in dims 1-2 of the layer-stacked (L, E, ...) tensors)."""
+    import jax
+    leaves = jax.tree.leaves(params_shapes)
+    total = sum(int(x.size) for x in leaves)
+    if cfg.moe is None:
+        return total
+    E = cfg.moe.n_experts
+    expert_sz = sum(int(x.size) for x in leaves
+                    if len(x.shape) >= 3 and E in x.shape[:2])
+    return (total - expert_sz) + expert_sz * cfg.moe.top_k / E
+
+
+def model_flops(cfg, params_shapes, shape_cfg):
+    """6·N(_active)·D for a train step; 2·N_active per token for decode."""
+    n_act = active_params(cfg, params_shapes)
+    tokens = shape_cfg.global_batch * shape_cfg.seq_len
+    if shape_cfg.kind == "train":
+        return 6.0 * n_act * tokens
+    if shape_cfg.kind == "prefill":
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence
+    return 2.0 * n_act * shape_cfg.global_batch

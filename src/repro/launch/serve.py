@@ -1,0 +1,115 @@
+"""Uncertainty-routed cascade serving — the paper's offloading policy as a
+datacenter pattern (DESIGN.md §2): requests whose pooled-embedding GMM
+entropy is low are answered by the small ("edge-class") model; high-
+entropy (hard) requests escalate to the large ("server-class") model.
+
+  python -m repro.launch.serve --demo     # runs the CPU-scale demo
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config, smoke_config
+from repro.core import gmm as gmm_mod
+from repro.models import lm
+
+
+@dataclass
+class CascadeStats:
+    served_small: int = 0
+    served_large: int = 0
+    small_ms: float = 0.0
+    large_ms: float = 0.0
+
+    @property
+    def escalation_rate(self):
+        n = self.served_small + self.served_large
+        return self.served_large / n if n else 0.0
+
+
+class CascadeServer:
+    """Two-tier server. ``threshold`` is normalized entropy in [0, 1]
+    (paper: offload when U_t > 0.7 regardless of platform, §6.5.2)."""
+
+    def __init__(self, small_cfg, small_params, large_cfg, large_params,
+                 *, threshold="auto", auto_quantile=0.75, gmm_components=64,
+                 seed=0):
+        self.small_cfg, self.small_params = small_cfg, small_params
+        self.large_cfg, self.large_params = large_cfg, large_params
+        self.threshold = threshold          # float, or "auto" (calibrated
+        self.auto_quantile = auto_quantile  # to a quantile of the first
+                                            # batch's entropies)
+        key = jax.random.PRNGKey(seed)
+        self.gmm = gmm_mod.init_gmm(key, gmm_components, small_cfg.d_model)
+        self.stats = CascadeStats()
+
+        def embed_and_uncertainty(params, tokens):
+            h, _ = lm.forward(small_cfg, params, tokens=tokens)
+            z = h.mean(axis=1)
+            z = z / jnp.maximum(jnp.linalg.norm(z, -1, keepdims=True), 1e-6)
+            return z
+
+        self._embed = jax.jit(embed_and_uncertainty)
+        self._small_step = jax.jit(
+            lambda p, t: lm.forward(small_cfg, p, tokens=t))
+        self._large_step = jax.jit(
+            lambda p, t: lm.forward(large_cfg, p, tokens=t))
+
+    def handle(self, tokens, *, update_gmm=True):
+        """tokens: (B, S). Routes each request; returns (logits, routed_to)."""
+        z = self._embed(self.small_params, tokens)
+        u = gmm_mod.normalized_entropy(self.gmm, z)
+        if update_gmm:
+            self.gmm = gmm_mod.em_update(self.gmm, z)
+        if self.threshold == "auto":
+            self.threshold = float(jnp.quantile(u, self.auto_quantile))
+        hard = np.asarray(u > self.threshold)
+        out = []
+        for i, is_hard in enumerate(hard):
+            t0 = time.perf_counter()
+            if is_hard:
+                h, _ = self._large_step(self.large_params, tokens[i:i + 1])
+                logits = lm.logits_from_hidden(self.large_cfg,
+                                               self.large_params, h)
+                self.stats.served_large += 1
+                self.stats.large_ms += (time.perf_counter() - t0) * 1e3
+            else:
+                h, _ = self._small_step(self.small_params, tokens[i:i + 1])
+                logits = lm.logits_from_hidden(self.small_cfg,
+                                               self.small_params, h)
+                self.stats.served_small += 1
+                self.stats.small_ms += (time.perf_counter() - t0) * 1e3
+            out.append(np.asarray(logits[0, -1]))
+        return np.stack(out), hard
+
+
+def demo(n_batches=8, batch=8, seq=64):
+    small = smoke_config(get_config("qwen1.5-0.5b"))
+    large = replace(smoke_config(get_config("qwen3-1.7b")),
+                    vocab=small.vocab, d_model=small.d_model,
+                    n_layers=4)
+    key = jax.random.PRNGKey(0)
+    sp, _ = lm.init_lm(small, key)
+    lp, _ = lm.init_lm(large, key)
+    srv = CascadeServer(small, sp, large, lp, threshold="auto")
+    for i in range(n_batches):
+        toks = jax.random.randint(jax.random.PRNGKey(i), (batch, seq), 0,
+                                  small.vocab)
+        srv.handle(toks)
+    s = srv.stats
+    print(f"served: small={s.served_small} large={s.served_large} "
+          f"escalation={s.escalation_rate:.2f}")
+    return s
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--demo", action="store_true")
+    args = ap.parse_args()
+    demo()

@@ -1,0 +1,224 @@
+"""Grouped-query attention with qk-norm, biases, soft-capping, sliding
+windows, a chunked online-softmax path for long sequences, and a KV-cache
+decode path.
+
+Shapes follow (batch, seq, heads, head_dim).  KV heads may be fewer than Q
+heads (GQA); Q heads are grouped as (kv_heads, q_per_kv).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.common import (apply_dense, apply_rmsnorm, apply_rope,
+                                 dense_init, softcap)
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def init_attention(key, cfg, *, dtype=jnp.float32):
+    """cfg needs: d_model, n_heads, n_kv_heads, head_dim, qk_norm, qkv_bias."""
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    params, axes = {}, {}
+    params["wq"], axes["wq"] = dense_init(
+        ks[0], (d, h, hd), ("q_in", "heads", "q_hd"), dtype=dtype,
+        bias=cfg.qkv_bias, bias_axes=("heads", "q_hd"))
+    params["wk"], axes["wk"] = dense_init(
+        ks[1], (d, kv, hd), ("kv_in", "kv_heads", "kv_hd"), dtype=dtype,
+        bias=cfg.qkv_bias, bias_axes=("kv_heads", "kv_hd"))
+    params["wv"], axes["wv"] = dense_init(
+        ks[2], (d, kv, hd), ("kv_in", "kv_heads", "kv_hd"), dtype=dtype,
+        bias=cfg.qkv_bias, bias_axes=("kv_heads", "kv_hd"))
+    params["wo"], axes["wo"] = dense_init(
+        ks[3], (h, hd, d), ("heads", "o_hd", "embed"), dtype=dtype,
+        scale=1.0 / math.sqrt(h * hd))
+    if cfg.qk_norm:
+        params["q_norm"] = {"scale": jnp.zeros((hd,), dtype)}
+        axes["q_norm"] = {"scale": (None,)}
+        params["k_norm"] = {"scale": jnp.zeros((hd,), dtype)}
+        axes["k_norm"] = {"scale": (None,)}
+    return params, axes
+
+
+def _project_qkv(p, cfg, x, positions):
+    q = apply_dense(p["wq"], x)            # (B, S, H, hd)
+    k = apply_dense(p["wk"], x)            # (B, S, KV, hd)
+    v = apply_dense(p["wv"], x)
+    if cfg.qk_norm:
+        q = apply_rmsnorm(p["q_norm"], q)
+        k = apply_rmsnorm(p["k_norm"], k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _scale(cfg):
+    base = cfg.attn_scale if cfg.attn_scale is not None else 1.0 / math.sqrt(cfg.head_dim)
+    return base
+
+
+def _mask_bias(q_pos, k_pos, window):
+    """(Q, K) additive mask: causal + optional sliding window."""
+    causal = q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        causal &= (q_pos[:, None] - k_pos[None, :]) < window
+    return jnp.where(causal, 0.0, NEG_INF)
+
+
+def _attend_dense(cfg, q, k, v, q_pos, k_pos, window):
+    """Reference einsum attention. q: (B,Sq,H,hd) k/v: (B,Sk,KV,hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * _scale(cfg)
+    scores = softcap(scores, cfg.attn_softcap)
+    scores = scores + _mask_bias(q_pos, k_pos, window)[None, None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _attend_chunked(cfg, q, k, v, q_pos, k_pos, window, chunk):
+    """Flash-style: scan over KV chunks with an online softmax so the full
+    (Sq, Sk) score matrix is never materialized.
+
+    Mixed precision: matmul I/O stays in the model dtype (bf16 on TPU —
+    halves the HBM/ICI bytes of every attention tensor) while the softmax
+    statistics (m, l) and the output accumulator run in f32
+    (MXU-accumulated via preferred_element_type).  The scan body is
+    rematerialized so the backward pass recomputes score tiles instead of
+    saving a stacked (n_chunks, B, ..., chunk) probability tensor
+    (EXPERIMENTS.md §Perf iteration 1)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    Sk = k.shape[1]
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # pad positions with +inf-like sentinel so padded KV is causally masked
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=(1 << 30))
+    dt = q.dtype
+    qh = q * jnp.asarray(_scale(cfg), dt)                 # (B, Sq, H, hd)
+    # expand KV heads to H: replicated k/v are cheap, and every attention
+    # tensor then carries an H-dim that shards cleanly over 'model' even
+    # when KV doesn't divide it (EXPERIMENTS.md §Perf iteration 3)
+    k = jnp.repeat(k, G, axis=2)
+    v = jnp.repeat(v, G, axis=2)
+    qh = shard(qh, "batch", "seq", "heads", "head_dim")
+    k_c = k.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    v_c = v.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    p_c = k_pos.reshape(n_chunks, chunk)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, pc = xs
+        s = jnp.einsum("bqhd,bshd->bhqs", qh, kc,
+                       preferred_element_type=jnp.float32)
+        s = shard(s, "batch", "heads", "seq", None)
+        s = softcap(s, cfg.attn_softcap)
+        s = s + _mask_bias(q_pos, pc, window)[None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqs,bshd->bhqd", p.astype(dt), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (k_c, v_c, p_c))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 2, 1, 3)                       # (B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def attention(p, cfg, x, positions, *, window=None):
+    """Full-sequence (training / prefill) attention."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    S = x.shape[1]
+    pos1 = positions[0] if positions.ndim > 1 else positions
+    if cfg.attn_chunk and S > cfg.attn_chunk:
+        out = _attend_chunked(cfg, q, k, v, pos1, pos1, window, cfg.attn_chunk)
+    else:
+        out = _attend_dense(cfg, q, k, v, pos1, pos1, window)
+    out = shard(out, "batch", "seq", "heads", "head_dim")
+    y = apply_dense(p["wo"], out, contract=2)
+    return shard(y, "batch", "seq", "embed")
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, KV, max_len, hd)
+    v: jax.Array
+    # index is carried at the stack level (same for every layer)
+
+
+def init_kv_cache(cfg, batch, max_len, dtype):
+    shape = (batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attention_decode(p, cfg, x, cache: KVCache, index, *, window=None):
+    """Single-token decode. x: (B, 1, d); cache holds max_len positions;
+    `index` is the write position (== number of tokens already cached)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), index, jnp.int32)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    # write new kv at `index`
+    k_new = jnp.swapaxes(k, 1, 2)  # (B, KV, 1, hd)
+    v_new = jnp.swapaxes(v, 1, 2)
+    ck = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                      (0, 0, index, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                      (0, 0, index, 0))
+    max_len = ck.shape[2]
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    H = cfg.n_heads
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd).astype(jnp.float32) * _scale(cfg)
+    scores = jnp.einsum("bqkgd,bksd->bkgqs", qg, ck.astype(jnp.float32))
+    scores = softcap(scores, cfg.attn_softcap)
+    k_pos = jnp.arange(max_len)
+    valid = k_pos[None] <= index
+    if window is not None:
+        valid &= (index - k_pos[None]) < window
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bqkgd", probs, cv.astype(jnp.float32))
+    out = out.reshape(B, 1, H, hd).astype(x.dtype)
+    y = apply_dense(p["wo"], out, contract=2)
+    return y, KVCache(ck, cv)
+
+
+def attention_prefill(p, cfg, x, positions, max_len, *, window=None):
+    """Prefill: run full attention and return the populated cache."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    S = x.shape[1]
+    pos1 = positions[0] if positions.ndim > 1 else positions
+    if cfg.attn_chunk and S > cfg.attn_chunk:
+        out = _attend_chunked(cfg, q, k, v, pos1, pos1, window, cfg.attn_chunk)
+    else:
+        out = _attend_dense(cfg, q, k, v, pos1, pos1, window)
+    y = apply_dense(p["wo"], out, contract=2)
+    B = x.shape[0]
+    ck = jnp.zeros((B, cfg.n_kv_heads, max_len, cfg.head_dim), k.dtype)
+    cv = jnp.zeros_like(ck)
+    ck = jax.lax.dynamic_update_slice(ck, jnp.swapaxes(k, 1, 2), (0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, jnp.swapaxes(v, 1, 2), (0, 0, 0, 0))
+    return y, KVCache(ck, cv)

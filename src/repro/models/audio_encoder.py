@@ -1,0 +1,149 @@
+"""The paper's encoder: ResNet-18-style 1D CNN over mel spectrograms with
+L=8 *splittable* blocks and a d=128 projection head (§5 Reproducibility).
+
+Adaptation note (DESIGN.md): BatchNorm is undefined for streaming batch
+sizes (the paper itself excludes BN-reliant baselines) — we use GroupNorm.
+
+``apply_blocks(params, x, start, end)`` runs blocks [start, end) so the
+split engine can execute any prefix on the "edge" stage and the suffix on
+the "server" stage; the activation at the boundary is the wire payload.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AudioEncCfg:
+    name: str = "streamsplit-audio"
+    family: str = "audio_enc"
+    n_mels: int = 128
+    d_embed: int = 128
+    widths: tuple = (64, 64, 128, 128, 256, 256, 512, 512)
+    strides: tuple = (1, 2, 1, 2, 1, 2, 1, 2)
+    kernel: int = 3
+    groups: int = 8        # GroupNorm groups
+    frames: int = 100      # 1 s @ 10 ms hop
+
+    @property
+    def n_blocks(self):
+        return len(self.widths)
+
+
+def _conv_init(key, k, cin, cout):
+    scale = 1.0 / math.sqrt(k * cin)
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, (k, cin, cout),
+                                               jnp.float32)
+
+
+def _conv1d(x, w, stride=1):
+    """x: (B, T, C); w: (K, Cin, Cout); causal 'SAME' padding."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"))
+
+
+def _groupnorm(p, x, groups, eps=1e-5):
+    B, T, C = x.shape
+    g = x.reshape(B, T, groups, C // groups)
+    mu = g.mean(axis=(1, 3), keepdims=True)
+    var = g.var(axis=(1, 3), keepdims=True)
+    g = (g - mu) * jax.lax.rsqrt(var + eps)
+    return g.reshape(B, T, C) * p["scale"] + p["bias"]
+
+
+def init_audio_encoder(cfg: AudioEncCfg, key):
+    ks = jax.random.split(key, 3 + 4 * cfg.n_blocks)
+    params = {"stem": {"w": _conv_init(ks[0], 7, cfg.n_mels, cfg.widths[0])}}
+    blocks = []
+    cin = cfg.widths[0]
+    for i, (w, s) in enumerate(zip(cfg.widths, cfg.strides)):
+        kk = ks[3 + 4 * i: 7 + 4 * i]
+        blk = {
+            "conv1": {"w": _conv_init(kk[0], cfg.kernel, cin, w)},
+            "gn1": {"scale": jnp.ones((w,)), "bias": jnp.zeros((w,))},
+            "conv2": {"w": _conv_init(kk[1], cfg.kernel, w, w)},
+            "gn2": {"scale": jnp.ones((w,)), "bias": jnp.zeros((w,))},
+        }
+        if s != 1 or cin != w:
+            blk["proj"] = {"w": _conv_init(kk[2], 1, cin, w)}
+        blocks.append(blk)
+        cin = w
+    params["blocks"] = blocks
+    params["head"] = {
+        "w": _conv_init(ks[1], 1, cin, cfg.d_embed)[0],  # (Cin, d)
+    }
+    return params
+
+
+def apply_stem(cfg, params, mel):
+    """mel: (B, T, n_mels) -> (B, T, widths[0])."""
+    return jax.nn.relu(_conv1d(mel, params["stem"]["w"]))
+
+
+def apply_block(cfg, blk, x, stride):
+    h = _conv1d(x, blk["conv1"]["w"], stride)
+    h = jax.nn.relu(_groupnorm(blk["gn1"], h, cfg.groups))
+    h = _conv1d(h, blk["conv2"]["w"])
+    h = _groupnorm(blk["gn2"], h, cfg.groups)
+    if "proj" in blk:
+        x = _conv1d(x, blk["proj"]["w"], stride)
+    return jax.nn.relu(x + h)
+
+
+def apply_blocks(cfg, params, x, start, end):
+    """Run blocks [start, end) — the split engine's stage executor."""
+    for i in range(start, end):
+        x = apply_block(cfg, params["blocks"][i], x, cfg.strides[i])
+    return x
+
+
+def apply_head(cfg, params, x):
+    """(B, T', C) -> l2-normalized (B, d_embed)."""
+    pooled = x.mean(axis=1)
+    z = pooled @ params["head"]["w"]
+    return z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-6)
+
+
+def encode(cfg, params, mel, *, start=0, end=None):
+    """Full path: stem -> blocks -> head (start/end for split execution)."""
+    end = cfg.n_blocks if end is None else end
+    x = apply_stem(cfg, params, mel) if start == 0 else mel
+    x = apply_blocks(cfg, params, x, start, end)
+    if end == cfg.n_blocks:
+        return apply_head(cfg, params, x)
+    return x  # intermediate activation (the wire payload)
+
+
+def block_flops(cfg, frames=None):
+    """Per-block forward FLOPs for one sample — drives the latency/energy
+    models in core/env.py."""
+    T = frames or cfg.frames
+    out = []
+    cin = cfg.widths[0]
+    t = T
+    for w, s in zip(cfg.widths, cfg.strides):
+        t_out = t // s
+        f = 2 * cfg.kernel * cin * w * t_out + 2 * cfg.kernel * w * w * t_out
+        if s != 1 or cin != w:
+            f += 2 * cin * w * t_out
+        out.append(f)
+        cin, t = w, t_out
+    return out
+
+
+def boundary_bytes(cfg, frames=None, *, dtype_bytes=4):
+    """Wire payload size (bytes/sample) if split AFTER block i (i=0 => raw
+    input; i=n_blocks => embedding only)."""
+    T = frames or cfg.frames
+    sizes = [T * cfg.n_mels * dtype_bytes]  # k=0: send raw mel
+    t = T
+    for w, s in zip(cfg.widths, cfg.strides):
+        t = t // s
+        sizes.append(t * w * dtype_bytes)
+    sizes[-1] = cfg.d_embed * dtype_bytes  # after last block only z crosses
+    return sizes

@@ -1,0 +1,152 @@
+"""Shared building blocks: param trees, norms, RoPE, embeddings.
+
+Everything is functional: ``init_*`` returns ``(params, axes)`` where
+``params`` is a pytree of arrays and ``axes`` is a matching pytree of
+logical-axis tuples (leaves are tuples of str).  The axes tree drives
+sharding (distributed/sharding.py) and is never needed at apply time.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+
+def is_axes_leaf(x):
+    return isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+
+
+def truncated_normal(key, shape, scale, dtype):
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+def dense_init(key, shape, axes, *, dtype=jnp.float32, scale=None, bias=False,
+               bias_axes=None):
+    """A (possibly fused) linear weight; fan-in = prod of dims before the
+    split point implied by scale=None (default: first dim)."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(shape[0])
+    w = truncated_normal(key, shape, scale, dtype)
+    params = {"w": w}
+    ax = {"w": tuple(axes)}
+    if bias:
+        nb = shape[len(shape) - len(bias_axes):] if bias_axes else shape[1:]
+        params["b"] = jnp.zeros(nb, dtype)
+        ax["b"] = tuple(bias_axes) if bias_axes else tuple(axes[1:])
+    return params, ax
+
+
+def apply_dense(p, x, contract=1):
+    """x @ w over the last `contract` dims of x and first `contract` of w."""
+    w = p["w"].astype(x.dtype)
+    xdims = tuple(range(x.ndim - contract, x.ndim))
+    wdims = tuple(range(contract))
+    y = jax.lax.dot_general(x, w, ((xdims, wdims), ((), ())))
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim, *, dtype=jnp.float32):
+    return {"scale": jnp.zeros((dim,), dtype)}, {"scale": ("embed",)}
+
+
+def apply_rmsnorm(p, x, *, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + w): zero-init scale == identity.
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+def init_layernorm(dim, *, dtype=jnp.float32):
+    return (
+        {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)},
+        {"scale": ("embed",), "bias": ("embed",)},
+    )
+
+
+def apply_layernorm(p, x, *, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def init_norm(kind, dim, *, dtype=jnp.float32):
+    if kind == "layernorm":
+        return init_layernorm(dim, dtype=dtype)
+    return init_rmsnorm(dim, dtype=dtype)
+
+
+def apply_norm(kind, p, x):
+    if kind == "layernorm":
+        return apply_layernorm(p, x)
+    return apply_rmsnorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, theta):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab, dim, *, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0
+    tbl = truncated_normal(key, (vocab, dim), scale, dtype)
+    return {"table": tbl}, {"table": ("vocab", "embed")}
+
+
+def embed_lookup(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def embed_logits(p, x):
+    """Tied read-out: x @ table.T -> (..., vocab)."""
+    return jnp.einsum("...d,vd->...v", x, p["table"].astype(x.dtype))
+
+
+def softcap(x, cap):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def activation(name):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu2":  # squared ReLU (Primer / nemotron-4)
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "relu":
+        return jax.nn.relu
+    raise ValueError(f"unknown activation {name}")

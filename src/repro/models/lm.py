@@ -1,0 +1,575 @@
+"""LM assembly: composable decoder stacks for every assigned family.
+
+Families
+  dense / vlm / audio-lm : [norm→attn, norm→ffn] × L   (pattern-cycled windows)
+  moe                    : same with MoE ffn (+ shared expert / dense residual)
+  ssm                    : [norm→mamba] × L
+  hybrid (zamba2)        : mamba stack with a *shared* attn+mlp block every k
+
+Layers are scanned (stacked params, leading 'layers' axis) with optional
+remat.  The CE loss is computed in sequence chunks so (B, S, vocab) logits
+are never materialized.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (apply_norm, dense_init, embed_logits,
+                                 embed_lookup, init_embedding, init_norm,
+                                 softcap)
+
+GLOBAL_WINDOW = 1 << 30
+
+
+def _stack_init(fn, key, n):
+    """vmap an init over n layer keys; returns (stacked params, axes)."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: fn(k)[0])(keys)
+    _, axes = fn(keys[0])
+    axes = jax.tree.map(lambda a: ("layers",) + a, axes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# Block initializers
+# ---------------------------------------------------------------------------
+
+def _init_dense_block(cfg, key):
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["ln1"], a["ln1"] = init_norm(cfg.norm, cfg.d_model, dtype=cfg.pdtype)
+    p["attn"], a["attn"] = attn_mod.init_attention(ks[0], cfg, dtype=cfg.pdtype)
+    p["ln2"], a["ln2"] = init_norm(cfg.norm, cfg.d_model, dtype=cfg.pdtype)
+    p["mlp"], a["mlp"] = mlp_mod.init_mlp(
+        ks[1], cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp, dtype=cfg.pdtype)
+    return p, a
+
+
+def _init_moe_block(cfg, key):
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["ln1"], a["ln1"] = init_norm(cfg.norm, cfg.d_model, dtype=cfg.pdtype)
+    p["attn"], a["attn"] = attn_mod.init_attention(ks[0], cfg, dtype=cfg.pdtype)
+    p["ln2"], a["ln2"] = init_norm(cfg.norm, cfg.d_model, dtype=cfg.pdtype)
+    p["moe"], a["moe"] = moe_mod.init_moe(ks[1], cfg.moe, cfg.d_model,
+                                          dtype=cfg.pdtype)
+    if cfg.moe.n_shared_experts:
+        ff = cfg.moe.d_ff_expert * cfg.moe.n_shared_experts
+        p["shared_mlp"], a["shared_mlp"] = mlp_mod.init_mlp(
+            ks[2], cfg.d_model, ff, gated=cfg.gated_mlp, dtype=cfg.pdtype)
+    if cfg.moe.dense_residual:
+        p["dense_mlp"], a["dense_mlp"] = mlp_mod.init_mlp(
+            ks[3], cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp, dtype=cfg.pdtype)
+    return p, a
+
+
+def _init_mamba_block(cfg, key):
+    p, a = {}, {}
+    p["ln"], a["ln"] = init_norm(cfg.norm, cfg.d_model, dtype=cfg.pdtype)
+    p["mamba"], a["mamba"] = ssm_mod.init_mamba(key, cfg.ssm, cfg.d_model,
+                                                dtype=cfg.pdtype)
+    return p, a
+
+
+# ---------------------------------------------------------------------------
+# Block forwards
+# ---------------------------------------------------------------------------
+
+def _dense_block(cfg, p, x, positions, window):
+    h = apply_norm(cfg.norm, p["ln1"], x)
+    h = attn_mod.attention(p["attn"], cfg, h, positions, window=window)
+    x = x + h
+    h = apply_norm(cfg.norm, p["ln2"], x)
+    h = mlp_mod.apply_mlp(p["mlp"], h, act=cfg.act)
+    return x + h, jnp.float32(0.0)
+
+
+def _moe_block(cfg, p, x, positions, window):
+    h = apply_norm(cfg.norm, p["ln1"], x)
+    h = attn_mod.attention(p["attn"], cfg, h, positions, window=window)
+    x = x + h
+    h = apply_norm(cfg.norm, p["ln2"], x)
+    y, aux = moe_mod.apply_moe(p["moe"], cfg.moe, h)
+    if "shared_mlp" in p:
+        y = y + mlp_mod.apply_mlp(p["shared_mlp"], h, act=cfg.act)
+    if "dense_mlp" in p:
+        y = y + mlp_mod.apply_mlp(p["dense_mlp"], h, act=cfg.act)
+    return x + y, aux
+
+
+def _mamba_block(cfg, p, x):
+    h = apply_norm(cfg.norm, p["ln"], x)
+    h = ssm_mod.mamba_forward(p["mamba"], cfg.ssm, h)
+    return x + h, jnp.float32(0.0)
+
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat:
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def init_lm(cfg, key):
+    ks = jax.random.split(key, 8)
+    params, axes = {}, {}
+    params["embed"], axes["embed"] = init_embedding(
+        ks[0], cfg.vocab, cfg.d_model, dtype=cfg.pdtype)
+    blocks_p, blocks_a = {}, {}
+    if cfg.family in ("dense", "vlm", "audio"):
+        blocks_p["layers"], blocks_a["layers"] = _stack_init(
+            partial(_init_dense_block, cfg), ks[1], cfg.n_layers)
+    elif cfg.family == "moe":
+        k_dense = cfg.moe.first_k_dense
+        if k_dense:
+            dense_cfg = cfg
+            blocks_p["dense_layers"], blocks_a["dense_layers"] = _stack_init(
+                partial(_init_dense_block, cfg), ks[2], k_dense)
+        blocks_p["layers"], blocks_a["layers"] = _stack_init(
+            partial(_init_moe_block, cfg), ks[1], cfg.n_layers - k_dense)
+    elif cfg.family == "ssm":
+        blocks_p["layers"], blocks_a["layers"] = _stack_init(
+            partial(_init_mamba_block, cfg), ks[1], cfg.n_layers)
+    elif cfg.family == "hybrid":
+        blocks_p["layers"], blocks_a["layers"] = _stack_init(
+            partial(_init_mamba_block, cfg), ks[1], cfg.n_layers)
+        blocks_p["shared"], blocks_a["shared"] = _init_dense_block(cfg, ks[2])
+    else:
+        raise ValueError(cfg.family)
+    params["blocks"], axes["blocks"] = blocks_p, blocks_a
+    params["final_norm"], axes["final_norm"] = init_norm(
+        cfg.norm, cfg.d_model, dtype=cfg.pdtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"], axes["lm_head"] = dense_init(
+            ks[3], (cfg.d_model, cfg.vocab), ("embed", "vocab"),
+            dtype=cfg.pdtype)
+    return params, axes
+
+
+def param_count(params):
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / full-sequence)
+# ---------------------------------------------------------------------------
+
+def _hybrid_layout(cfg):
+    """(#full groups, tail) for the hybrid mamba/shared-attn pattern."""
+    p = cfg.hybrid_period
+    return cfg.n_layers // p, cfg.n_layers % p
+
+
+def forward(cfg, params, tokens=None, embeds=None, positions=None):
+    """-> (hidden (B, S, d), aux)."""
+    if embeds is not None:
+        x = embeds.astype(cfg.xdtype)
+    else:
+        x = embed_lookup(params["embed"], tokens).astype(cfg.xdtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.xdtype)
+    B, S = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = shard(x, "batch", "seq", "embed")
+    aux = jnp.float32(0.0)
+    blocks = params["blocks"]
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        block_fn = _moe_block if cfg.family == "moe" else _dense_block
+
+        if cfg.family == "moe" and cfg.moe.first_k_dense:
+            body_d = _maybe_remat(cfg, lambda x, p_l, w: _dense_block(
+                cfg, p_l, x, positions, w))
+
+            def scan_dense(carry, xs):
+                x, aux = carry
+                p_l, w = xs
+                x, a = body_d(x, p_l, w)
+                return (x, aux + a), None
+
+            wins = cfg.layer_windows()[: cfg.moe.first_k_dense]
+            (x, aux), _ = jax.lax.scan(
+                scan_dense, (x, aux), (blocks["dense_layers"], wins))
+            windows = cfg.layer_windows()[cfg.moe.first_k_dense:]
+        else:
+            windows = cfg.layer_windows()
+
+        body = _maybe_remat(cfg, lambda x, p_l, w: block_fn(
+            cfg, p_l, x, positions, w))
+
+        def scan_body(carry, xs):
+            x, aux = carry
+            p_l, w = xs
+            x, a = body(x, p_l, w)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(scan_body, (x, aux),
+                                   (blocks["layers"], windows))
+
+    elif cfg.family == "ssm":
+        body = _maybe_remat(cfg, lambda x, p_l: _mamba_block(cfg, p_l, x))
+
+        def scan_body(x, p_l):
+            x, _ = body(x, p_l)
+            return x, None
+
+        x, _ = jax.lax.scan(scan_body, x, blocks["layers"])
+
+    elif cfg.family == "hybrid":
+        G, tail = _hybrid_layout(cfg)
+        per = cfg.hybrid_period
+        m_params = blocks["layers"]
+        head_p = jax.tree.map(lambda t: t[: G * per].reshape(
+            (G, per) + t.shape[1:]), m_params)
+        tail_p = jax.tree.map(lambda t: t[G * per:], m_params)
+        shared = blocks["shared"]
+        win = jnp.int32(GLOBAL_WINDOW)
+        m_body = _maybe_remat(cfg, lambda x, p_l: _mamba_block(cfg, p_l, x))
+        s_body = _maybe_remat(cfg, lambda x: _dense_block(
+            cfg, shared, x, positions, win))
+
+        def group_body(x, p_group):
+            def inner(x, p_l):
+                x, _ = m_body(x, p_l)
+                return x, None
+            x, _ = jax.lax.scan(inner, x, p_group)
+            x, _ = s_body(x)
+            return x, None
+
+        x, _ = jax.lax.scan(group_body, x, head_p)
+        if tail:
+            def inner(x, p_l):
+                x, _ = m_body(x, p_l)
+                return x, None
+            x, _ = jax.lax.scan(inner, x, tail_p)
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    return x, aux
+
+
+def logits_from_hidden(cfg, params, h):
+    if cfg.tie_embeddings:
+        logits = embed_logits(params["embed"], h)
+    else:
+        from repro.models.common import apply_dense
+        logits = apply_dense(params["lm_head"], h)
+    return softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked CE)
+# ---------------------------------------------------------------------------
+
+def chunked_ce(cfg, params, hidden, labels):
+    """Mean next-token CE, computed in sequence chunks.
+
+    hidden: (B, S, d); labels: (B, S) (already shifted by the caller)."""
+    B, S, d = hidden.shape
+    c = min(cfg.loss_chunk, S)
+    nc = -(-S // c)
+    pad = nc * c - S
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = hidden.reshape(B, nc, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, c).transpose(1, 0, 2)
+
+    def body(acc, xs):
+        h, l = xs
+        logits = logits_from_hidden(cfg, params, h)          # (B, c, V) fp32
+        logits = shard(logits, "batch", "seq", "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(l, 0)[..., None], axis=-1)[..., 0]
+        valid = (l >= 0).astype(jnp.float32)
+        nll = (lse - tgt) * valid
+        return (acc[0] + nll.sum(), acc[1] + valid.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(cfg, params, batch):
+    """batch: {tokens|embeds, labels} -> (loss, metrics)."""
+    h, aux = forward(cfg, params, tokens=batch.get("tokens"),
+                     embeds=batch.get("embeds"))
+    ce = chunked_ce(cfg, params, h, batch["labels"])
+    loss = ce
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_coef * aux
+    return loss, {"ce": ce, "moe_aux": aux, "hidden": h}
+
+
+# ---------------------------------------------------------------------------
+# Decode state / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg, batch, max_len, dtype=None):
+    dt = jnp.dtype(dtype or cfg.dtype)
+    st = {"index": jnp.zeros((), jnp.int32)}
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        L = cfg.n_layers
+        st["k"] = jnp.zeros((L, batch, cfg.n_kv_heads, max_len, cfg.head_dim), dt)
+        st["v"] = jnp.zeros_like(st["k"])
+    elif cfg.family == "ssm":
+        s = cfg.ssm
+        L = cfg.n_layers
+        st["ssm"] = jnp.zeros((L, batch, s.n_heads, s.head_dim, s.d_state), dt)
+        st["conv"] = jnp.zeros((L, batch, s.conv_width - 1, s.n_heads, s.head_dim), dt)
+    elif cfg.family == "hybrid":
+        s = cfg.ssm
+        L = cfg.n_layers
+        G, _ = _hybrid_layout(cfg)
+        st["ssm"] = jnp.zeros((L, batch, s.n_heads, s.head_dim, s.d_state), dt)
+        st["conv"] = jnp.zeros((L, batch, s.conv_width - 1, s.n_heads, s.head_dim), dt)
+        st["k"] = jnp.zeros((G, batch, cfg.n_kv_heads, max_len, cfg.head_dim), dt)
+        st["v"] = jnp.zeros_like(st["k"])
+    return st
+
+
+def decode_state_specs(cfg, batch, max_len, *, kind="act"):
+    """Logical axes for the decode state (for shardings)."""
+    ax = {"index": ()}
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        ax["k"] = ("layers", "batch", "kv_heads", "kv_seq", "head_dim")
+        ax["v"] = ax["k"]
+    elif cfg.family in ("ssm", "hybrid"):
+        ax["ssm"] = ("layers", "batch", "ssm_heads", "head_dim", "ssm_state")
+        ax["conv"] = ("layers", "batch", "conv", "ssm_heads", "head_dim")
+        if cfg.family == "hybrid":
+            ax["k"] = ("layers", "batch", "kv_heads", "kv_seq", "head_dim")
+            ax["v"] = ax["k"]
+    return ax
+
+
+def prefill(cfg, params, tokens=None, embeds=None, max_len=None):
+    """Full-sequence prefill -> (decode_state, last-token logits)."""
+    if embeds is not None:
+        x = embeds.astype(cfg.xdtype)
+    else:
+        x = embed_lookup(params["embed"], tokens).astype(cfg.xdtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.xdtype)
+    B, S = x.shape[:2]
+    max_len = max_len or S
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = shard(x, "batch", "seq", "embed")
+    blocks = params["blocks"]
+    st = init_decode_state(cfg, B, max_len, dtype=cfg.xdtype)
+    st["index"] = jnp.int32(S)
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        windows = cfg.layer_windows()
+
+        def make_body(kind):
+            def body(x, xs):
+                p_l, w = xs
+                h = apply_norm(cfg.norm, p_l["ln1"], x)
+                h, kv = attn_mod.attention_prefill(
+                    p_l["attn"], cfg, h, positions, max_len, window=w)
+                x = x + h
+                h = apply_norm(cfg.norm, p_l["ln2"], x)
+                if kind == "moe":
+                    y, _ = moe_mod.apply_moe(p_l["moe"], cfg.moe, h)
+                    if "shared_mlp" in p_l:
+                        y = y + mlp_mod.apply_mlp(p_l["shared_mlp"], h, act=cfg.act)
+                    if "dense_mlp" in p_l:
+                        y = y + mlp_mod.apply_mlp(p_l["dense_mlp"], h, act=cfg.act)
+                else:
+                    y = mlp_mod.apply_mlp(p_l["mlp"], h, act=cfg.act)
+                x = x + y
+                return x, (kv.k, kv.v)
+            return body
+
+        kd = cfg.moe.first_k_dense if cfg.family == "moe" else 0
+        if kd:
+            x, (ks_d, vs_d) = jax.lax.scan(
+                make_body("dense"), x, (blocks["dense_layers"], windows[:kd]))
+        kind = "moe" if cfg.family == "moe" else "dense"
+        x, (ks, vs) = jax.lax.scan(
+            make_body(kind), x, (blocks["layers"], windows[kd:]))
+        if kd:
+            ks = jnp.concatenate([ks_d, ks], 0)
+            vs = jnp.concatenate([vs_d, vs], 0)
+        st["k"], st["v"] = ks, vs
+
+    elif cfg.family == "ssm":
+        def body(x, p_l):
+            h = apply_norm(cfg.norm, p_l["ln"], x)
+            h, s = ssm_mod.mamba_forward(p_l["mamba"], cfg.ssm, h,
+                                         return_state=True)
+            return x + h, (s.ssm, s.conv)
+
+        x, (ss, cs) = jax.lax.scan(body, x, blocks["layers"])
+        st["ssm"], st["conv"] = ss, cs
+
+    elif cfg.family == "hybrid":
+        G, tail = _hybrid_layout(cfg)
+        per = cfg.hybrid_period
+        m_params = blocks["layers"]
+        head_p = jax.tree.map(lambda t: t[: G * per].reshape(
+            (G, per) + t.shape[1:]), m_params)
+        tail_p = jax.tree.map(lambda t: t[G * per:], m_params)
+        shared = blocks["shared"]
+        win = jnp.int32(GLOBAL_WINDOW)
+
+        def m_body(x, p_l):
+            h = apply_norm(cfg.norm, p_l["ln"], x)
+            h, s = ssm_mod.mamba_forward(p_l["mamba"], cfg.ssm, h,
+                                         return_state=True)
+            return x + h, (s.ssm, s.conv)
+
+        def group_body(x, p_group):
+            x, states = jax.lax.scan(m_body, x, p_group)
+            h = apply_norm(cfg.norm, shared["ln1"], x)
+            h, kv = attn_mod.attention_prefill(
+                shared["attn"], cfg, h, positions, max_len, window=win)
+            x = x + h
+            h = apply_norm(cfg.norm, shared["ln2"], x)
+            x = x + mlp_mod.apply_mlp(shared["mlp"], h, act=cfg.act)
+            return x, (states, (kv.k, kv.v))
+
+        x, (m_states, kvs) = jax.lax.scan(group_body, x, head_p)
+        ss = m_states[0].reshape((G * per,) + m_states[0].shape[2:])
+        cs = m_states[1].reshape((G * per,) + m_states[1].shape[2:])
+        if tail:
+            x, tail_states = jax.lax.scan(m_body, x, tail_p)
+            ss = jnp.concatenate([ss, tail_states[0]], 0)
+            cs = jnp.concatenate([cs, tail_states[1]], 0)
+        st["ssm"], st["conv"] = ss, cs
+        st["k"], st["v"] = kvs
+
+    x_last = apply_norm(cfg.norm, params["final_norm"], x[:, -1:])
+    logits = logits_from_hidden(cfg, params, x_last)[:, 0]
+    return st, logits
+
+
+def decode_step(cfg, params, state, tokens):
+    """One decode step. tokens: (B,) -> (logits (B, V), new state)."""
+    B = tokens.shape[0]
+    x = embed_lookup(params["embed"], tokens[:, None]).astype(cfg.xdtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.xdtype)
+    idx = state["index"]
+    blocks = params["blocks"]
+    new_state = dict(state)
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        windows = cfg.layer_windows()
+
+        def make_body(kind):
+            def body(x, xs):
+                p_l, w, k_l, v_l = xs
+                h = apply_norm(cfg.norm, p_l["ln1"], x)
+                h, kv = attn_mod.attention_decode(
+                    p_l["attn"], cfg, h, attn_mod.KVCache(k_l, v_l), idx,
+                    window=w)
+                x = x + h
+                h = apply_norm(cfg.norm, p_l["ln2"], x)
+                if kind == "moe":
+                    y, _ = moe_mod.apply_moe(p_l["moe"], cfg.moe, h)
+                    if "shared_mlp" in p_l:
+                        y = y + mlp_mod.apply_mlp(p_l["shared_mlp"], h, act=cfg.act)
+                    if "dense_mlp" in p_l:
+                        y = y + mlp_mod.apply_mlp(p_l["dense_mlp"], h, act=cfg.act)
+                else:
+                    y = mlp_mod.apply_mlp(p_l["mlp"], h, act=cfg.act)
+                x = x + y
+                return x, (kv.k, kv.v)
+            return body
+
+        kd = cfg.moe.first_k_dense if cfg.family == "moe" else 0
+        if kd:
+            x, (ks_d, vs_d) = jax.lax.scan(
+                make_body("dense"), x,
+                (blocks["dense_layers"], windows[:kd],
+                 state["k"][:kd], state["v"][:kd]))
+        kind = "moe" if cfg.family == "moe" else "dense"
+        x, (ks, vs) = jax.lax.scan(
+            make_body(kind), x,
+            (blocks["layers"], windows[kd:], state["k"][kd:], state["v"][kd:]))
+        if kd:
+            ks = jnp.concatenate([ks_d, ks], 0)
+            vs = jnp.concatenate([vs_d, vs], 0)
+        new_state["k"], new_state["v"] = ks, vs
+
+    elif cfg.family == "ssm":
+        def body(x, xs):
+            p_l, s_l, c_l = xs
+            h = apply_norm(cfg.norm, p_l["ln"], x)
+            h, s = ssm_mod.mamba_decode(p_l["mamba"], cfg.ssm, h,
+                                        ssm_mod.SSMState(s_l, c_l))
+            return x + h, (s.ssm, s.conv)
+
+        x, (ss, cs) = jax.lax.scan(
+            body, x, (blocks["layers"], state["ssm"], state["conv"]))
+        new_state["ssm"], new_state["conv"] = ss, cs
+
+    elif cfg.family == "hybrid":
+        G, tail = _hybrid_layout(cfg)
+        per = cfg.hybrid_period
+        m_params = blocks["layers"]
+        head_p = jax.tree.map(lambda t: t[: G * per].reshape(
+            (G, per) + t.shape[1:]), m_params)
+        tail_p = jax.tree.map(lambda t: t[G * per:], m_params)
+        shared = blocks["shared"]
+        win = jnp.int32(GLOBAL_WINDOW)
+
+        def m_body(x, xs):
+            p_l, s_l, c_l = xs
+            h = apply_norm(cfg.norm, p_l["ln"], x)
+            h, s = ssm_mod.mamba_decode(p_l["mamba"], cfg.ssm, h,
+                                        ssm_mod.SSMState(s_l, c_l))
+            return x + h, (s.ssm, s.conv)
+
+        head_ss = jax.tree.map(lambda t: t[: G * per].reshape(
+            (G, per) + t.shape[1:]), state["ssm"])
+        head_cs = jax.tree.map(lambda t: t[: G * per].reshape(
+            (G, per) + t.shape[1:]), state["conv"])
+
+        def group_body(x, xs):
+            p_g, s_g, c_g, k_g, v_g = xs
+            x, states = jax.lax.scan(m_body, x, (p_g, s_g, c_g))
+            h = apply_norm(cfg.norm, shared["ln1"], x)
+            h, kv = attn_mod.attention_decode(
+                shared["attn"], cfg, h, attn_mod.KVCache(k_g, v_g), idx,
+                window=win)
+            x = x + h
+            h = apply_norm(cfg.norm, shared["ln2"], x)
+            x = x + mlp_mod.apply_mlp(shared["mlp"], h, act=cfg.act)
+            return x, (states, (kv.k, kv.v))
+
+        x, (m_states, kvs) = jax.lax.scan(
+            group_body, x, (head_p, head_ss, head_cs, state["k"], state["v"]))
+        ss = m_states[0].reshape((G * per,) + m_states[0].shape[2:])
+        cs = m_states[1].reshape((G * per,) + m_states[1].shape[2:])
+        if tail:
+            x, tail_states = jax.lax.scan(
+                m_body, x, (tail_p, state["ssm"][G * per:],
+                            state["conv"][G * per:]))
+            ss = jnp.concatenate([ss, tail_states[0]], 0)
+            cs = jnp.concatenate([cs, tail_states[1]], 0)
+        new_state["ssm"], new_state["conv"] = ss, cs
+        new_state["k"], new_state["v"] = kvs
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = logits_from_hidden(cfg, params, x)[:, 0]
+    new_state["index"] = idx + 1
+    return logits, new_state

@@ -1,0 +1,36 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain (squared-ReLU etc.)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.common import activation, apply_dense, dense_init
+
+
+def init_mlp(key, d_model, d_ff, *, gated=True, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    params, axes = {}, {}
+    params["w_up"], axes["w_up"] = dense_init(
+        ks[0], (d_model, d_ff), ("embed", "mlp"), dtype=dtype)
+    if gated:
+        params["w_gate"], axes["w_gate"] = dense_init(
+            ks[1], (d_model, d_ff), ("embed", "mlp"), dtype=dtype)
+    params["w_down"], axes["w_down"] = dense_init(
+        ks[2], (d_ff, d_model), ("mlp", "embed"), dtype=dtype,
+        scale=1.0 / math.sqrt(d_ff))
+    return params, axes
+
+
+def apply_mlp(p, x, *, act="silu"):
+    fn = activation(act)
+    up = apply_dense(p["w_up"], x)
+    if "w_gate" in p:
+        h = fn(apply_dense(p["w_gate"], x)) * up
+    else:
+        h = fn(up)
+    h = shard(h, "batch", "seq", "mlp")
+    y = apply_dense(p["w_down"], h)
+    return shard(y, "batch", "seq", "embed")

@@ -1,0 +1,210 @@
+"""Mamba-2 (SSD, state-space duality) blocks.
+
+Chunked SSD for training/prefill (block-diagonal intra-chunk "attention"
+plus a low-rank inter-chunk recurrence — arXiv:2405.21060) and an O(1)
+recurrent step for decode.  Projections are unfused so heads shard cleanly
+over the 'model' mesh axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.common import apply_dense, dense_init
+
+
+def init_mamba(key, ssm_cfg, d_model, *, dtype=jnp.float32):
+    H, P, N, G = ssm_cfg.n_heads, ssm_cfg.head_dim, ssm_cfg.d_state, ssm_cfg.n_groups
+    W = ssm_cfg.conv_width
+    ks = jax.random.split(key, 9)
+    params, axes = {}, {}
+    params["wz"], axes["wz"] = dense_init(
+        ks[0], (d_model, H, P), ("embed", "ssm_heads", "head_dim"), dtype=dtype)
+    params["wx"], axes["wx"] = dense_init(
+        ks[1], (d_model, H, P), ("embed", "ssm_heads", "head_dim"), dtype=dtype)
+    params["wB"], axes["wB"] = dense_init(
+        ks[2], (d_model, G, N), ("embed", "ssm_group", "ssm_state"), dtype=dtype)
+    params["wC"], axes["wC"] = dense_init(
+        ks[3], (d_model, G, N), ("embed", "ssm_group", "ssm_state"), dtype=dtype)
+    params["wdt"], axes["wdt"] = dense_init(
+        ks[4], (d_model, H), ("embed", "ssm_heads"), dtype=dtype)
+    # depthwise causal conv over the x-path channels (H*P)
+    params["conv_x"] = 0.1 * jax.random.normal(ks[5], (W, H, P), jnp.float32).astype(dtype)
+    axes["conv_x"] = ("conv", "ssm_heads", "head_dim")
+    # per-head dynamics
+    dt0 = jnp.exp(jax.random.uniform(ks[6], (H,), jnp.float32,
+                                     math.log(1e-3), math.log(1e-1)))
+    params["dt_bias"] = dt0 + jnp.log(-jnp.expm1(-dt0))  # inv softplus
+    axes["dt_bias"] = ("ssm_heads",)
+    params["A_log"] = jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32))
+    axes["A_log"] = ("ssm_heads",)
+    params["D"] = jnp.ones((H,), jnp.float32)
+    axes["D"] = ("ssm_heads",)
+    params["norm_scale"] = jnp.zeros((H, P), dtype)
+    axes["norm_scale"] = ("ssm_heads", "head_dim")
+    params["wo"], axes["wo"] = dense_init(
+        ks[7], (H, P, d_model), ("ssm_heads", "head_dim", "embed"),
+        dtype=dtype, scale=1.0 / math.sqrt(H * P))
+    return params, axes
+
+
+def _causal_depthwise_conv(x, w):
+    """x: (B, S, H, P), w: (W, H, P) — causal depthwise conv along S."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):  # W is tiny (4): unrolled adds beat a conv primitive
+        out = out + xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+    return out
+
+
+def _segsum(x):
+    """x: (..., Q) -> (..., Q, Q) lower-triangular segment sums
+    L[i, j] = sum_{j < t <= i} x[t]  (NEG at j > i)."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _gated_rmsnorm(y, z, scale, eps=1e-6):
+    """y, z: (..., H, P).  y <- RMSNorm(y * silu(z)) per (H, P) channel."""
+    h = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    h = h * jax.lax.rsqrt(var + eps)
+    return h * (1.0 + scale.astype(jnp.float32))
+
+
+class SSMState(NamedTuple):
+    ssm: jax.Array    # (B, H, P, N)
+    conv: jax.Array   # (B, W-1, H, P)
+
+
+def init_ssm_state(ssm_cfg, batch, dtype=jnp.float32):
+    H, P, N, W = (ssm_cfg.n_heads, ssm_cfg.head_dim, ssm_cfg.d_state,
+                  ssm_cfg.conv_width)
+    return SSMState(
+        ssm=jnp.zeros((batch, H, P, N), dtype),
+        conv=jnp.zeros((batch, W - 1, H, P), dtype),
+    )
+
+
+def _project(p, ssm_cfg, u):
+    z = apply_dense(p["wz"], u)                       # (B,S,H,P)
+    x = apply_dense(p["wx"], u)                       # (B,S,H,P)
+    Bv = apply_dense(p["wB"], u).astype(jnp.float32)  # (B,S,G,N)
+    Cv = apply_dense(p["wC"], u).astype(jnp.float32)  # (B,S,G,N)
+    dt = apply_dense(p["wdt"], u).astype(jnp.float32) # (B,S,H)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    return z, x, Bv, Cv, dt
+
+
+def mamba_forward(p, ssm_cfg, u, *, return_state=False):
+    """u: (B, S, d_model) -> (B, S, d_model) via chunked SSD."""
+    H, P, N, G = ssm_cfg.n_heads, ssm_cfg.head_dim, ssm_cfg.d_state, ssm_cfg.n_groups
+    Q = ssm_cfg.chunk
+    B_, S, _ = u.shape
+    z, x, Bv, Cv, dt = _project(p, ssm_cfg, u)
+    x = jax.nn.silu(_causal_depthwise_conv(x, p["conv_x"]).astype(jnp.float32))
+    x = shard(x.astype(u.dtype), "batch", "seq", "ssm_heads", "head_dim")
+    A = -jnp.exp(p["A_log"])                          # (H,)
+
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        z_p = jnp.pad(z, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        x_p = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B_p = jnp.pad(Bv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_p = jnp.pad(Cv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    else:
+        z_p, x_p, B_p, C_p, dt_p = z, x, Bv, Cv, dt
+
+    def ch(t, extra=()):  # (B, nc, Q, ...)
+        return t.reshape((B_, nc, Q) + t.shape[2:])
+
+    xc = ch(x_p).astype(jnp.float32)      # (B,nc,Q,H,P)
+    Bc = ch(B_p)                          # (B,nc,Q,G,N)
+    Cc = ch(C_p)
+    dtc = ch(dt_p)                        # (B,nc,Q,H)
+    rep = H // G
+    Bh = jnp.repeat(Bc, rep, axis=3)      # (B,nc,Q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A                          # (B,nc,Q,H)
+    dA_cs = jnp.cumsum(dA, axis=2)        # (B,nc,Q,H)
+    # intra-chunk (block-diagonal) term
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))       # (B,nc,H,Q,Q)
+    xdt = xc * dtc[..., None]                            # (B,nc,Q,H,P)
+    Ydiag = jnp.einsum("bcqhn,bckhn,bchqk,bckhp->bcqhp", Ch, Bh, L, xdt)
+    # chunk-final states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (B,nc,Q,H)
+    states = jnp.einsum("bckhn,bckh,bckhp->bchpn", Bh, decay_states, xdt)
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])            # (B,nc,H)
+
+    def scan_body(s_prev, xs):
+        st, dec = xs
+        s_new = s_prev * dec[:, :, None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((B_, H, P, N), jnp.float32)
+    s_final, prev_states = jax.lax.scan(
+        scan_body, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (B,nc,H,P,N)
+    state_decay = jnp.exp(dA_cs)                         # (B,nc,Q,H)
+    Yoff = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, prev_states, state_decay)
+
+    y = (Ydiag + Yoff).reshape(B_, nc * Q, H, P)[:, :S]
+    y = y + x.astype(jnp.float32) * p["D"][:, None]
+    y = _gated_rmsnorm(y, z, p["norm_scale"]).astype(u.dtype)
+    y = shard(y, "batch", "seq", "ssm_heads", "head_dim")
+    out = apply_dense(p["wo"], y, contract=2)
+    out = shard(out, "batch", "seq", "embed")
+    if return_state:
+        # conv state: last W-1 raw x-path inputs (pre-conv)
+        x_raw = apply_dense(p["wx"], u)
+        W = ssm_cfg.conv_width
+        conv_state = x_raw[:, -(W - 1):]
+        if S < W - 1:
+            conv_state = jnp.pad(x_raw, ((0, 0), (W - 1 - S, 0), (0, 0), (0, 0)))
+        return out, SSMState(ssm=s_final.astype(u.dtype),
+                             conv=conv_state.astype(u.dtype))
+    return out
+
+
+def mamba_decode(p, ssm_cfg, u, state: SSMState):
+    """Single-step recurrence. u: (B, 1, d_model)."""
+    H, P, N, G = ssm_cfg.n_heads, ssm_cfg.head_dim, ssm_cfg.d_state, ssm_cfg.n_groups
+    W = ssm_cfg.conv_width
+    z, x_raw, Bv, Cv, dt = _project(p, ssm_cfg, u)
+    x_raw = x_raw[:, 0]                                   # (B,H,P)
+    # conv with buffered history
+    hist = jnp.concatenate([state.conv,
+                            x_raw[:, None].astype(state.conv.dtype)], axis=1)
+    w = p["conv_x"].astype(jnp.float32)                   # (W,H,P)
+    x = jnp.einsum("bwhp,whp->bhp", hist.astype(jnp.float32), w)
+    x = jax.nn.silu(x)
+    new_conv = hist[:, 1:]
+
+    A = -jnp.exp(p["A_log"])                              # (H,)
+    dt1 = dt[:, 0]                                        # (B,H)
+    dA = jnp.exp(dt1 * A)                                 # (B,H)
+    rep = H // G
+    Bh = jnp.repeat(Bv[:, 0], rep, axis=1)                # (B,H,N)
+    Chh = jnp.repeat(Cv[:, 0], rep, axis=1)
+    xdt = x * dt1[..., None]                              # (B,H,P)
+    s = state.ssm.astype(jnp.float32)
+    s = s * dA[..., None, None] + jnp.einsum("bhp,bhn->bhpn", xdt, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", s, Chh)
+    y = y + x * p["D"][:, None]
+    y = _gated_rmsnorm(y[:, None], z, p["norm_scale"]).astype(u.dtype)
+    out = apply_dense(p["wo"], y, contract=2)             # (B,1,d)
+    return out, SSMState(ssm=s.astype(state.ssm.dtype),
+                         conv=new_conv.astype(state.conv.dtype))

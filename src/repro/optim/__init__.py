@@ -1,0 +1,14 @@
+"""Pure-JAX optimizers + schedules + gradient compression."""
+from repro.optim.adafactor import adafactor_init, adafactor_update
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.sgd import sgd_init, sgd_update
+
+OPTIMIZERS = {
+    "adamw": (adamw_init, adamw_update),
+    "adafactor": (adafactor_init, adafactor_update),
+    "sgd": (sgd_init, sgd_update),
+}
+
+
+def get_optimizer(name):
+    return OPTIMIZERS[name]

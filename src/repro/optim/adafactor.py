@@ -1,0 +1,65 @@
+"""Adafactor (Shazeer & Stern, arXiv:1804.04235) with factored second
+moments — the memory-feasible optimizer for kimi-k2-1t: Adam fp32 states
+for 1T params need ~12 TB (> the 8 TB of a 512-chip v5e fleet); factored
+row/col statistics cut optimizer memory to O(rows+cols) per matrix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _factored(shape):
+    return len(shape) >= 2
+
+
+def adafactor_init(params):
+    def leaf(t):
+        if _factored(t.shape):
+            return {
+                "vr": jnp.zeros(t.shape[:-1], jnp.float32),   # reduce last
+                "vc": jnp.zeros(t.shape[:-2] + t.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(t.shape, jnp.float32)}
+
+    return {
+        "stats": jax.tree.map(leaf, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(params, grads, state, *, lr, decay=0.8, eps=1e-30,
+                     clip_threshold=1.0, weight_decay=0.0):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** (-decay)          # increasing-decay schedule
+
+    def upd(p, g, s):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if _factored(p.shape):
+            vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = jnp.mean(vr, axis=-1, keepdims=True)
+            r = vr / jnp.maximum(denom, eps)
+            u = g * jax.lax.rsqrt(r)[..., None] * jax.lax.rsqrt(
+                vc)[..., None, :]
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = beta * s["v"] + (1 - beta) * g2
+            u = g * jax.lax.rsqrt(v)
+            new_s = {"v": v}
+        # update clipping (RMS <= clip_threshold)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)))
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_s
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_s = tdef.flatten_up_to(state["stats"])
+    out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    params = tdef.unflatten([o[0] for o in out])
+    stats = tdef.unflatten([o[1] for o in out])
+    return params, {"stats": stats, "step": step}

@@ -1,0 +1,44 @@
+"""AdamW (decoupled weight decay) — the edge-side optimizer (paper §5 uses
+Adam lr=1e-3) and the default LM trainer optimizer.
+
+State: fp32 m, v (+ int32 step).  For multi-billion-param archs prefer
+Adafactor (optim/adafactor.py); EXPERIMENTS.md §Dry-run quantifies why.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    f32 = lambda t: jnp.zeros(t.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.0, grad_clip=1.0):
+    step = state["step"] + 1
+    if grad_clip:
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g.astype(jnp.float32),
+                     state["m"], grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) *
+                     jnp.square(g.astype(jnp.float32)), state["v"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, mm, vv):
+        u = (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    params = jax.tree.map(upd, params, m, v)
+    return params, {"m": m, "v": v, "step": step}

@@ -1,0 +1,25 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak, warmup, total, floor=0.0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak * step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def rsqrt(step, *, peak, warmup):
+    step = jnp.asarray(step, jnp.float32)
+    return peak * jnp.minimum(step / jnp.maximum(warmup, 1),
+                              jnp.sqrt(warmup / jnp.maximum(step, 1.0)))
+
+
+def constant(step, *, peak, **_):
+    return jnp.full_like(jnp.asarray(step, jnp.float32), peak)
+
+
+SCHEDULES = {"cosine": warmup_cosine, "rsqrt": rsqrt, "constant": constant}

@@ -1,0 +1,20 @@
+"""SGD with momentum (the paper's server-side optimizer, §5)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params):
+    return (jax.tree.map(jnp.zeros_like, params),)
+
+
+def sgd_update(params, grads, state, *, lr, momentum=0.9, nesterov=False):
+    (m,) = state
+    m = jax.tree.map(lambda a, g: momentum * a + g, m, grads)
+    if nesterov:
+        upd = jax.tree.map(lambda g, a: g + momentum * a, grads, m)
+    else:
+        upd = m
+    params = jax.tree.map(lambda p, u: p - lr * u.astype(p.dtype), params, upd)
+    return params, (m,)

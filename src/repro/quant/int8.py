@@ -1,0 +1,47 @@
+"""Asymmetric INT8 post-training quantization (paper §5): the wire format
+of the split link.  Per-tensor granularity, calibration-free (min/max of
+the tensor being shipped), <0.5 ms overhead class.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QTensor(NamedTuple):
+    q: jax.Array        # int8 payload
+    scale: jax.Array    # () f32
+    zero: jax.Array     # () f32  (asymmetric zero point, float for exactness)
+
+    @property
+    def wire_bytes(self):
+        return self.q.size + 8  # payload + scale/zero header
+
+
+def quantize(x, *, bits=8):
+    """Asymmetric affine quantization to int8 (per tensor)."""
+    x = x.astype(jnp.float32)
+    lo = jnp.min(x)
+    hi = jnp.max(x)
+    qmax = (1 << (bits - 1)) - 1   # 127
+    qmin = -(1 << (bits - 1))      # -128
+    scale = jnp.maximum((hi - lo) / (qmax - qmin), 1e-12)
+    zero = qmin - lo / scale
+    q = jnp.clip(jnp.round(x / scale + zero), qmin, qmax).astype(jnp.int8)
+    return QTensor(q=q, scale=scale, zero=zero)
+
+
+def dequantize(t: QTensor, dtype=jnp.float32):
+    return ((t.q.astype(jnp.float32) - t.zero) * t.scale).astype(dtype)
+
+
+def fake_quant(x):
+    """quantize∘dequantize — in-graph wire simulation (differentiable via STE)."""
+    y = dequantize(quantize(x), x.dtype)
+    return x + jax.lax.stop_gradient(y - x)
+
+
+def quant_error(x):
+    return jnp.max(jnp.abs(x - dequantize(quantize(x), x.dtype)))

@@ -1,0 +1,50 @@
+"""Fault-tolerance utilities: failure injection (tests/chaos), straggler
+detection with deadline policy, and an elastic-restart helper."""
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass, field
+
+
+class FailureInjector:
+    """Raises RuntimeError at the given steps — simulates node loss."""
+
+    def __init__(self, fail_at=()):
+        self.fail_at = set(fail_at)
+        self.fired = set()
+
+    def maybe_fail(self, step):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+@dataclass
+class StragglerEvent:
+    step: int
+    time_s: float
+    median_s: float
+
+
+class StragglerMonitor:
+    """Flags steps slower than ``factor`` x trailing-median.
+
+    On a real fleet the policy would be: re-issue the slow shard's work to
+    a hot spare / drop the slow host from the next mesh (see
+    checkpoint/elastic.py).  Here we record the event and expose it to the
+    trainer and tests."""
+
+    def __init__(self, factor=3.0, window=50, warmup=5):
+        self.factor = factor
+        self.window = window
+        self.warmup = warmup
+        self.times = []
+        self.events: list[StragglerEvent] = []
+
+    def record(self, step, dt):
+        if len(self.times) >= self.warmup:
+            med = statistics.median(self.times[-self.window:])
+            if dt > self.factor * med:
+                self.events.append(StragglerEvent(step, dt, med))
+        self.times.append(dt)
+        return bool(self.events and self.events[-1].step == step)

@@ -1,0 +1,35 @@
+"""Minimal metrics logging: JSONL sink + rolling means."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from collections import defaultdict, deque
+
+
+class MetricsLogger:
+    def __init__(self, path=None, window=50):
+        self.path = path
+        self.window = window
+        self.buf = defaultdict(lambda: deque(maxlen=window))
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._f = open(path, "a")
+        else:
+            self._f = None
+
+    def log(self, step, **kv):
+        for k, v in kv.items():
+            self.buf[k].append(float(v))
+        if self._f:
+            self._f.write(json.dumps({"step": step, "t": time.time(), **{
+                k: float(v) for k, v in kv.items()}}) + "\n")
+            self._f.flush()
+
+    def mean(self, key):
+        b = self.buf[key]
+        return sum(b) / len(b) if b else float("nan")
+
+    def close(self):
+        if self._f:
+            self._f.close()

@@ -1,0 +1,200 @@
+"""Training runtime: jitted train step (microbatch accumulation, optional
+StreamSplit hybrid auxiliary loss) + a fault-tolerant loop (atomic
+checkpoints, auto-restore, straggler monitoring).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.laplacian import laplacian_loss
+from repro.core.swd import swd_loss
+from repro.models import lm
+from repro.optim import get_optimizer
+from repro.optim.schedules import SCHEDULES
+from repro.runtime.fault import StragglerMonitor
+from repro.checkpoint.manager import CheckpointManager
+
+
+@dataclass(frozen=True)
+class TrainCfg:
+    optimizer: str = "adamw"
+    lr: float = 3e-4
+    schedule: str = "cosine"
+    warmup: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    microbatches: int = 1
+    # StreamSplit hybrid loss as a first-class training feature: pooled
+    # hidden-state "frames" get the diversity (SWD) + affinity (Laplacian)
+    # regularizers of Eq. 13.
+    hybrid: bool = False
+    hybrid_lam_sw: float = 0.1
+    hybrid_lam_lap: float = 0.01
+    hybrid_pool: int = 64
+    seed: int = 0
+
+
+def make_loss_fn(cfg, tcfg: TrainCfg):
+    def loss_fn(params, batch, key):
+        loss, metrics = lm.lm_loss(cfg, params, batch)
+        hidden = metrics.pop("hidden")
+        if tcfg.hybrid:
+            B, S, d = hidden.shape
+            P = tcfg.hybrid_pool
+            T = S // P
+            z = hidden[:, : T * P].reshape(B, T, P, d).mean(2)
+            z = z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True),
+                                1e-6)
+            sw = swd_loss(key, z.reshape(-1, d).astype(jnp.float32))
+            lap = laplacian_loss(z.astype(jnp.float32))
+            loss = loss + tcfg.hybrid_lam_sw * sw + tcfg.hybrid_lam_lap * lap
+            metrics = {**metrics, "swd": sw, "lap": lap}
+        return loss, metrics
+    return loss_fn
+
+
+def make_train_step(cfg, tcfg: TrainCfg):
+    """(params, opt_state, batch, step, key) -> (params, opt_state, metrics).
+
+    This is the function the dry-run lowers — it contains the full
+    fwd+bwd+optimizer graph including any MoE all-to-alls."""
+    _, opt_update = get_optimizer(tcfg.optimizer)
+    loss_fn = make_loss_fn(cfg, tcfg)
+    schedule = SCHEDULES[tcfg.schedule]
+
+    def upd_kwargs():
+        if tcfg.optimizer == "adamw":
+            return dict(weight_decay=tcfg.weight_decay,
+                        grad_clip=tcfg.grad_clip)
+        if tcfg.optimizer == "sgd":
+            return dict(momentum=0.9)
+        return {}
+
+    def train_step(params, opt_state, batch, step, key):
+        if tcfg.microbatches > 1:
+            n = tcfg.microbatches
+            mb = jax.tree.map(
+                lambda t: t.reshape((n, t.shape[0] // n) + t.shape[1:]),
+                batch)
+            keys = jax.random.split(key, n)
+
+            def body(carry, xs):
+                g_acc, l_acc = carry
+                mb_i, k_i = xs
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb_i, k_i)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32),
+                              params)
+            (grads, loss), ms = jax.lax.scan(body, (g0, jnp.float32(0.0)),
+                                             (mb, keys))
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss / n
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, key)
+
+        lr = schedule(step, peak=tcfg.lr, warmup=tcfg.warmup,
+                      total=tcfg.total_steps)
+        params, opt_state = opt_update(params, grads, opt_state, lr=lr,
+                                       **upd_kwargs())
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        return params, opt_state, {**metrics, "loss": loss, "lr": lr,
+                                   "grad_norm": gnorm}
+
+    return train_step
+
+
+def init_train_state(cfg, tcfg: TrainCfg, key):
+    params, axes = lm.init_lm(cfg, key)
+    opt_init, _ = get_optimizer(tcfg.optimizer)
+    return {"params": params, "opt": opt_init(params),
+            "step": jnp.zeros((), jnp.int32)}, axes
+
+
+class Trainer:
+    """Fault-tolerant loop: periodic atomic checkpoints, restore-on-failure,
+    straggler detection (deadline = factor x trailing median step time)."""
+
+    def __init__(self, cfg, tcfg: TrainCfg, data_fn, *, ckpt_dir=None,
+                 ckpt_every=50, keep=3, async_ckpt=True,
+                 straggler_factor=3.0, failure_injector=None):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.data_fn = data_fn
+        self.key = jax.random.PRNGKey(tcfg.seed)
+        self.state, self.axes = init_train_state(cfg, tcfg, self.key)
+        self.train_step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+        self.ckpt = (CheckpointManager(ckpt_dir, keep=keep,
+                                       async_save=async_ckpt)
+                     if ckpt_dir else None)
+        self.ckpt_every = ckpt_every
+        self.monitor = StragglerMonitor(factor=straggler_factor)
+        self.failure_injector = failure_injector
+        self.history = []
+        self.restarts = 0
+        if self.ckpt:
+            restored, step = self.ckpt.restore_latest(self.state)
+            if restored is not None:
+                self.state = restored
+                print(f"[trainer] restored checkpoint at step {step}")
+
+    @property
+    def step(self):
+        return int(self.state["step"])
+
+    def _one_step(self):
+        step = self.step
+        if self.failure_injector is not None:
+            self.failure_injector.maybe_fail(step)
+        batch = self.data_fn(step)
+        self.key, sub = jax.random.split(self.key)
+        t0 = time.perf_counter()
+        params, opt, metrics = self.train_step(
+            self.state["params"], self.state["opt"], batch,
+            jnp.int32(step), sub)
+        metrics = jax.tree.map(float, jax.device_get(metrics))
+        dt = time.perf_counter() - t0
+        self.monitor.record(step, dt)
+        self.state = {"params": params, "opt": opt,
+                      "step": jnp.int32(step + 1)}
+        self.history.append({"step": step, "time_s": dt, **metrics})
+        if self.ckpt and (step + 1) % self.ckpt_every == 0:
+            self.ckpt.save(step + 1, self.state, block=False)
+        return metrics
+
+    def run(self, n_steps, *, log_every=10, max_restarts=3):
+        target = self.step + n_steps
+        while self.step < target:
+            try:
+                m = self._one_step()
+            except RuntimeError as e:
+                # node failure path: restore latest committed checkpoint
+                if self.restarts >= max_restarts or self.ckpt is None:
+                    raise
+                self.restarts += 1
+                self.ckpt.wait()
+                restored, step = self.ckpt.restore_latest(self.state)
+                if restored is None:
+                    self.state, self.axes = init_train_state(
+                        self.cfg, self.tcfg, self.key)
+                else:
+                    self.state = restored
+                print(f"[trainer] FAILURE at step ~{self.step} ({e}); "
+                      f"restored step {step}, restart #{self.restarts}")
+                continue
+            if log_every and self.step % log_every == 0:
+                print(f"[trainer] step {self.step:5d} "
+                      f"loss {m['loss']:.4f} lr {m['lr']:.2e}")
+        if self.ckpt:
+            self.ckpt.wait()
+        return self.history

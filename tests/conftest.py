@@ -1,0 +1,31 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_python(code, *, devices=1, timeout=420):
+    """Run a snippet in a subprocess with N fake host devices.
+
+    Multi-device tests must NOT set --xla_force_host_platform_device_count
+    in this process (smoke tests see 1 device) — so they fork."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices} "
+                        + env.get("XLA_FLAGS_EXTRA", ""))
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    if r.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={r.returncode})\n--- stdout ---\n"
+            f"{r.stdout[-4000:]}\n--- stderr ---\n{r.stderr[-4000:]}")
+    return r.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_python

@@ -1,0 +1,124 @@
+"""Per-arch smoke tests: reduced same-family configs, one fwd/train step on
+CPU, output shapes + finiteness; prefill/decode agreement with forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, list_configs, smoke_config
+from repro.models import lm
+
+ARCHS = [n for n in list_configs() if n != "streamsplit-audio"]
+
+
+def _batch(cfg, key, B=2, S=33):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    labels = jnp.concatenate([toks[:, 1:], -jnp.ones((B, 1), jnp.int32)], 1)
+    if cfg.family == "vlm":
+        emb = jax.random.normal(key, (B, S, cfg.d_model))
+        return {"embeds": emb, "labels": labels}, toks
+    return {"tokens": toks, "labels": labels}, toks
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = smoke_config(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params, axes = lm.init_lm(cfg, key)
+    batch, _ = _batch(cfg, key)
+    loss, metrics = lm.lm_loss(cfg, params, batch)
+    assert jnp.isfinite(loss), arch
+    assert metrics["hidden"].shape == (2, 33, cfg.d_model)
+    # one gradient step moves the loss
+    def f(p):
+        return lm.lm_loss(cfg, p, batch)[0]
+    g = jax.grad(f)(params)
+    gn = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+    p2 = jax.tree.map(lambda p, g: p - 1e-2 * g, params, g)
+    assert float(f(p2)) < float(loss)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode_consistency(arch):
+    cfg = smoke_config(get_config(arch))
+    key = jax.random.PRNGKey(1)
+    params, _ = lm.init_lm(cfg, key)
+    toks = jax.random.randint(key, (2, 17), 0, cfg.vocab)
+    if cfg.family == "vlm":
+        emb = jax.random.normal(key, (2, 16, cfg.d_model))
+        st, lg = lm.prefill(cfg, params, embeds=emb, max_len=24)
+        h, _ = lm.forward(cfg, params, embeds=emb)
+        full = lm.logits_from_hidden(cfg, params, h)[:, -1]
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full),
+                                   atol=2e-4)
+        return
+    st, lg = lm.prefill(cfg, params, tokens=toks[:, :16], max_len=24)
+    h, _ = lm.forward(cfg, params, tokens=toks)
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(lm.logits_from_hidden(cfg, params, h)[:, 15]),
+        atol=2e-4)
+    lg2, st2 = lm.decode_step(cfg, params, st, toks[:, 16])
+    np.testing.assert_allclose(
+        np.asarray(lg2),
+        np.asarray(lm.logits_from_hidden(cfg, params, h)[:, 16]), atol=2e-4)
+    assert int(st2["index"]) == 17
+
+
+def test_full_configs_match_assignment():
+    """The registered FULL configs carry the assigned hyperparameters."""
+    spec = {
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    }
+    for name, (L, d, H, KV, ff, V) in spec.items():
+        cfg = get_config(name)
+        assert cfg.n_layers == L and cfg.d_model == d
+        assert cfg.n_heads == H and cfg.n_kv_heads == KV
+        ff_actual = cfg.moe.d_ff_expert if (cfg.moe and name.startswith("kimi")) else cfg.d_ff
+        assert ff_actual == ff, name
+        assert cfg.vocab == V, name
+    m = get_config("mamba2-780m")
+    assert m.n_layers == 48 and m.d_model == 1536 and m.ssm.d_state == 128
+    assert m.vocab == 50304  # 50280 padded to /128 for 16-way vocab TP
+    z = get_config("zamba2-1.2b")
+    assert z.ssm.d_state == 64 and z.hybrid_period == 6
+    k = get_config("kimi-k2-1t-a32b")
+    assert k.moe.n_experts == 384 and k.moe.top_k == 8
+    a = get_config("arctic-480b")
+    assert a.moe.n_experts == 128 and a.moe.top_k == 2 and a.moe.dense_residual
+
+
+def test_param_counts_in_expected_range():
+    """Full-config param counts via eval_shape (no allocation)."""
+    import functools
+    expected = {
+        "qwen3-1.7b": (1.4e9, 2.2e9),
+        "qwen1.5-0.5b": (0.4e9, 0.7e9),
+        "gemma2-2b": (2.0e9, 3.3e9),
+        "nemotron-4-15b": (13e9, 18e9),
+        "mamba2-780m": (0.6e9, 1.0e9),
+        "zamba2-1.2b": (1.0e9, 1.6e9),
+        "musicgen-large": (1.8e9, 2.6e9),  # no cross-attn (stub frontend)
+        "llava-next-34b": (30e9, 40e9),
+        "arctic-480b": (420e9, 520e9),
+        "kimi-k2-1t-a32b": (0.95e12, 1.15e12),
+    }
+    for name, (lo, hi) in expected.items():
+        cfg = get_config(name)
+        shapes = jax.eval_shape(
+            functools.partial(lambda c, k: lm.init_lm(c, k)[0], cfg),
+            jax.random.PRNGKey(0))
+        n = sum(int(x.size) for x in jax.tree.leaves(shapes))
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"

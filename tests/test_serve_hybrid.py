@@ -1,0 +1,59 @@
+"""Cascade serving (uncertainty routing) + hybrid-loss variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hybrid import HybridCfg, hybrid_loss
+
+
+def test_cascade_demo_routes_both_tiers():
+    from repro.launch.serve import demo
+    stats = demo(n_batches=6, batch=6, seq=32)
+    assert stats.served_small + stats.served_large == 36
+    assert 0.0 < stats.escalation_rate < 1.0
+
+
+@pytest.mark.parametrize("variant", ["hybrid", "task_sw", "task_lap",
+                                     "mse", "kl"])
+def test_hybrid_variants_finite_and_differentiable(variant):
+    key = jax.random.PRNGKey(0)
+    z = jax.random.normal(key, (4, 20, 16))
+    z = z / jnp.linalg.norm(z, axis=-1, keepdims=True)
+
+    def f(z):
+        loss, parts = hybrid_loss(jax.random.PRNGKey(1), z,
+                                  HybridCfg(), variant=variant)
+        return loss
+
+    v, g = jax.value_and_grad(f)(z)
+    assert np.isfinite(float(v))
+    assert bool(jnp.isfinite(g).all())
+
+
+def test_hybrid_mask_changes_laplacian_only():
+    key = jax.random.PRNGKey(0)
+    z = jax.random.normal(key, (2, 30, 8))
+    mask = jnp.ones((2, 30)).at[:, 10:20].set(0.0)
+    _, p_full = hybrid_loss(jax.random.PRNGKey(1), z, HybridCfg())
+    _, p_mask = hybrid_loss(jax.random.PRNGKey(1), z, HybridCfg(), mask=mask)
+    assert float(p_full["sw"]) == pytest.approx(float(p_mask["sw"]))
+    assert float(p_full["lap"]) != pytest.approx(float(p_mask["lap"]))
+
+
+def test_audio_stream_structure():
+    from repro.data.audio_stream import AudioStream, StreamCfg, mel_frontend
+    s = AudioStream(StreamCfg(seed=0))
+    groups = []
+    for _ in range(300):
+        _, label, group = s.next_sample()
+        groups.append(group)
+    frac_bg = groups.count("background") / len(groups)
+    assert 0.45 < frac_bg < 0.75          # ~60% background mix
+    mel, label, _ = s.next_mel()
+    assert mel.shape[1] == 128 and mel.shape[0] >= 95
+    # determinism
+    s2 = AudioStream(StreamCfg(seed=0))
+    w1, l1, _ = AudioStream(StreamCfg(seed=1)).next_sample()
+    w2, l2, _ = AudioStream(StreamCfg(seed=1)).next_sample()
+    np.testing.assert_array_equal(w1, w2)

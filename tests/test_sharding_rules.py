@@ -1,0 +1,63 @@
+"""Arch-aware TP rules: head-divisibility fallbacks, FSDP, decode caches."""
+import pytest
+
+jax = pytest.importorskip("jax")
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.distributed.sharding import rules_for
+from repro.launch.mesh import make_test_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh16():
+    # single-device fake 16-way mesh is fine for spec computation
+    import numpy as np
+    dev = jax.devices()[0]
+    arr = np.array([dev] * 256).reshape(16, 16)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
+def test_divisible_heads_column_parallel(mesh16):
+    cfg = get_config("qwen3-1.7b")       # 16 q heads, 8 kv heads
+    r = rules_for(mesh16, cfg, batch=256, kind="train")
+    assert r.param_rules["heads"] == "model"      # 16 % 16 == 0
+    assert r.param_rules["kv_heads"] is None      # 8 % 16 != 0
+    assert r.param_rules["kv_in"] == "model"      # row-parallel fallback
+    assert r.act_rules["kv_seq"] == "model"       # decode cache seq-sharded
+
+
+def test_indivisible_heads_row_parallel(mesh16):
+    cfg = get_config("arctic-480b")       # 56 heads
+    r = rules_for(mesh16, cfg, batch=256, kind="train", fsdp=True)
+    assert r.param_rules["heads"] is None
+    assert r.param_rules["q_in"] == "model"
+    assert r.param_rules["o_hd"] == "model"
+    assert r.param_rules["embed"] == "data"       # FSDP
+    assert r.param_rules["q_hd"] == "data"        # head_dim 128 % 16 == 0
+
+
+def test_mha_fully_sharded(mesh16):
+    cfg = get_config("musicgen-large")    # 32/32 heads
+    r = rules_for(mesh16, cfg, batch=128, kind="decode")
+    assert r.param_rules["heads"] == "model"
+    assert r.param_rules["kv_heads"] == "model"
+    assert r.act_rules["kv_seq"] is None          # kv-head sharding suffices
+    assert r.act_rules["batch"] == "data"
+
+
+def test_batch_one_leaves_batch_unsharded(mesh16):
+    cfg = get_config("zamba2-1.2b")
+    r = rules_for(mesh16, cfg, batch=1, kind="decode")
+    assert r.act_rules["batch"] is None
+    assert r.act_rules["kv_seq"] == "data"        # 500k cache seq over data
+    assert r.act_rules["seq"] == "data"
+
+
+def test_spec_lookup_roundtrip(mesh16):
+    cfg = get_config("kimi-k2-1t-a32b")
+    r = rules_for(mesh16, cfg, batch=256, kind="train", fsdp=True)
+    spec = r.spec(("experts", "embed", "expert_mlp"), kind="param")
+    assert spec == P("model", "data", None)
+    spec = r.spec(("batch", "seq"), kind="act")
+    assert spec == P("data", None)
