@@ -1,0 +1,170 @@
+"""Fleet serving benchmark: batched multi-session refinement and cascade
+serving throughput vs. fleet size.
+
+Measures, for N ∈ {1, 8, 32, 128} concurrent sessions:
+
+- refine-steps/sec — one vmapped ``FleetRefiner.refine`` over the packed
+  ``(N, W, d)`` fleet vs. N sequential ``ServerRefiner.refine`` calls
+  (the seed's serving model: one dispatch per session);
+- sessions/sec   — end-to-end admission → ingest → batched refine;
+- requests/sec   — the batched two-sub-batch ``CascadeServer.handle``.
+
+Prints the standard ``name,us_per_call,derived`` CSV rows plus one
+``BENCH {...}`` JSON line for machine consumption.
+
+    PYTHONPATH=src python -m benchmarks.fleet_serve [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+
+W, DIM, N_CLASSES = 100, 64, 10
+SIZES = (1, 8, 32, 128)
+
+
+def _head():
+    def head_init(key):
+        return {"w": 0.01 * jax.random.normal(key, (DIM, N_CLASSES))}
+
+    def head_apply(p, z):
+        return z @ p["w"]
+
+    return head_init, head_apply
+
+
+def _fill(insert, rng, *, drop=0.1):
+    """Ingest W frames with ~10% network drops through `insert(t, z, label)`."""
+    for t in range(W):
+        if rng.random() < drop:
+            continue
+        insert(t, rng.normal(size=DIM).astype(np.float32), t % N_CLASSES)
+
+
+def bench_refine(n, *, iters):
+    """-> (sequential steps/s, fleet steps/s).  A "step" is one session's
+    refinement; both paths share identical buffer contents."""
+    from repro.core.fleet import FleetBuffer, FleetRefiner
+    from repro.core.server import ServerRefiner, TemporalBuffer
+    head_init, head_apply = _head()
+
+    buffers = []
+    fleet = FleetBuffer(capacity=n, window=W, dim=DIM)
+    for i in range(n):
+        rng = np.random.default_rng(i)
+        buf = TemporalBuffer(window=W, dim=DIM)
+        _fill(lambda t, z, l: buf.insert(t, z, label=l), rng)
+        buffers.append(buf)
+        sid = fleet.admit()
+        rng = np.random.default_rng(i)
+        _fill(lambda t, z, l: fleet.insert(sid, t, z, label=l), rng)
+
+    srv = ServerRefiner(head_init, head_apply, lr=1e-2)
+    flt = FleetRefiner(head_init, head_apply, lr=1e-2)
+
+    def seq_round(i):
+        for buf in buffers:
+            srv.refine(jax.random.PRNGKey(i), buf)
+
+    def fleet_round(i):
+        flt.refine(jax.random.PRNGKey(i), fleet)
+
+    out = []
+    for fn in (seq_round, fleet_round):
+        fn(0)                                   # warmup: compile
+        t0 = time.perf_counter()
+        for i in range(iters):
+            fn(1 + i)
+        dt = time.perf_counter() - t0
+        out.append(n * iters / dt)
+    return out
+
+
+def bench_sessions(n, *, iters):
+    """End-to-end fleet lifecycle: admit → ingest (batched) → refine →
+    evict.  -> sessions/sec."""
+    from repro.core.fleet import FleetBuffer, FleetRefiner
+    head_init, head_apply = _head()
+    fleet = FleetBuffer(capacity=n, window=W, dim=DIM)
+    flt = FleetRefiner(head_init, head_apply, lr=1e-2)
+    rng = np.random.default_rng(0)
+
+    def lifecycle(i):
+        sids = np.array([fleet.admit() for _ in range(n)])
+        for t in range(W):
+            keep = rng.random(n) > 0.1
+            if keep.any():
+                fleet.insert_batch(sids[keep], np.full(keep.sum(), t),
+                                   rng.normal(size=(int(keep.sum()), DIM)),
+                                   np.full(keep.sum(), t % N_CLASSES))
+        flt.refine(jax.random.PRNGKey(i), fleet)
+        for sid in sids:
+            fleet.evict(sid)
+
+    lifecycle(0)
+    t0 = time.perf_counter()
+    for i in range(iters):
+        lifecycle(1 + i)
+    return n * iters / (time.perf_counter() - t0)
+
+
+def bench_cascade(batch, *, iters, seq=32):
+    """Batched cascade serving -> requests/sec."""
+    from dataclasses import replace
+    from repro.configs.base import get_config, smoke_config
+    from repro.launch.serve import CascadeServer
+    from repro.models import lm
+    small = smoke_config(get_config("qwen1.5-0.5b"))
+    large = replace(smoke_config(get_config("qwen3-1.7b")),
+                    vocab=small.vocab, d_model=small.d_model, n_layers=4)
+    key = jax.random.PRNGKey(0)
+    sp, _ = lm.init_lm(small, key)
+    lp, _ = lm.init_lm(large, key)
+    srv = CascadeServer(small, sp, large, lp, threshold="auto")
+    toks = [jax.random.randint(jax.random.PRNGKey(i), (batch, seq), 0,
+                               small.vocab) for i in range(iters + 1)]
+    srv.handle(toks[0])
+    t0 = time.perf_counter()
+    for t in toks[1:]:
+        srv.handle(t)
+    return batch * iters / (time.perf_counter() - t0)
+
+
+def run_all(*, quick=False):
+    sizes = [n for n in SIZES if not (quick and n > 32)]
+    result = {"refine": {}, "sessions": {}, "cascade": {}}
+    for n in sizes:
+        iters = max(3, 96 // n)
+        seq_sps, fleet_sps = bench_refine(n, iters=iters)
+        speedup = fleet_sps / seq_sps
+        result["refine"][n] = {"sequential_steps_per_s": seq_sps,
+                               "fleet_steps_per_s": fleet_sps,
+                               "speedup": speedup}
+        row(f"fleet.refine.seq.N{n}", 1e6 / seq_sps, "steps/s baseline")
+        row(f"fleet.refine.batched.N{n}", 1e6 / fleet_sps,
+            f"{speedup:.1f}x vs sequential")
+    for n in sizes:
+        sps = bench_sessions(n, iters=max(2, 16 // n))
+        result["sessions"][n] = {"sessions_per_s": sps}
+        row(f"fleet.lifecycle.N{n}", 1e6 / sps, "admit+ingest+refine+evict")
+    for b in sizes:
+        rps = bench_cascade(b, iters=max(3, 48 // b))
+        result["cascade"][b] = {"requests_per_s": rps}
+        row(f"fleet.cascade.B{b}", 1e6 / rps, "two-tier batched handle")
+    print("BENCH " + json.dumps({"bench": "fleet_serve", "window": W,
+                                 "dim": DIM, **result}))
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the N=128 points")
+    args = ap.parse_args()
+    run_all(quick=args.quick)

@@ -1,0 +1,32 @@
+"""jax API compatibility shims.
+
+The codebase targets current jax (`jax.shard_map`, ``check_vma``,
+``make_mesh(..., axis_types=...)``); CI and some dev boxes pin older
+jaxlibs where shard_map still lives in ``jax.experimental`` with the
+``check_rep`` spelling and meshes have no axis types.  Route every
+mesh/shard_map construction through here instead of sniffing versions at
+call sites.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    """``jax.shard_map`` with graceful fallback to the experimental API
+    (where ``check_vma`` was named ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))

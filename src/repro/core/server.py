@@ -89,7 +89,8 @@ class ServerRefiner:
             task = jnp.sum(ce * w) / jnp.maximum(jnp.sum(w), 1.0)
             reg, parts = hybrid_loss(key, z, cfg, mask=mask, variant="hybrid")
             # hybrid_loss's task term is 0 here (no pairs); add CE on top
-            return task + reg, {"task": task, **parts}
+            # (and report the CE, not hybrid_loss's zero placeholder)
+            return task + reg, {**parts, "task": task}
 
         self._grad = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
 

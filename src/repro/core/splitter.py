@@ -37,6 +37,10 @@ class SplitEngine:
             self._server[k] = jax.jit(partial(self._server_fn, k))
 
     def _edge_fn(self, k, params, mel):
+        if k == 0:
+            # k=0 is raw-input offload: the wire carries the model input and
+            # the server runs the stem — matches boundary_bytes(cfg)[0].
+            return mel
         x = enc.apply_stem(self.cfg, params, mel)
         x = enc.apply_blocks(self.cfg, params, x, 0, k)
         if k == self.cfg.n_blocks:
@@ -44,6 +48,8 @@ class SplitEngine:
         return x
 
     def _server_fn(self, k, params, x):
+        if k == 0:
+            x = enc.apply_stem(self.cfg, params, x)
         x = enc.apply_blocks(self.cfg, params, x, k, self.cfg.n_blocks)
         return enc.apply_head(self.cfg, params, x)
 
@@ -119,6 +125,7 @@ def split_pipeline_podwise(mesh, stage_fn, params_stacked, x_microbatches,
     x_spec = P(None, batch_axes, *([None] * (ndim - 2)))
     in_specs = (x_spec, P("pod"))
     out_specs = x_spec
-    return jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)(
+    from repro.compat import shard_map
+    return shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_vma=False)(
         x_microbatches, params_stacked)

@@ -35,6 +35,76 @@ def diff_sort(x, axis=0):
     return jnp.take_along_axis(x, idx, axis=axis)
 
 
+_SORT_PAD = 3.0e38
+
+
+def _bitonic_sort_with_perm(v):
+    """Stable ascending sort of each column of v (N, M), N a power of two.
+
+    A bitonic network whose partner exchange a[i ^ j] is a reshape+flip
+    block swap (a row *gather* here makes XLA compile time explode
+    combinatorially), carrying the permutation as a payload with an
+    index tie-break so it stays a true permutation on equal values.
+    The payload-free twin for Pallas lives in
+    kernels/swd_kernel.py::_bitonic_sort_cols — keep exchange-step
+    changes in sync.
+    -> (sorted (N, M), perm (N, M)) with sorted[r, c] = v[perm[r, c], c].
+    """
+    N, M = v.shape
+    assert (N & (N - 1)) == 0, "power of two"
+    row = jax.lax.broadcasted_iota(jnp.int32, (N, 1), 0)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (N, M), 0)
+    k = 2
+    while k <= N:
+        j = k // 2
+        while j >= 1:
+            swap = lambda a: jnp.flip(
+                a.reshape(N // (2 * j), 2, j, M), 1).reshape(N, M)
+            vp, ip = swap(v), swap(idx)
+            keep_min = ((row & j) == 0) == ((row & k) == 0)
+            less = (v < vp) | ((v == vp) & (idx < ip))   # stable total order
+            take_self = keep_min == less
+            v = jnp.where(take_self, v, vp)
+            idx = jnp.where(take_self, idx, ip)
+            j //= 2
+        k *= 2
+    return v, idx
+
+
+@jax.custom_vjp
+def bitonic_diff_sort(x):
+    """``diff_sort(x, axis=0)`` for hot paths: identical values and
+    (sub)gradient, but the forward runs a bitonic network instead of an
+    XLA variadic sort (~5x faster per column batch on CPU) and the VJP is
+    a single scatter through the recorded permutation.
+
+    Inputs must be finite and below ~3e38: non-power-of-two heights pad
+    with a +3.0e38 sentinel that must sort strictly last (NaN/inf would
+    silently displace real rows — diff_sort handles those, this doesn't).
+    """
+    return _bitonic_sort_fwd(x)[0]
+
+
+def _bitonic_sort_fwd(x):
+    n, m = x.shape
+    n_pow2 = 1 << max((n - 1).bit_length(), 0)
+    v = x.astype(jnp.float32)
+    if n_pow2 != n:   # +BIG pad rows sort to the bottom, then slice off
+        v = jnp.concatenate(
+            [v, jnp.full((n_pow2 - n, m), _SORT_PAD, jnp.float32)], 0)
+    srt, perm = _bitonic_sort_with_perm(v)
+    return srt[:n], (perm[:n], n)
+
+
+def _bitonic_sort_bwd(res, g):
+    perm, n = res
+    cols = jax.lax.broadcasted_iota(jnp.int32, g.shape, 1)
+    return (jnp.zeros((n, g.shape[1]), g.dtype).at[perm, cols].set(g),)
+
+
+bitonic_diff_sort.defvjp(_bitonic_sort_fwd, _bitonic_sort_bwd)
+
+
 def sliced_w2(x, y, dirs):
     """Empirical SW₂² between point sets x (N,d), y (N,d) over `dirs` (M,d)."""
     px = diff_sort(x.astype(jnp.float32) @ dirs.T, axis=0)   # (N, M)

@@ -39,12 +39,19 @@ def make_compressed_dp_step(mesh, loss_fn, opt_update, *, axis="data",
     def batch_spec(batch):
         return jax.tree.map(lambda _: P(axis), batch)
 
+    jitted = {}   # one jitted step per batch tree structure — rebuilding
+                  # per call would retrace/recompile every training step
+
     def step(params, opt_state, ef, batch):
-        return jax.jit(jax.shard_map(
-            local_step, mesh=mesh,
-            in_specs=(P(), P(), P(), batch_spec(batch)),
-            out_specs=(P(), P(), P()),
-            check_vma=False))(params, opt_state, ef, batch)
+        structure = jax.tree.structure(batch)
+        if structure not in jitted:
+            from repro.compat import shard_map
+            jitted[structure] = jax.jit(shard_map(
+                local_step, mesh=mesh,
+                in_specs=(P(), P(), P(), batch_spec(batch)),
+                out_specs=(P(), P(), P()),
+                check_vma=False))
+        return jitted[structure](params, opt_state, ef, batch)
 
     return step
 

@@ -22,18 +22,26 @@ BIG = 3.0e38
 
 
 def _bitonic_sort_cols(a):
-    """Sort each column of a (N, M) array ascending via a bitonic network."""
-    N = a.shape[0]
+    """Sort each column of a (N, M) array ascending via a bitonic network.
+
+    The partner exchange a[i ^ j] is a *block swap*: XOR with the
+    power-of-two stride j flips the bit of weight j, i.e. swaps adjacent
+    row-blocks of size j — expressed as reshape + flip rather than a
+    gather (row-gathers in the unrolled network make XLA compile time
+    explode combinatorially: minutes at N=32, hours beyond).  The
+    permutation-carrying twin lives in core/swd.py::_bitonic_sort_with_perm
+    — keep exchange-step changes in sync."""
+    N, M = a.shape
     assert (N & (N - 1)) == 0, "power of two"
     idx = jax.lax.broadcasted_iota(jnp.int32, a.shape, 0)
     k = 2
     while k <= N:
         j = k // 2
         while j >= 1:
-            partner = idx ^ j
-            a_part = jnp.take_along_axis(a, partner, axis=0)
+            a_part = jnp.flip(
+                a.reshape(N // (2 * j), 2, j, M), axis=1).reshape(N, M)
             dir_up = (idx & k) == 0
-            keep_min = (idx < partner) == dir_up
+            keep_min = ((idx & j) == 0) == dir_up   # idx < (idx ^ j)
             lo = jnp.minimum(a, a_part)
             hi = jnp.maximum(a, a_part)
             a = jnp.where(keep_min, lo, hi)

@@ -24,13 +24,25 @@ from repro.models import lm
 class CascadeStats:
     served_small: int = 0
     served_large: int = 0
-    small_ms: float = 0.0
-    large_ms: float = 0.0
+    route_ms: float = 0.0   # shared: embed forward + GMM update + routing
+    small_ms: float = 0.0   # easy-tier answer materialization only
+    large_ms: float = 0.0   # escalated sub-batch forward
+    small_batches: int = 0
+    large_batches: int = 0
 
     @property
     def escalation_rate(self):
         n = self.served_small + self.served_large
         return self.served_large / n if n else 0.0
+
+
+def _bucket(n):
+    """Next power of two — pads tier sub-batches to a handful of shapes so
+    each tier compiles O(log B) executables instead of one per size."""
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
 
 
 class CascadeServer:
@@ -40,6 +52,8 @@ class CascadeServer:
     def __init__(self, small_cfg, small_params, large_cfg, large_params,
                  *, threshold="auto", auto_quantile=0.75, gmm_components=64,
                  seed=0):
+        assert small_cfg.vocab == large_cfg.vocab, \
+            "cascade tiers must share a vocab (one logits buffer)"
         self.small_cfg, self.small_params = small_cfg, small_params
         self.large_cfg, self.large_params = large_cfg, large_params
         self.threshold = threshold          # float, or "auto" (calibrated
@@ -49,44 +63,71 @@ class CascadeServer:
         self.gmm = gmm_mod.init_gmm(key, gmm_components, small_cfg.d_model)
         self.stats = CascadeStats()
 
-        def embed_and_uncertainty(params, tokens):
+        def embed_and_small_logits(params, tokens):
+            # ONE small forward serves double duty: pooled embedding for
+            # the GMM uncertainty AND last-token logits, so easy requests
+            # are already answered by the time routing happens.
             h, _ = lm.forward(small_cfg, params, tokens=tokens)
             z = h.mean(axis=1)
-            z = z / jnp.maximum(jnp.linalg.norm(z, -1, keepdims=True), 1e-6)
-            return z
+            z = z / jnp.maximum(
+                jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-6)
+            logits = lm.logits_from_hidden(small_cfg, params,
+                                           h[:, -1:, :])[:, -1]
+            return z, logits
 
-        self._embed = jax.jit(embed_and_uncertainty)
-        self._small_step = jax.jit(
-            lambda p, t: lm.forward(small_cfg, p, tokens=t))
-        self._large_step = jax.jit(
-            lambda p, t: lm.forward(large_cfg, p, tokens=t))
+        self._embed = jax.jit(embed_and_small_logits)
+
+        def large_step(p, t):
+            h, _ = lm.forward(large_cfg, p, tokens=t)
+            return lm.logits_from_hidden(large_cfg, p, h[:, -1:, :])[:, -1]
+
+        self._large_step = jax.jit(large_step)
+
+    def _serve_large(self, tokens, idx, out):
+        """Run the large tier ONCE on its padded sub-batch and scatter."""
+        t0 = time.perf_counter()
+        pad = _bucket(len(idx))
+        sub = np.asarray(tokens)[idx]
+        if pad > len(idx):  # repeat-pad: every shape bucket stays compiled
+            sub = np.concatenate(
+                [sub, np.broadcast_to(sub[:1], (pad - len(idx),)
+                                      + sub.shape[1:])])
+        logits = np.asarray(
+            self._large_step(self.large_params, jnp.asarray(sub)))[:len(idx)]
+        out[idx] = logits
+        self.stats.served_large += len(idx)
+        self.stats.large_ms += (time.perf_counter() - t0) * 1e3
+        self.stats.large_batches += 1
 
     def handle(self, tokens, *, update_gmm=True):
-        """tokens: (B, S). Routes each request; returns (logits, routed_to)."""
-        z = self._embed(self.small_params, tokens)
+        """tokens: (B, S).  Routes the batch; returns (logits, routed_to).
+
+        Easy requests are answered by the small logits computed alongside
+        the uncertainty embedding (zero extra forwards); hard requests are
+        grouped into ONE padded large-tier sub-batch — never one forward
+        per request.
+        """
+        t0 = time.perf_counter()
+        z, small_logits = self._embed(self.small_params, tokens)
         u = gmm_mod.normalized_entropy(self.gmm, z)
         if update_gmm:
             self.gmm = gmm_mod.em_update(self.gmm, z)
         if self.threshold == "auto":
             self.threshold = float(jnp.quantile(u, self.auto_quantile))
-        hard = np.asarray(u > self.threshold)
-        out = []
-        for i, is_hard in enumerate(hard):
-            t0 = time.perf_counter()
-            if is_hard:
-                h, _ = self._large_step(self.large_params, tokens[i:i + 1])
-                logits = lm.logits_from_hidden(self.large_cfg,
-                                               self.large_params, h)
-                self.stats.served_large += 1
-                self.stats.large_ms += (time.perf_counter() - t0) * 1e3
-            else:
-                h, _ = self._small_step(self.small_params, tokens[i:i + 1])
-                logits = lm.logits_from_hidden(self.small_cfg,
-                                               self.small_params, h)
-                self.stats.served_small += 1
-                self.stats.small_ms += (time.perf_counter() - t0) * 1e3
-            out.append(np.asarray(logits[0, -1]))
-        return np.stack(out), hard
+        hard = np.asarray(u > self.threshold)   # host sync: routing is done
+        self.stats.route_ms += (time.perf_counter() - t0) * 1e3
+        out = np.zeros((len(hard), self.small_cfg.vocab), np.float32)
+        easy_idx = np.where(~hard)[0]
+        hard_idx = np.where(hard)[0]
+        if easy_idx.size:
+            t1 = time.perf_counter()
+            out[easy_idx] = np.asarray(small_logits)[easy_idx]
+            self.stats.served_small += easy_idx.size
+            self.stats.small_ms += (time.perf_counter() - t1) * 1e3
+            self.stats.small_batches += 1
+        if hard_idx.size:
+            self._serve_large(tokens, hard_idx, out)
+        return out, hard
 
 
 def demo(n_batches=8, batch=8, seq=64):

@@ -29,3 +29,12 @@ def run_python(code, *, devices=1, timeout=420):
 @pytest.fixture
 def subproc():
     return run_python
+
+
+def pytest_collection_modifyitems(config, items):
+    """Every test that forks a worker via the ``subproc`` fixture pays
+    interpreter + jax re-import + XLA recompile per call — tag them all
+    ``slow`` so `-m "not slow"` gives the fast tier-1 gate (TESTING.md)."""
+    for item in items:
+        if "subproc" in getattr(item, "fixturenames", ()):
+            item.add_marker(pytest.mark.slow)

@@ -8,9 +8,9 @@ CODE = """
 import os
 os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={devices}'
 import jax
+from repro.compat import make_mesh
 from repro.launch.dryrun import build_and_compile
-mesh = jax.make_mesh({mesh_shape}, {mesh_axes},
-                     axis_types=(jax.sharding.AxisType.Auto,) * {n_axes})
+mesh = make_mesh({mesh_shape}, {mesh_axes})
 rec = build_and_compile('{arch}', '{shape}', mesh, overrides={overrides})
 r = rec['roofline']
 assert r['compute_s'] > 0 and r['bottleneck'] in ('compute', 'memory',

@@ -1,0 +1,218 @@
+"""Fleet serving: buffer edge semantics, admission/eviction, and the
+FleetRefiner == ServerRefiner N=1 parity contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fleet import (FleetBuffer, FleetFullError, FleetRefiner,
+                              T_SENTINEL)
+from repro.core.server import ServerRefiner, TemporalBuffer
+
+DIM = 8
+
+
+def _head():
+    n_classes = 4
+
+    def head_init(key):
+        return {"w": 0.01 * jax.random.normal(key, (DIM, n_classes))}
+
+    def head_apply(p, z):
+        return z @ p["w"]
+
+    return head_init, head_apply
+
+
+# ---------------------------------------------------------------------------
+# TemporalBuffer edge semantics (single stream)
+# ---------------------------------------------------------------------------
+
+def test_temporal_buffer_empty_snapshot():
+    buf = TemporalBuffer(window=6, dim=3)
+    z, mask, labels = buf.snapshot()
+    assert mask.sum() == 0 and (labels == -1).all() and (z == 0).all()
+    assert buf.fill_fraction == 0.0
+
+
+def test_temporal_buffer_single_frame_no_sentinel_collision():
+    """With one frame at t=0 the snapshot window spans negative indices
+    (-W+1..0); the empty-slot sentinel must never alias those."""
+    W = 10
+    buf = TemporalBuffer(window=W, dim=2)
+    buf.insert(0, np.ones(2))
+    z, mask, _ = buf.snapshot()
+    assert mask.sum() == 1 and mask[-1] == 1.0  # newest is last
+    # sentinel lies far below any reachable window index
+    assert T_SENTINEL < -(W + 1) and (buf.t != -W).all()
+    assert buf.fill_fraction == pytest.approx(1.0 / W)
+
+
+@pytest.mark.parametrize("window,n_frames", [(5, 12), (7, 7), (4, 101)])
+def test_temporal_buffer_wraparound_keeps_last_window(window, n_frames):
+    buf = TemporalBuffer(window=window, dim=1)
+    for t in range(n_frames):
+        buf.insert(t, [float(t)])
+    z, mask, _ = buf.snapshot()
+    assert mask.sum() == window
+    np.testing.assert_array_equal(
+        z[:, 0], np.arange(n_frames - window, n_frames))
+
+
+def test_temporal_buffer_gaps_after_drops():
+    buf = TemporalBuffer(window=8, dim=1)
+    kept = [0, 1, 4, 6]          # 2, 3, 5, 7 dropped by the network
+    for t in kept:
+        buf.insert(t, [float(t)])
+    z, mask, labels = buf.snapshot()
+    # window spans 0..7 (newest=6 => lo=-1): mask marks exactly the kept
+    present = np.where(mask > 0)[0]
+    np.testing.assert_array_equal(z[present, 0], kept)
+    assert (labels[mask == 0] == -1).all()
+    assert buf.fill_fraction == pytest.approx(len(kept) / 8)
+
+
+def test_temporal_buffer_stale_frames_expire_not_resurface():
+    """A slot whose tenant expired must read as a gap even though the slot
+    still physically holds the old value."""
+    buf = TemporalBuffer(window=4, dim=1)
+    buf.insert(0, [0.0])
+    buf.insert(5, [5.0])         # slot 1; frames 2..4 never arrived
+    z, mask, _ = buf.snapshot()  # window = 2..5
+    assert mask.sum() == 1 and z[mask > 0, 0] == [5.0]
+
+
+# ---------------------------------------------------------------------------
+# FleetBuffer: same invariants, plus admission/eviction
+# ---------------------------------------------------------------------------
+
+def test_fleet_rows_match_independent_temporal_buffers():
+    """Row semantics == TemporalBuffer, for every row, same drop pattern."""
+    W, N = 6, 4
+    fleet = FleetBuffer(capacity=N, window=W, dim=2)
+    singles = [TemporalBuffer(window=W, dim=2) for _ in range(N)]
+    sids = [fleet.admit() for _ in range(N)]
+    rng = np.random.default_rng(0)
+    for t in range(15):
+        for i, sid in enumerate(sids):
+            if rng.random() < 0.35:      # per-session drops
+                continue
+            z = rng.normal(size=2)
+            fleet.insert(sid, t + i, z, label=t % 3)
+            singles[i].insert(t + i, z, label=t % 3)
+    zf, mf, lf = fleet.snapshot()
+    for i, sid in enumerate(sids):
+        zs, ms, ls = singles[i].snapshot()
+        np.testing.assert_allclose(zf[sid], zs)
+        np.testing.assert_array_equal(mf[sid], ms)
+        np.testing.assert_array_equal(lf[sid], ls)
+        assert fleet.fill_fraction(sid) == pytest.approx(
+            singles[i].fill_fraction)
+
+
+def test_fleet_admission_eviction_o1_and_reuse():
+    fleet = FleetBuffer(capacity=3, window=4, dim=1)
+    a, b, c = fleet.admit(), fleet.admit(), fleet.admit()
+    assert {a, b, c} == {0, 1, 2} and fleet.n_active == 3
+    with pytest.raises(FleetFullError):
+        fleet.admit()
+    fleet.insert(b, 7, [1.0], label=2)
+    fleet.evict(b)
+    assert fleet.n_active == 2
+    # evicted row contributes nothing to the snapshot
+    _, mask, labels = fleet.snapshot()
+    assert mask[b].sum() == 0 and (labels[b] == -1).all()
+    with pytest.raises(KeyError):
+        fleet.insert(b, 8, [2.0])
+    with pytest.raises(KeyError):
+        fleet.evict(b)
+    # the freed row is reused and starts clean (no stale frames)
+    b2 = fleet.admit()
+    assert b2 == b
+    _, mask, _ = fleet.snapshot()
+    assert mask[b2].sum() == 0
+    assert (fleet.t[b2] == T_SENTINEL).all()
+
+
+def test_fleet_insert_batch_matches_loop():
+    fleet1 = FleetBuffer(capacity=4, window=5, dim=3)
+    fleet2 = FleetBuffer(capacity=4, window=5, dim=3)
+    for f in (fleet1, fleet2):
+        for _ in range(4):
+            f.admit()
+    rng = np.random.default_rng(1)
+    sids = np.array([0, 1, 3])
+    ts = np.array([9, 2, 4])
+    zs = rng.normal(size=(3, 3))
+    labs = np.array([1, -1, 0])
+    for s, t, z, l in zip(sids, ts, zs, labs):
+        fleet1.insert(s, t, z, label=l)
+    fleet2.insert_batch(sids, ts, zs, labs)
+    for arr1, arr2 in ((fleet1.z, fleet2.z), (fleet1.t, fleet2.t),
+                       (fleet1.label, fleet2.label),
+                       (fleet1.newest, fleet2.newest)):
+        np.testing.assert_array_equal(arr1, arr2)
+
+
+def test_fleet_inactive_rows_masked_out_of_refine():
+    """Sessions admitted but empty / evicted must not move the shared head:
+    per-session losses are finite and the mean covers active rows only."""
+    head_init, head_apply = _head()
+    fleet = FleetBuffer(capacity=4, window=8, dim=DIM)
+    sid = fleet.admit()
+    rng = np.random.default_rng(0)
+    for t in range(8):
+        fleet.insert(sid, t, rng.normal(size=DIM), label=t % 4)
+    ref = FleetRefiner(head_init, head_apply, lr=0.1)
+    loss, parts, per = ref.refine(jax.random.PRNGKey(0), fleet)
+    assert np.isfinite(per).all() and np.isfinite(loss)
+    # mean-over-active == the single active session's loss
+    assert loss == pytest.approx(float(per[sid]), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# N=1 parity: FleetRefiner step == ServerRefiner step (fp32 tolerance)
+# ---------------------------------------------------------------------------
+
+def test_fleet_refiner_n1_matches_server_refiner():
+    head_init, head_apply = _head()
+    srv = ServerRefiner(head_init, head_apply, lr=0.5)
+    flt = FleetRefiner(head_init, head_apply, lr=0.5)
+    buf = TemporalBuffer(window=32, dim=DIM)
+    fleet = FleetBuffer(capacity=1, window=32, dim=DIM)
+    sid = fleet.admit()
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(4, DIM))
+    for t in range(40):
+        if t % 7 == 3:
+            continue            # leave gaps
+        z = centers[t % 4] + 0.1 * rng.normal(size=DIM)
+        buf.insert(t, z, label=t % 4)
+        fleet.insert(sid, t, z, label=t % 4)
+    for i in range(5):
+        key = jax.random.PRNGKey(i)
+        loss_s, parts_s = srv.refine(key, buf)
+        loss_f, parts_f, _ = flt.refine(key, fleet)
+        assert loss_f == pytest.approx(loss_s, abs=1e-5)
+        for k in parts_s:
+            assert parts_f[k] == pytest.approx(parts_s[k], abs=1e-5)
+    for a, b in zip(jax.tree.leaves(srv.state.params),
+                    jax.tree.leaves(flt.state.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_fleet_refiner_reduces_loss_across_sessions():
+    head_init, head_apply = _head()
+    fleet = FleetBuffer(capacity=8, window=16, dim=DIM)
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(4, DIM))
+    for _ in range(6):
+        sid = fleet.admit()
+        for t in range(16):
+            if (t + sid) % 5 == 2:
+                continue
+            fleet.insert(sid, t, centers[t % 4] + 0.1 * rng.normal(size=DIM),
+                         label=t % 4)
+    ref = FleetRefiner(head_init, head_apply, lr=0.5)
+    losses = [ref.refine(jax.random.PRNGKey(i), fleet)[0] for i in range(25)]
+    assert losses[-1] < losses[0] * 0.8

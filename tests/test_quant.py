@@ -3,14 +3,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.quant.int8 import dequantize, fake_quant, quant_error, quantize
 
 
-@settings(max_examples=40, deadline=None)
-@given(n=st.integers(2, 500), scale=st.floats(1e-3, 1e3),
-       shift=st.floats(-100, 100), seed=st.integers(0, 10_000))
+# seeded sweep over (length, dynamic range, zero-point shift): the scale
+# axis spans six decades and the shift axis forces large asymmetric
+# zero points in both directions
+@pytest.mark.parametrize("n,scale,shift,seed", [
+    (2, 1e-3, 0.0, 0), (2, 1e3, 100.0, 1), (500, 1e-3, -100.0, 2),
+    (500, 1e3, 0.0, 3), (3, 1.0, -100.0, 4), (17, 0.05, 7.5, 5),
+    (64, 10.0, -33.3, 6), (128, 300.0, 99.0, 7), (250, 0.01, 55.0, 8),
+    (400, 2.5, -0.1, 9), (31, 1e2, -64.0, 1234), (499, 0.5, 100.0, 10_000),
+])
 def test_roundtrip_error_bounded_by_half_step(n, scale, shift, seed):
     x = scale * jax.random.normal(jax.random.PRNGKey(seed), (n,)) + shift
     t = quantize(x)

@@ -3,7 +3,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import swd as S
 
@@ -56,8 +55,12 @@ def test_swd_beats_mmd_sensitivity():
     assert sw[0] / sw[1] > mmd[0] / mmd[1]
 
 
-@settings(max_examples=15, deadline=None)
-@given(n=st.integers(8, 128), d=st.integers(2, 32), m=st.integers(1, 32))
+# seeded sweep over (samples, dim, projections) — range corners + interiors
+@pytest.mark.parametrize("n,d,m", [
+    (8, 2, 1), (8, 32, 32), (128, 2, 1), (128, 32, 32),
+    (16, 8, 4), (33, 5, 7), (64, 16, 50), (100, 3, 2),
+    (9, 31, 13), (127, 2, 32),
+])
 def test_sliced_w2_nonneg_and_zero_on_identical(n, d, m):
     key = jax.random.PRNGKey(n * d + m)
     x = jax.random.normal(key, (n, d))
@@ -65,6 +68,22 @@ def test_sliced_w2_nonneg_and_zero_on_identical(n, d, m):
     assert float(S.sliced_w2(x, x, dirs)) <= 1e-6
     y = jax.random.normal(jax.random.PRNGKey(7), (n, d))
     assert float(S.sliced_w2(x, y, dirs)) >= 0.0
+
+
+# (samples, dirs) sweep: pow2 / non-pow2 / degenerate heights, with ties
+@pytest.mark.parametrize("n,m", [(100, 50), (64, 8), (5, 3), (1, 2),
+                                 (128, 1), (33, 7)])
+def test_bitonic_diff_sort_matches_diff_sort(n, m):
+    """The fleet hot path's sort must equal diff_sort in value AND
+    (sub)gradient — including on duplicate values (stable tie-break)."""
+    x = jax.random.normal(jax.random.PRNGKey(n * m), (n, m))
+    x = jnp.round(x * 4) / 4      # force ties
+    np.testing.assert_array_equal(np.asarray(S.bitonic_diff_sort(x)),
+                                  np.asarray(S.diff_sort(x, axis=0)))
+    tgt = jnp.linspace(-1.0, 1.0, n)[:, None] * jnp.ones((1, m))
+    g1 = jax.grad(lambda x: jnp.mean((S.bitonic_diff_sort(x) - tgt) ** 2))(x)
+    g2 = jax.grad(lambda x: jnp.mean((S.diff_sort(x, axis=0) - tgt) ** 2))(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-7)
 
 
 def test_w1_exact_translation():

@@ -1,0 +1,76 @@
+"""Wire accounting: SplitEngine's measured wire_bytes must agree with the
+boundary_bytes-based cost model in core/env.py for every split index k,
+including the k=L no-offload and the quantize_wire=False paths."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.env import EMBED_BYTES, RAW_PCM_BYTES, EdgeCloudEnv, EnvCfg
+from repro.core.splitter import SplitEngine
+from repro.models.audio_encoder import (AudioEncCfg, boundary_bytes,
+                                        init_audio_encoder)
+
+CFG = AudioEncCfg(widths=(16, 16, 32, 32), strides=(1, 2, 1, 2),
+                  n_mels=32, frames=40, d_embed=32, groups=4)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init_audio_encoder(CFG, jax.random.PRNGKey(0))
+    B = 2
+    mel = jax.random.normal(jax.random.PRNGKey(1), (B, CFG.frames, CFG.n_mels))
+    return params, mel, B
+
+
+def test_engine_int8_wire_matches_boundary_bytes_every_k(setup):
+    params, mel, B = setup
+    eng = SplitEngine(CFG, quantize_wire=True)
+    per_sample = boundary_bytes(CFG, dtype_bytes=1)
+    for k in range(CFG.n_blocks):
+        _, wire = eng.run(params, mel, k)
+        # +8: per-tensor scale/zero header of the INT8 wire format
+        assert wire == B * per_sample[k] + 8, f"k={k}"
+
+
+def test_engine_fp32_wire_matches_boundary_bytes_every_k(setup):
+    params, mel, B = setup
+    eng = SplitEngine(CFG, quantize_wire=False)
+    per_sample = boundary_bytes(CFG, dtype_bytes=4)
+    for k in range(CFG.n_blocks):
+        _, wire = eng.run(params, mel, k)
+        assert wire == B * per_sample[k], f"k={k}"
+
+
+def test_engine_k_equals_L_ships_nothing(setup):
+    """k=L is fully local: the embedding syncs lazily (core/sync.py), so the
+    synchronous split link carries zero bytes on both wire formats."""
+    params, mel, _ = setup
+    for q in (True, False):
+        _, wire = SplitEngine(CFG, quantize_wire=q).run(
+            params, mel, CFG.n_blocks)
+        assert wire == 0
+
+
+def test_env_wire_table_matches_boundary_bytes_every_k():
+    env = EdgeCloudEnv(EnvCfg())
+    enc = env.cfg.enc
+    L = env.L
+    b1 = boundary_bytes(enc, dtype_bytes=1)
+    b4 = boundary_bytes(enc, dtype_bytes=4)
+    for k in range(1, L):
+        assert env.wire_int8[k] == b1[k], f"k={k}"
+        assert env.wire_fp32[k] == b4[k], f"k={k}"
+    # endpoints: k=0 ships raw PCM (the audio precedes the mel frontend);
+    # k=L accounts only the lazily-synced embedding
+    assert env.wire_int8[0] == RAW_PCM_BYTES == env.wire_fp32[0]
+    assert env.wire_int8[L] == EMBED_BYTES
+    assert env.wire_fp32[L] == 4 * EMBED_BYTES
+
+
+def test_env_step_costs_use_the_wire_table_every_k():
+    env = EdgeCloudEnv(EnvCfg())
+    for k in range(env.L + 1):
+        for quantize, table in ((True, env.wire_int8),
+                                (False, env.wire_fp32)):
+            *_, wire, _ = env.step_costs(k, quantize=quantize)
+            assert wire == table[k], f"k={k} quantize={quantize}"
