@@ -21,13 +21,14 @@ def main() -> None:
                     help="skip the slowest (training-based) benches")
     args = ap.parse_args()
 
-    from benchmarks import (fleet_serve, kernels_bench, quality_tables,
-                            system_tables)
+    from benchmarks import (fleet_serve, gateway_serve, kernels_bench,
+                            quality_tables, system_tables)
     print("name,us_per_call,derived")
     t0 = time.time()
     suites = [("system", system_tables.run_all),
               ("kernels", kernels_bench.run_all),
-              ("fleet", lambda: fleet_serve.run_all(quick=args.quick))]
+              ("fleet", lambda: fleet_serve.run_all(quick=args.quick)),
+              ("gateway", lambda: gateway_serve.run_all(quick=args.quick))]
     if not args.quick:
         suites.insert(1, ("quality", quality_tables.run_all))
     for name, fn in suites:

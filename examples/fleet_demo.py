@@ -1,33 +1,35 @@
 """Fleet serving demo: 32 heterogeneous simulated clients (Pi4 + M2 over
-mixed network profiles) driving one shared server through the full fleet
-lifecycle — admission -> per-client split decisions + ingest -> batched
-vmapped refinement -> eviction.
+mixed network profiles) driving one gateway through the full fleet
+lifecycle — QoS-classed admission -> per-client split decisions +
+k-bucketed dispatch -> periodic batched refinement -> eviction.
 
-Each client runs the calibrated edge-cloud simulator (core/env.py) with a
-rule-based controller; frames whose split placement times out (drops) are
-simply never ingested, which is exactly the gap-mask regime the Laplacian
-term stitches across.  The server refines every client session in ONE
-jitted step per round via FleetRefiner.
+Each client runs the calibrated edge-cloud simulator (core/env.py);
+frames whose in-flight placement times out (drops) are never submitted,
+which is exactly the gap-mask regime the Laplacian term stitches across.
+The gateway refines every client session in ONE jitted ``FleetRefiner``
+step per round and serves every tick's frames as a handful of padded
+dispatches instead of one per frame.
 
     PYTHONPATH=src python examples/fleet_demo.py
 """
 import jax
 import numpy as np
 
-from repro.core.controller import Controller
+from repro.api import FrameRequest, QoSClass, StreamSplitGateway, make_policy
 from repro.core.env import NET_PROFILES, EdgeCloudEnv, EnvCfg
-from repro.core.fleet import FleetBuffer, FleetRefiner
+from repro.models.audio_encoder import AudioEncCfg, init_audio_encoder
 
+CFG = AudioEncCfg(widths=(16, 16, 32, 32), strides=(1, 2, 1, 2),
+                  n_mels=32, frames=40, d_embed=32, groups=4)
 N_CLIENTS = 32
 WINDOW = 50
-DIM = 32
 N_CLASSES = 4
 ROUNDS = 6
 FRAMES_PER_ROUND = WINDOW // 2
 
 
 def head_init(key):
-    return {"w": 0.01 * jax.random.normal(key, (DIM, N_CLASSES))}
+    return {"w": 0.01 * jax.random.normal(key, (CFG.d_embed, N_CLASSES))}
 
 
 def head_apply(p, z):
@@ -37,9 +39,15 @@ def head_apply(p, z):
 def main():
     rng = np.random.default_rng(0)
     nets = list(NET_PROFILES)
-    fleet = FleetBuffer(capacity=N_CLIENTS, window=WINDOW, dim=DIM)
-    refiner = FleetRefiner(head_init, head_apply, lr=0.5)
-    centers = rng.normal(size=(N_CLASSES, DIM))
+    params = init_audio_encoder(CFG, jax.random.PRNGKey(0))
+    gw = StreamSplitGateway(
+        CFG, params, policy=make_policy("rule", CFG.n_blocks),
+        capacity=N_CLIENTS, window=WINDOW, head_init=head_init,
+        head_apply=head_apply, refine_every=FRAMES_PER_ROUND,
+        refine_lr=0.5, qos_reserve=0)
+    # class-conditional mel templates: the encoder is deterministic, so
+    # template+noise inputs give clustered embeddings the head can learn
+    templates = rng.normal(size=(N_CLASSES, CFG.frames, CFG.n_mels))
 
     # --- admission: a heterogeneous client population --------------------
     clients = []
@@ -48,53 +56,63 @@ def main():
         cfg = EnvCfg(platform=platform, net=nets[i % len(nets)],
                      horizon=ROUNDS * FRAMES_PER_ROUND + 1, seed=i)
         env = EdgeCloudEnv(cfg)
+        info = gw.open_session(platform=platform, qos=QoSClass.STANDARD)
         clients.append({
-            "sid": fleet.admit(),
+            "sid": info.sid,
             "env": env,
-            "ctrl": Controller("rule", env.L),
             "obs": env.reset(seed=i),
             "t": 0,
             "drops": 0,
+            "last_k": env.L,   # cold start: conservative local placement
         })
-    print(f"admitted {fleet.n_active}/{N_CLIENTS} clients "
+    by_sid = {c["sid"]: c for c in clients}
+    print(f"admitted {gw.stats().sessions_open}/{N_CLIENTS} clients "
           f"({N_CLIENTS // 2} pi4, {N_CLIENTS // 2} m2, "
           f"{len(nets)} network profiles)")
 
     # --- ingest + refine rounds ------------------------------------------
     for rnd in range(ROUNDS):
         for _ in range(FRAMES_PER_ROUND):
-            sids, ts, zs, labels = [], [], [], []
             for c in clients:
-                k = c["ctrl"].decide(c["obs"])
-                c["obs"], _, _, info = c["env"].step(k)
+                # the in-flight block runs at the gateway's previous
+                # decision (atomic transitions: a new k only applies to
+                # the NEXT block); a timeout means this frame never
+                # reaches the server — a buffer gap, not an error
+                c["obs"], _, _, info = c["env"].step(c["last_k"])
                 c["t"] += 1
-                if info["dropped"]:       # timed out: a buffer gap
+                if info["dropped"]:
                     c["drops"] += 1
                     continue
                 lab = c["t"] % N_CLASSES
-                sids.append(c["sid"])
-                ts.append(c["t"])
-                zs.append(centers[lab] + 0.1 * rng.normal(size=DIM))
-                labels.append(lab)
-            if sids:
-                fleet.insert_batch(sids, ts, np.asarray(zs, np.float32),
-                                   labels)
-        loss, parts, per = refiner.refine(jax.random.PRNGKey(rnd), fleet)
-        fills = [fleet.fill_fraction(c["sid"]) for c in clients]
-        print(f"round {rnd}: fleet refine loss={loss:.4f} "
-              f"task={parts['task']:.4f} sw={parts['sw']:.4f} "
-              f"lap={parts['lap']:.4f} | fill "
+                mel = (templates[lab]
+                       + 0.1 * rng.normal(size=templates[lab].shape))
+                gw.submit(c["sid"], FrameRequest(
+                    t=c["t"], mel=mel.astype(np.float32), label=lab,
+                    u=float(c["obs"][0]), cpu=float(c["obs"][1]),
+                    bandwidth_mbps=c["env"].bw))
+            for r in gw.tick():
+                by_sid[r.sid]["last_k"] = r.k
+        s = gw.stats()
+        fills = [gw.session(c["sid"]).fill_fraction for c in clients]
+        print(f"round {rnd}: refine loss={s.last_refine_loss:.4f} "
+              f"({s.refine_rounds} rounds) | "
+              f"{s.frames_per_dispatch:.1f} frames/dispatch | "
+              f"routed={s.routed} | fill "
               f"min={min(fills):.2f} mean={np.mean(fills):.2f}")
 
     # --- eviction ---------------------------------------------------------
     total = sum(c["t"] for c in clients)
     drops = sum(c["drops"] for c in clients)
-    for c in clients:
-        fleet.evict(c["sid"])
-    assert fleet.n_active == 0
+    infos = [gw.close_session(c["sid"]) for c in clients]
+    s = gw.stats()
+    assert s.sessions_open == 0
     print(f"evicted all clients | {total} frames simulated, "
           f"{drops} dropped ({100 * drops / total:.1f}%) | "
-          f"refiner steps={refiner.state.step}")
+          f"{s.frames} served in {s.dispatches} dispatches | "
+          f"wire {s.wire_bytes / 1024:.0f} KB, "
+          f"sync {s.sync_bytes / 1024:.0f} KB | "
+          f"transitions/client mean="
+      f"{np.mean([i.transitions for i in infos]):.1f}")
 
 
 if __name__ == "__main__":

@@ -1,43 +1,66 @@
 """Quickstart: the StreamSplit public API in ~60 lines.
 
+One typed surface runs the whole pipeline — open a session on the
+gateway, submit frames, tick: uncertainty-driven split placement,
+k-bucketed batched dispatch, INT8 wire accounting, temporal-buffer
+ingest, hybrid-loss refinement and lazy sync all happen behind
+``StreamSplitGateway``.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.core import gmm as G
-from repro.core.hybrid import HybridCfg, hybrid_loss
-from repro.core.infonce import infonce_with_virtual_negatives
-from repro.core.env import EdgeCloudEnv, EnvCfg, utility_to_accuracy
-from repro.core.controller import Controller, run_episode
+from repro.api import FrameRequest, QoSClass, StreamSplitGateway, make_policy
+from repro.models.audio_encoder import AudioEncCfg, init_audio_encoder
 
-key = jax.random.PRNGKey(0)
+# A smoke-scale encoder (the paper's model family, CPU-friendly widths).
+CFG = AudioEncCfg(widths=(16, 16, 32, 32), strides=(1, 2, 1, 2),
+                  n_mels=32, frames=40, d_embed=32, groups=4)
+N_CLASSES = 4
 
-# 1. Distributional Memory: a 64-component GMM replaces the memory bank.
-gmm = G.init_gmm(key, 64, 128)
-z = jax.random.normal(key, (8, 128))
-z = z / jnp.linalg.norm(z, axis=-1, keepdims=True)
-gmm = G.em_update(gmm, z)                         # streaming EM
-u = G.normalized_entropy(gmm, z)                  # U_t — the RL state signal
-print(f"uncertainty U_t per frame: {u.round(2)}")
-print(f"distributional memory size: {G.size_bytes(gmm)/1024:.1f} KB (<35KB)")
 
-# 2. The edge loss: InfoNCE with boundary-aware virtual negatives (Eq. 10).
-z_pos = z + 0.05 * jax.random.normal(key, z.shape)
-loss = infonce_with_virtual_negatives(key, gmm, z, z_pos, n_syn=256)
-print(f"streaming InfoNCE with 256 virtual negatives: {loss:.3f}")
+def head_init(key):
+    return {"w": 0.01 * jax.random.normal(key, (CFG.d_embed, N_CLASSES))}
 
-# 3. The server's Hybrid Loss (Eq. 13) with a 30%-gap temporal buffer.
-z_seq = jax.random.normal(key, (1, 100, 128))
-mask = (jax.random.uniform(key, (1, 100)) > 0.3).astype(jnp.float32)
-total, parts = hybrid_loss(key, z_seq, HybridCfg(), mask=mask)
-print(f"hybrid loss {total:.3f}  (SWD {parts['sw']:.4f}, "
-      f"Laplacian {parts['lap']:.3f})")
 
-# 4. The Control Plane: run the rule-based splitter through the calibrated
-#    edge-cloud environment (PPO training: see examples/adaptive_control.py).
-env = EdgeCloudEnv(EnvCfg(net="variable", horizon=300))
-summary = run_episode(env, Controller("rule", env.L), seed=0)
-print(f"rule-based splitter: {summary['lat_ms']*8:.0f} ms/batch, "
-      f"{summary['kb_per_batch']:.1f} KB/batch, "
-      f"acc~{utility_to_accuracy(summary['utility']):.1f}%")
+def head_apply(p, z):
+    return z @ p["w"]
+
+
+params = init_audio_encoder(CFG, jax.random.PRNGKey(0))
+
+# 1. The gateway IS the pipeline: an entropy policy (the cascade's routing
+#    as a SplitPolicy) + a fleet buffer + a refiner + lazy sync in one box.
+gw = StreamSplitGateway(
+    CFG, params,
+    policy=make_policy("entropy", CFG.n_blocks, threshold=0.6, offload_k=2),
+    capacity=8, window=32, head_init=head_init, head_apply=head_apply,
+    refine_every=4)
+
+# 2. Sessions are typed and QoS-classed.
+info = gw.open_session(platform="pi4", qos=QoSClass.INTERACTIVE)
+print(f"session {info.sid} open ({info.platform}, {info.qos.value})")
+
+# 3. Stream frames: easy (low-U) frames stay on the edge, hard ones split.
+rng = np.random.default_rng(0)
+for t in range(12):
+    u = 0.2 if t % 3 else 0.9          # every third frame is "hard"
+    mel = rng.normal(size=(CFG.frames, CFG.n_mels)).astype(np.float32)
+    gw.submit(info.sid, FrameRequest(t=t, mel=mel, label=t % N_CLASSES,
+                                     u=u, cpu=0.3, bandwidth_mbps=20.0))
+    (r,) = gw.tick()
+    print(f"frame {t}: U={u:.1f} -> route={r.route:6s} k={r.k} "
+          f"wire={r.wire_bytes:5d} B  z[:3]={np.round(r.z[:3], 3)}")
+
+# 4. One scoreboard for the whole serving plane.
+s = gw.stats()
+print(f"\n{s.frames} frames in {s.dispatches} dispatches "
+      f"({s.frames_per_dispatch:.1f} frames/dispatch), "
+      f"routed={s.routed}, wire={s.wire_bytes / 1024:.1f} KB, "
+      f"refine rounds={s.refine_rounds} (last loss {s.last_refine_loss:.3f}), "
+      f"lazy sync={s.sync_bytes / 1024:.0f} KB")
+final = gw.close_session(info.sid)
+print(f"closed session {final.sid}: {final.frames} frames, "
+      f"{final.transitions} atomic split transitions, "
+      f"buffer fill {final.fill_fraction:.2f}")

@@ -1,0 +1,21 @@
+"""Public typed API of the StreamSplit pipeline.
+
+    from repro.api import (StreamSplitGateway, FrameRequest, QoSClass,
+                           make_policy)
+
+See docs/API.md for the one-pipeline call flow.
+"""
+from repro.api.gateway import StreamSplitGateway
+from repro.api.policies import (EntropyThresholdPolicy, FixedKPolicy,
+                                RLPolicy, RulePolicy, SplitPolicy,
+                                make_policy)
+from repro.api.types import (AdmissionError, FrameRequest, FrameResult,
+                             GatewayStats, QoSClass, SessionInfo)
+
+__all__ = [
+    "StreamSplitGateway",
+    "SplitPolicy", "make_policy", "FixedKPolicy", "RulePolicy", "RLPolicy",
+    "EntropyThresholdPolicy",
+    "FrameRequest", "FrameResult", "SessionInfo", "GatewayStats",
+    "QoSClass", "AdmissionError",
+]

@@ -1,0 +1,265 @@
+"""``StreamSplitGateway`` — THE way to run the StreamSplit pipeline.
+
+One typed surface over what used to be six hand-wired call conventions:
+
+    gw = StreamSplitGateway(enc_cfg, params, policy=make_policy("rule", L))
+    info = gw.open_session(platform="pi4", qos=QoSClass.STANDARD)
+    gw.submit(info.sid, FrameRequest(t=0, mel=mel, u=0.3, ...))
+    results = gw.tick()          # decide -> k-bucketed dispatch -> ingest
+    gw.close_session(info.sid)
+
+Internally the gateway owns admission into a ``FleetBuffer``, per-tick
+**k-bucketed batched split execution**, periodic ``FleetRefiner`` rounds,
+and per-session ``LazySync`` accounting.  The serving hot path: every
+frame whose policy decision landed on the same split index k rides ONE
+padded ``SplitEngine.run_batch`` dispatch (the serving analogue of
+``CascadeServer.handle``'s two sub-batches) instead of one ``run()`` per
+frame — embeddings stay bit-identical to the per-frame path
+(``benchmarks/gateway_serve.py`` measures the speedup and asserts the
+bit-parity; ``tests/test_gateway.py`` pins it).
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import numpy as np
+
+from repro.api.policies import SplitPolicy
+from repro.api.types import (AdmissionError, FrameRequest, FrameResult,
+                             GatewayStats, QoSClass, SessionInfo)
+from repro.core.env import EdgeCloudEnv
+from repro.core.fleet import FleetBuffer, FleetFullError, FleetRefiner
+from repro.core.splitter import SplitEngine
+from repro.core.sync import LazySync, SyncCfg
+
+
+def _pad_pow2(n):
+    """Next power of two — each k compiles O(log capacity) bucket shapes
+    instead of one executable per batch size."""
+    return 1 << max(0, math.ceil(math.log2(n)))
+
+
+class _Session:
+    """Mutable per-session record (internal — the API hands out frozen
+    ``SessionInfo`` snapshots only)."""
+
+    __slots__ = ("sid", "platform", "qos", "sync", "frames", "wire_bytes",
+                 "transitions", "last_k")
+
+    def __init__(self, sid, platform, qos, sync_cfg):
+        self.sid = sid
+        self.platform = platform
+        self.qos = qos
+        self.sync = LazySync(sync_cfg)
+        self.frames = 0
+        self.wire_bytes = 0
+        self.transitions = 0
+        self.last_k = -1
+
+
+class StreamSplitGateway:
+    """Session/gateway layer over the whole edge–cloud pipeline.
+
+    Parameters
+    ----------
+    enc_cfg, params : the audio encoder config + weights the split engine
+        executes (``core/*`` semantics unchanged — the gateway is a
+        dispatch layer, not a new model).
+    policy : a batched ``SplitPolicy`` (see ``api/policies.py``).
+    capacity, window : fleet dimensions; the server-side temporal rings
+        are ``(capacity, window, enc_cfg.d_embed)``.
+    head_init, head_apply : optional task head for ``FleetRefiner``;
+        without them the gateway serves embeddings but never refines.
+    refine_every : run one fleet-wide refinement round every this many
+        ticks (0 disables).
+    qos_reserve : fleet rows held back from BULK (2x) and STANDARD (1x)
+        admissions so INTERACTIVE tenants always find room; defaults to
+        ``capacity // 8``.
+    """
+
+    def __init__(self, enc_cfg, params, *, policy: SplitPolicy,
+                 capacity=64, window=100, head_init=None, head_apply=None,
+                 refine_every=0, quantize_wire=True, sync_cfg=None,
+                 qos_reserve=None, refine_lr=1e-2, seed=0):
+        if policy.L != enc_cfg.n_blocks:
+            raise ValueError(
+                f"policy action space L={policy.L} != encoder "
+                f"n_blocks={enc_cfg.n_blocks}")
+        self.cfg = enc_cfg
+        self.params = params
+        self.policy = policy
+        self.engine = SplitEngine(enc_cfg, quantize_wire=quantize_wire)
+        self.fleet = FleetBuffer(capacity=capacity, window=window,
+                                 dim=enc_cfg.d_embed)
+        self.sync_cfg = sync_cfg or SyncCfg()
+        self.qos_reserve = (capacity // 8 if qos_reserve is None
+                            else qos_reserve)
+        self.refiner = None
+        self.refine_every = refine_every
+        if head_init is not None:
+            self.refiner = FleetRefiner(head_init, head_apply, lr=refine_lr,
+                                        seed=seed)
+        self._key = jax.random.PRNGKey(seed)
+        self._sessions: dict[int, _Session] = {}
+        self._pending: list[tuple[int, FrameRequest]] = []
+        # aggregate counters (surfaced as GatewayStats)
+        self._ticks = 0
+        self._frames = 0
+        self._opened = 0
+        self._closed = 0
+        self._refusals = 0
+        self._dispatches = 0
+        self._wire_bytes = 0
+        self._sync_bytes = 0
+        self._sync_events = 0
+        self._refine_rounds = 0
+        self._last_refine_loss = float("nan")
+        self._routed = {"edge": 0, "split": 0, "server": 0}
+
+    # -- session lifecycle ---------------------------------------------------
+    def open_session(self, platform="pi4",
+                     qos: QoSClass = QoSClass.STANDARD) -> SessionInfo:
+        """Admit a session into the fleet; raises ``AdmissionError`` (a
+        ``FleetFullError``) when its QoS class finds no headroom."""
+        free = self.fleet.capacity - self.fleet.n_active
+        need = {QoSClass.INTERACTIVE: 1,
+                QoSClass.STANDARD: 1 + self.qos_reserve,
+                QoSClass.BULK: 1 + 2 * self.qos_reserve}[qos]
+        if free < need:
+            self._refusals += 1
+            raise AdmissionError(qos, self.fleet.n_active,
+                                 self.fleet.capacity)
+        try:
+            sid = self.fleet.admit()
+        except FleetFullError:
+            self._refusals += 1
+            raise AdmissionError(qos, self.fleet.n_active,
+                                 self.fleet.capacity) from None
+        self._sessions[sid] = _Session(sid, platform, qos, self.sync_cfg)
+        self._opened += 1
+        return self.session(sid)
+
+    def session(self, sid) -> SessionInfo:
+        s = self._require(sid)
+        return SessionInfo(
+            sid=s.sid, platform=s.platform, qos=s.qos, frames=s.frames,
+            wire_bytes=s.wire_bytes, sync_bytes=s.sync.total_bytes,
+            sync_events=len(s.sync.events), transitions=s.transitions,
+            last_k=s.last_k, fill_fraction=self.fleet.fill_fraction(sid))
+
+    def close_session(self, sid) -> SessionInfo:
+        """Evict the session (O(1) — the fleet row is wiped lazily on its
+        next admission).  Unserved pending frames are discarded."""
+        info = self.session(sid)
+        self._pending = [(s, f) for s, f in self._pending if s != sid]
+        self.fleet.evict(sid)
+        del self._sessions[sid]
+        self._closed += 1
+        return info
+
+    def _require(self, sid) -> _Session:
+        if sid not in self._sessions:
+            raise KeyError(f"session {sid} is not open")
+        return self._sessions[sid]
+
+    # -- ingest --------------------------------------------------------------
+    def submit(self, sid, frame: FrameRequest) -> None:
+        """Queue one frame for the next ``tick``."""
+        self._require(sid)
+        mel = np.asarray(frame.mel)
+        if mel.shape != (self.cfg.frames, self.cfg.n_mels):
+            raise ValueError(
+                f"frame.mel shape {mel.shape} != "
+                f"({self.cfg.frames}, {self.cfg.n_mels}) — submit one "
+                "unbatched sample per FrameRequest")
+        self._pending.append((sid, frame))
+
+    # -- the pipeline tick ---------------------------------------------------
+    def tick(self) -> list[FrameResult]:
+        """Decide -> k-bucketed batched dispatch -> ingest -> sync ->
+        (periodic) refine.  Returns results in submission order."""
+        pending, self._pending = self._pending, []
+        results: list[FrameResult | None] = [None] * len(pending)
+        if pending:
+            # normalize bandwidth exactly like the control-plane env so RL
+            # policies see the feature scale they were trained on
+            bw_norm = EdgeCloudEnv.BW_NORM
+            obs = np.array([[f.u, f.cpu, min(f.bandwidth_mbps / bw_norm, 1.0)]
+                            for _, f in pending], np.float32)
+            ks = np.clip(np.asarray(self.policy.decide(obs), np.int64),
+                         0, self.cfg.n_blocks)
+            buckets: dict[int, list[int]] = {}
+            for i, k in enumerate(ks):
+                buckets.setdefault(int(k), []).append(i)
+            for k, idx in sorted(buckets.items()):
+                self._dispatch(k, idx, pending, results)
+            self._ingest(pending, results)
+        self._ticks += 1
+        if (self.refiner is not None and self.refine_every
+                and self._ticks % self.refine_every == 0
+                and self.fleet.n_active):
+            key = jax.random.fold_in(self._key, self._refine_rounds)
+            loss, _, _ = self.refiner.refine(key, self.fleet)
+            self._refine_rounds += 1
+            self._last_refine_loss = loss
+        return results  # type: ignore[return-value]
+
+    def _dispatch(self, k, idx, pending, results):
+        """ONE padded SplitEngine dispatch for every frame bucketed at k."""
+        t0 = time.perf_counter()
+        mel = np.stack([np.asarray(pending[i][1].mel, np.float32)
+                        for i in idx])
+        pad = _pad_pow2(len(idx))
+        if pad > len(idx):   # repeat-pad: shape buckets stay compiled
+            mel = np.concatenate(
+                [mel, np.broadcast_to(mel[:1], (pad - len(idx),)
+                                      + mel.shape[1:])])
+        z, wire = self.engine.run_batch(self.params, mel, k)
+        z = np.asarray(jax.block_until_ready(z))[:len(idx)]
+        ms = (time.perf_counter() - t0) * 1e3 / len(idx)
+        route = ("edge" if k >= self.cfg.n_blocks
+                 else "server" if k == 0 else "split")
+        self._dispatches += 1
+        self._frames += len(idx)
+        self._wire_bytes += wire * len(idx)
+        self._routed[route] += len(idx)
+        for j, i in enumerate(idx):
+            sid, req = pending[i]
+            s = self._sessions[sid]
+            if s.last_k >= 0 and k != s.last_k:
+                s.transitions += 1
+            s.last_k = k
+            s.frames += 1
+            s.wire_bytes += wire
+            results[i] = FrameResult(
+                sid=sid, t=req.t, z=z[j], route=route, k=k,
+                wire_bytes=wire, latency_ms=ms, bucket_size=len(idx))
+
+    def _ingest(self, pending, results):
+        """Fleet-buffer ingest + per-session lazy-sync accounting."""
+        sids = np.array([sid for sid, _ in pending], np.int64)
+        ts = np.array([f.t for _, f in pending], np.int64)
+        zs = np.stack([r.z for r in results])
+        labels = np.array([f.label for _, f in pending], np.int64)
+        self.fleet.insert_batch(sids, ts, zs, labels)
+        for sid, req in pending:
+            s = self._sessions[sid]
+            for ev in s.sync.on_frame(req.t, charging=req.charging,
+                                      bandwidth_mbps=req.bandwidth_mbps):
+                self._sync_bytes += ev.bytes
+                self._sync_events += 1
+
+    # -- observability -------------------------------------------------------
+    def stats(self) -> GatewayStats:
+        return GatewayStats(
+            ticks=self._ticks, frames=self._frames,
+            sessions_open=len(self._sessions), sessions_opened=self._opened,
+            sessions_closed=self._closed,
+            admission_refusals=self._refusals,
+            dispatches=self._dispatches, wire_bytes=self._wire_bytes,
+            sync_bytes=self._sync_bytes, sync_events=self._sync_events,
+            refine_rounds=self._refine_rounds,
+            last_refine_loss=self._last_refine_loss,
+            routed=dict(self._routed))

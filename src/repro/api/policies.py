@@ -1,0 +1,136 @@
+"""Split policies behind ONE batched interface.
+
+The repo previously exposed placement decisions through two unrelated
+conventions: ``core.controller.Controller.decide(obs)`` (rl / rule /
+static / edge / server, one observation at a time) and the cascade
+server's inline entropy-threshold routing.  ``SplitPolicy`` unifies them:
+
+    decide(obs_batch (B, 3)) -> k_batch (B,)
+
+where each observation row is the control-plane state
+``[U_t, R_cpu/100, B_net]`` and each output is the split index for that
+frame's NEXT dispatch (the atomic-transition boundary — the gateway never
+switches k mid-dispatch; frames bucketed per k each run a whole compiled
+program).
+
+Batched decisions are what make k-bucketed dispatch possible: the
+gateway asks once per tick for the whole pending set, not once per frame
+per session.
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class SplitPolicy(Protocol):
+    """Anything with a batched ``decide``; ``L`` bounds the action space."""
+
+    L: int
+
+    def decide(self, obs_batch: np.ndarray) -> np.ndarray:
+        """obs_batch (B, 3) -> int k_batch (B,) with 0 <= k <= L."""
+        ...
+
+
+class FixedKPolicy:
+    """static / edge-only (k=L) / server-only (k=0) in one class."""
+
+    def __init__(self, L: int, k: int):
+        self.L = L
+        self.k = int(np.clip(k, 0, L))
+
+    def decide(self, obs_batch):
+        return np.full(len(obs_batch), self.k, np.int64)
+
+
+class RulePolicy:
+    """The Table 1/4 heuristic, vectorized: offload (shallow k) iff
+    bandwidth high AND cpu free, else run fully local.
+
+    Unlike the edge-side ``core.controller.RulePolicy`` this keeps no
+    probe EMA: the gateway reads fresh per-frame client telemetry, so the
+    slow bandwidth estimate the on-device rule needs (and that costs it
+    ~3.5x the RL agent's adaptation time) has nothing to smooth.
+    """
+
+    def __init__(self, L, *, bw_threshold=0.12, cpu_threshold=0.6,
+                 offload_k=2):
+        self.L = L
+        self.bw_threshold = bw_threshold
+        self.cpu_threshold = cpu_threshold
+        self.offload_k = offload_k
+
+    def decide(self, obs_batch):
+        obs = np.asarray(obs_batch, np.float32)
+        offload = (obs[:, 2] > self.bw_threshold) & \
+                  (obs[:, 1] < self.cpu_threshold)
+        return np.where(offload, self.offload_k, self.L).astype(np.int64)
+
+
+class RLPolicy:
+    """Greedy PPO policy (core/ppo.py), batched over the tick in one
+    forward instead of one ``greedy_action`` call per frame."""
+
+    def __init__(self, L, params):
+        self.L = L
+        self.params = params
+
+    def decide(self, obs_batch):
+        import jax.numpy as jnp
+        from repro.core.ppo import policy_apply
+        logits, _ = policy_apply(self.params,
+                                 jnp.asarray(obs_batch, jnp.float32))
+        return np.asarray(jnp.argmax(logits, axis=-1), np.int64)
+
+
+class EntropyThresholdPolicy:
+    """The cascade server's routing as a split policy (paper §6.5.2:
+    offload when U_t > 0.7 regardless of platform).
+
+    Low-entropy (easy) frames stay fully local (k=L, the "small tier");
+    high-entropy (hard) frames escalate — the edge runs only a shallow
+    prefix and the server finishes the stack (k=offload_k, the "large
+    tier").  With two possible k values every tick collapses into at most
+    two bucketed dispatches, the serving analogue of ``CascadeServer``'s
+    two padded sub-batches.
+    """
+
+    def __init__(self, L, *, threshold=0.7, offload_k=2):
+        self.L = L
+        self.threshold = threshold
+        self.offload_k = offload_k
+
+    def decide(self, obs_batch):
+        obs = np.asarray(obs_batch, np.float32)
+        hard = obs[:, 0] > self.threshold
+        return np.where(hard, self.offload_k, self.L).astype(np.int64)
+
+
+def make_policy(kind, L, *, rl_params=None, static_k=3, threshold=0.7,
+                offload_k=2, bw_threshold=0.12,
+                cpu_threshold=0.6) -> SplitPolicy:
+    """One constructor for every placement convention in the repo.
+
+    kind ∈ {"rl", "rule", "static", "edge", "server", "entropy"} — the
+    five ``Controller`` kinds plus the cascade's entropy routing.
+    """
+    if kind == "rl":
+        if rl_params is None:
+            raise ValueError("rl policy needs rl_params")
+        return RLPolicy(L, rl_params)
+    if kind == "rule":
+        return RulePolicy(L, bw_threshold=bw_threshold,
+                          cpu_threshold=cpu_threshold, offload_k=offload_k)
+    if kind == "static":
+        return FixedKPolicy(L, static_k)
+    if kind == "edge":
+        return FixedKPolicy(L, L)
+    if kind == "server":
+        return FixedKPolicy(L, 0)
+    if kind == "entropy":
+        return EntropyThresholdPolicy(L, threshold=threshold,
+                                      offload_k=offload_k)
+    raise ValueError(f"unknown policy kind: {kind!r}")

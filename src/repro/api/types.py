@@ -1,0 +1,125 @@
+"""Typed request/response surface of the StreamSplit gateway.
+
+One pipeline, one vocabulary: a client session ``submit``s
+``FrameRequest``s, the gateway ``tick`` turns them into ``FrameResult``s
+(embedding, route, split index, wire bytes, dispatch latency), and the
+aggregate state of the serving plane is a ``GatewayStats``.  Everything
+here is a frozen dataclass — values cross the API boundary, never shared
+mutable state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from enum import Enum
+
+import numpy as np
+
+from repro.core.fleet import FleetFullError
+
+
+class QoSClass(Enum):
+    """Admission class of a session (ROADMAP: load-aware placement).
+
+    ``INTERACTIVE`` sessions may use every fleet row; ``STANDARD`` and
+    ``BULK`` are refused progressively earlier so that headroom remains
+    for latency-sensitive tenants (see ``StreamSplitGateway.open_session``).
+    """
+
+    INTERACTIVE = "interactive"
+    STANDARD = "standard"
+    BULK = "bulk"
+
+
+class AdmissionError(FleetFullError):
+    """Typed admission failure of ``open_session``.
+
+    Subclasses ``FleetFullError`` so callers already guarding the raw
+    fleet keep working; carries the admission context the raw error
+    lacks.  ``qos`` is the class that was refused; ``n_active`` /
+    ``capacity`` describe the fleet at refusal time.
+    """
+
+    def __init__(self, qos: QoSClass, n_active: int, capacity: int):
+        self.qos = qos
+        self.n_active = n_active
+        self.capacity = capacity
+        super().__init__(
+            f"admission refused for {qos.value} session: "
+            f"{n_active}/{capacity} fleet rows in use")
+
+
+@dataclass(frozen=True)
+class FrameRequest:
+    """One client frame: the mel payload plus the client-side telemetry
+    the split policy consumes.
+
+    ``t`` is the session-local absolute frame index (the temporal-buffer
+    key — gaps in ``t`` become gap-mask zeros on the server).  ``u`` /
+    ``cpu`` are normalized to [0, 1] like the control-plane observation
+    ``s_t = [U_t, R_cpu, B_net]``; ``bandwidth_mbps`` is raw so the lazy
+    sync protocol can apply its Wi-Fi threshold.
+    """
+
+    t: int
+    mel: np.ndarray            # (frames, n_mels) — one sample, no batch dim
+    label: int = -1
+    u: float = 0.5             # GMM-entropy uncertainty U_t
+    cpu: float = 0.25          # edge CPU load fraction
+    bandwidth_mbps: float = 10.0
+    charging: bool = False     # lazy-sync weight-push eligibility
+
+
+@dataclass(frozen=True)
+class FrameResult:
+    """What came back for one frame after the tick's bucketed dispatch."""
+
+    sid: int
+    t: int
+    z: np.ndarray              # (d_embed,) l2-normalized embedding
+    route: str                 # "edge" (k=L) | "server" (k=0) | "split"
+    k: int                     # split index the policy chose
+    wire_bytes: int            # synchronous split-link payload (0 at k=L)
+    latency_ms: float          # bucket dispatch wall-clock / bucket size
+    bucket_size: int           # how many frames shared this dispatch
+
+
+@dataclass(frozen=True)
+class SessionInfo:
+    """Point-in-time snapshot of one session (returned by ``open_session``,
+    ``session`` and ``close_session`` — never live state)."""
+
+    sid: int
+    platform: str
+    qos: QoSClass
+    frames: int                # frames served through the gateway
+    wire_bytes: int            # cumulative split-link bytes
+    sync_bytes: int            # cumulative lazy-sync downlink bytes
+    sync_events: int
+    transitions: int           # split-index changes (atomic transitions)
+    last_k: int                # -1 before the first served frame
+    fill_fraction: float       # of the server-side temporal ring
+
+
+@dataclass(frozen=True)
+class GatewayStats:
+    """Aggregate serving-plane counters (one pipeline, one scoreboard)."""
+
+    ticks: int
+    frames: int
+    sessions_open: int
+    sessions_opened: int
+    sessions_closed: int
+    admission_refusals: int
+    dispatches: int            # k-bucket SplitEngine dispatches issued
+    wire_bytes: int
+    sync_bytes: int            # lazy-sync downlink across all sessions
+    sync_events: int
+    refine_rounds: int
+    last_refine_loss: float    # nan before the first round
+    routed: dict               # route -> frame count ("edge"/"split"/"server")
+
+    @property
+    def frames_per_dispatch(self) -> float:
+        """The batching win: 1.0 is the per-frame loop; N/buckets when
+        k-bucketing collapses a tick into few dispatches."""
+        return self.frames / self.dispatches if self.dispatches else 0.0

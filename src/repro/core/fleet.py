@@ -63,6 +63,7 @@ class FleetBuffer:
         self.label = np.full((capacity, window), -1, np.int64)
         self.newest = np.full((capacity,), -1, np.int64)
         self.active = np.zeros((capacity,), bool)
+        self._dirty = np.zeros((capacity,), bool)      # lazy wipe-on-admit
         self._free = list(range(capacity - 1, -1, -1))  # stack: pop -> row 0
 
     # -- session lifecycle (O(1)) -------------------------------------------
@@ -71,23 +72,33 @@ class FleetBuffer:
         return int(self.active.sum())
 
     def admit(self):
-        """-> session row id (sid).  O(1); raises FleetFullError when full."""
+        """-> session row id (sid).  Raises FleetFullError when full.
+
+        O(1) except when re-admitting onto a row left dirty by ``evict``,
+        which pays the deferred O(W·d) wipe here — a future tenant never
+        sees the previous tenant's frames (tested against a clean-row
+        oracle in ``tests/test_fleet.py``)."""
         if not self._free:
             raise FleetFullError(f"all {self.capacity} session rows in use")
         sid = self._free.pop()
+        if self._dirty[sid]:
+            self.z[sid] = 0.0
+            self.t[sid] = T_SENTINEL
+            self.label[sid] = -1
+            self.newest[sid] = -1
+            self._dirty[sid] = False
         self.active[sid] = True
         return sid
 
     def evict(self, sid):
-        """Release a session row.  O(1) bookkeeping; the row is wiped so a
-        future tenant never sees stale frames."""
+        """Release a session row.  O(1) in *bytes* as well as bookkeeping:
+        the row is only marked dirty — ``snapshot`` already masks inactive
+        rows out of every consumer, and the wipe is deferred to the next
+        ``admit`` of this row (lazy wipe-on-admit)."""
         if not self.active[sid]:
             raise KeyError(f"session {sid} is not active")
         self.active[sid] = False
-        self.z[sid] = 0.0
-        self.t[sid] = T_SENTINEL
-        self.label[sid] = -1
-        self.newest[sid] = -1
+        self._dirty[sid] = True
         self._free.append(sid)
 
     # -- ingest --------------------------------------------------------------

@@ -8,8 +8,18 @@ frame vanish, which is exactly the paper's "buffer with temporal gaps".
 Minimizing the energy is the "manifold stitching" spring force
 (Fig. 5); Theorem 3.2's interpolation bound is implemented in
 ``interpolation_error_bound`` and property-tested.
+
+Theorem 3.2 regime (documented here per the test-debt note): the bound
+Eq. 5 only holds for *sparse* temporal graphs, ``2k < T``.  As the window
+approaches the trajectory length the graph becomes complete, λ₂ stops
+separating local from global structure, and the bound is genuinely
+violated (not a numerical artifact — see ``tests/test_laplacian.py``).
+``interpolation_error_bound`` warns when asked to evaluate a
+near-complete graph.
 """
 from __future__ import annotations
+
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -90,8 +100,32 @@ def neighbor_average(z, A, t):
 
 
 def interpolation_error_bound(z, A, t):
-    """RHS of Eq. 5: 2·α·|E| / (λ₂·|N(t)|) with α = Tr(ZᵀLZ)/|E|."""
+    """RHS of Eq. 5: 2·α·|E| / (λ₂·|N(t)|) with α = Tr(ZᵀLZ)/|E|.
+
+    Only valid in Theorem 3.2's sparse-graph regime ``2k < T`` (see the
+    module docstring).  The guard recovers the window size from the first
+    node that has any edges — for a temporal k-window graph a *boundary*
+    node's degree is ~``min(k, T_eff - 1)`` — and compares against the
+    count of participating (unmasked) nodes, so masked graphs are judged
+    on their effective trajectory length.  When ``2k >= T_eff`` the
+    window spans most of the trajectory, the graph is near-complete, and
+    the returned value is NOT a valid bound — a ``UserWarning`` is
+    issued.
+    """
     z = np.asarray(z, np.float64)
+    A = np.asarray(A, np.float64)
+    deg = (A > 0).sum(axis=1)
+    live = np.where(deg > 0)[0]
+    if live.size > 1:
+        t_eff = int(live.size)
+        k_est = int(deg[live[0]])
+        if 2 * k_est >= t_eff:
+            warnings.warn(
+                "interpolation_error_bound: temporal window k="
+                f"{k_est} with T={t_eff} participating frames violates "
+                "Theorem 3.2's sparse-graph regime (2k < T); the graph is "
+                "near-complete and the returned value is not a valid "
+                "bound.", UserWarning, stacklevel=2)
     L = graph_laplacian(A)
     tr = float(np.trace(z.T @ L @ z)) / 2.0  # undirected total energy
     n_edges = A.sum() / 2.0

@@ -103,9 +103,23 @@ def apply_blocks(cfg, params, x, start, end):
 
 
 def apply_head(cfg, params, x):
-    """(B, T', C) -> l2-normalized (B, d_embed)."""
+    """(B, T', C) -> l2-normalized (B, d_embed).
+
+    The projection is written as an explicit multiply-reduce rather than
+    ``pooled @ w``: XLA CPU partitions a (B, C) @ (C, d) GEMM differently
+    per batch size (K-splitting), so the GEMM form makes the same sample
+    produce different low bits at B=1 vs B=32.  The reduce form keeps the
+    per-sample accumulation order batch-invariant, which is what lets the
+    gateway's k-bucketed dispatch bit-match per-frame ``SplitEngine.run``
+    (tests/test_gateway.py pins this).  Accepted global cost: the reduce
+    form materializes a (B, C, d) intermediate and skips GEMM kernels —
+    negligible next to the conv stack at this model family's head sizes,
+    and paid on training paths too so every consumer sees one set of
+    numerics.
+    """
     pooled = x.mean(axis=1)
-    z = pooled @ params["head"]["w"]
+    w = params["head"]["w"]
+    z = jnp.sum(pooled[:, :, None] * w[None, :, :], axis=1)
     return z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-6)
 
 

@@ -170,6 +170,42 @@ def test_fleet_inactive_rows_masked_out_of_refine():
     assert loss == pytest.approx(float(per[sid]), rel=1e-6)
 
 
+def test_evict_is_lazy_and_admit_wipes_dirty_row():
+    """Eviction must be O(1) in bytes (lazy wipe-on-admit): the freed
+    row's arrays still hold the old tenant's bytes after evict, the
+    snapshot masks them, and re-admission hands the new tenant a row
+    indistinguishable from a never-used one."""
+    W, D = 5, 3
+    fleet = FleetBuffer(capacity=2, window=W, dim=D)
+    sid = fleet.admit()
+    rng = np.random.default_rng(0)
+    for t in range(W):
+        fleet.insert(sid, t, rng.normal(size=D), label=t % 2)
+    fleet.evict(sid)
+    # lazy: the bytes were NOT wiped at evict time ...
+    assert (fleet.z[sid] != 0.0).any() and (fleet.t[sid] != T_SENTINEL).any()
+    # ... but the snapshot never exposes them
+    z, mask, labels = fleet.snapshot()
+    assert mask[sid].sum() == 0 and (z[sid] == 0).all() \
+        and (labels[sid] == -1).all()
+    # admit onto the dirty row: clean slate, oracle = a fresh buffer row
+    sid2 = fleet.admit()
+    assert sid2 == sid
+    assert (fleet.z[sid2] == 0.0).all()
+    assert (fleet.t[sid2] == T_SENTINEL).all()
+    assert (fleet.label[sid2] == -1).all()
+    assert fleet.newest[sid2] == -1
+    oracle = FleetBuffer(capacity=2, window=W, dim=D)
+    oracle.admit()
+    for f in (fleet, oracle):
+        f.insert(sid2 if f is fleet else 0, 2, np.ones(D), label=1)
+    zf, mf, lf = fleet.snapshot()
+    zo, mo, lo = oracle.snapshot()
+    np.testing.assert_array_equal(zf[sid2], zo[0])
+    np.testing.assert_array_equal(mf[sid2], mo[0])
+    np.testing.assert_array_equal(lf[sid2], lo[0])
+
+
 # ---------------------------------------------------------------------------
 # N=1 parity: FleetRefiner step == ServerRefiner step (fp32 tolerance)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,267 @@
+"""Gateway API: session lifecycle + typed admission, k-bucket dispatch
+bit-parity with per-frame SplitEngine.run, wire accounting, policy
+unification, and refine cadence."""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (AdmissionError, FrameRequest, QoSClass, SplitPolicy,
+                       StreamSplitGateway, make_policy)
+from repro.api.policies import (EntropyThresholdPolicy, FixedKPolicy,
+                                RLPolicy, RulePolicy)
+from repro.core.fleet import FleetFullError
+from repro.core.splitter import SplitEngine
+from repro.models.audio_encoder import (AudioEncCfg, boundary_bytes,
+                                        init_audio_encoder)
+
+CFG = AudioEncCfg(widths=(16, 16, 32, 32), strides=(1, 2, 1, 2),
+                  n_mels=32, frames=40, d_embed=32, groups=4)
+L = CFG.n_blocks
+N_CLASSES = 4
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_audio_encoder(CFG, jax.random.PRNGKey(0))
+
+
+def _mel(rng):
+    return rng.normal(size=(CFG.frames, CFG.n_mels)).astype(np.float32)
+
+
+def _head():
+    def head_init(key):
+        return {"w": 0.01 * jax.random.normal(key, (CFG.d_embed, N_CLASSES))}
+
+    def head_apply(p, z):
+        return z @ p["w"]
+
+    return head_init, head_apply
+
+
+class SpreadPolicy:
+    """Deterministic test policy: frame i gets k = i % (L+1) — every
+    split index appears in one tick."""
+
+    def __init__(self, L):
+        self.L = L
+
+    def decide(self, obs_batch):
+        return np.arange(len(obs_batch), dtype=np.int64) % (self.L + 1)
+
+
+# ---------------------------------------------------------------------------
+# Session lifecycle + typed admission
+# ---------------------------------------------------------------------------
+
+def test_session_lifecycle(params):
+    gw = StreamSplitGateway(CFG, params, policy=FixedKPolicy(L, 2),
+                            capacity=4, window=8, qos_reserve=0)
+    rng = np.random.default_rng(0)
+    info = gw.open_session(platform="m2", qos=QoSClass.INTERACTIVE)
+    assert info.platform == "m2" and info.qos is QoSClass.INTERACTIVE
+    assert info.frames == 0 and info.last_k == -1
+    gw.submit(info.sid, FrameRequest(t=0, mel=_mel(rng), label=1))
+    (r,) = gw.tick()
+    assert r.sid == info.sid and r.t == 0 and r.k == 2
+    assert r.z.shape == (CFG.d_embed,)
+    mid = gw.session(info.sid)
+    assert mid.frames == 1 and mid.last_k == 2 and mid.fill_fraction > 0
+    final = gw.close_session(info.sid)
+    assert final.frames == 1
+    with pytest.raises(KeyError):
+        gw.submit(info.sid, FrameRequest(t=1, mel=_mel(rng)))
+    with pytest.raises(KeyError):
+        gw.session(info.sid)
+    # the row is reusable and starts clean
+    info2 = gw.open_session()
+    assert gw.session(info2.sid).fill_fraction == 0.0
+    s = gw.stats()
+    assert s.sessions_opened == 2 and s.sessions_closed == 1
+    assert s.sessions_open == 1
+
+
+def test_submit_rejects_batched_mel(params):
+    gw = StreamSplitGateway(CFG, params, policy=FixedKPolicy(L, 1),
+                            capacity=2, qos_reserve=0)
+    sid = gw.open_session().sid
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        gw.submit(sid, FrameRequest(t=0, mel=_mel(rng)[None]))
+
+
+def test_admission_error_is_typed_fleet_full(params):
+    gw = StreamSplitGateway(CFG, params, policy=FixedKPolicy(L, 0),
+                            capacity=2, qos_reserve=0)
+    gw.open_session()
+    gw.open_session()
+    with pytest.raises(AdmissionError) as ei:
+        gw.open_session()
+    # the api error IS a FleetFullError (existing guards keep working)
+    assert isinstance(ei.value, FleetFullError)
+    assert ei.value.n_active == 2 and ei.value.capacity == 2
+    assert gw.stats().admission_refusals == 1
+
+
+def test_qos_classes_reserve_headroom(params):
+    """BULK runs out first, then STANDARD; INTERACTIVE fills the fleet."""
+    gw = StreamSplitGateway(CFG, params, policy=FixedKPolicy(L, 0),
+                            capacity=8, qos_reserve=2)
+    for _ in range(4):
+        gw.open_session(qos=QoSClass.BULK)      # admitted while free >= 5
+    with pytest.raises(AdmissionError):
+        gw.open_session(qos=QoSClass.BULK)      # free=4 < 1+2*2
+    for _ in range(2):
+        gw.open_session(qos=QoSClass.STANDARD)  # admitted while free >= 3
+    with pytest.raises(AdmissionError):
+        gw.open_session(qos=QoSClass.STANDARD)  # free=2 < 1+2
+    for _ in range(2):
+        gw.open_session(qos=QoSClass.INTERACTIVE)
+    with pytest.raises(AdmissionError):
+        gw.open_session(qos=QoSClass.INTERACTIVE)  # truly full
+    assert gw.stats().sessions_open == 8
+
+
+# ---------------------------------------------------------------------------
+# k-bucket dispatch parity: gateway z bit-matches per-frame SplitEngine.run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quantize", [True, False])
+def test_bucketed_dispatch_bit_matches_per_frame_run(params, quantize):
+    n = 2 * (L + 1)   # every k twice -> every bucket is a real batch
+    gw = StreamSplitGateway(CFG, params, policy=SpreadPolicy(L),
+                            capacity=n, window=8, qos_reserve=0,
+                            quantize_wire=quantize)
+    eng = SplitEngine(CFG, quantize_wire=quantize)
+    rng = np.random.default_rng(1)
+    sids = [gw.open_session().sid for _ in range(n)]
+    mels = {}
+    for t in range(2):
+        for sid in sids:
+            mels[(sid, t)] = _mel(rng)
+            gw.submit(sid, FrameRequest(t=t, mel=mels[(sid, t)]))
+        results = gw.tick()
+        assert len(results) == n
+        assert sorted({r.k for r in results}) == list(range(L + 1))
+        for r in results:
+            z_ref, _ = eng.run(params, mels[(r.sid, r.t)][None], r.k)
+            np.testing.assert_array_equal(
+                r.z, np.asarray(z_ref)[0],
+                err_msg=f"k={r.k} not bit-identical to per-frame run")
+
+
+def test_results_in_submission_order_with_bucket_sizes(params):
+    gw = StreamSplitGateway(CFG, params,
+                            policy=EntropyThresholdPolicy(L, threshold=0.5,
+                                                          offload_k=2),
+                            capacity=6, window=8, qos_reserve=0)
+    rng = np.random.default_rng(2)
+    sids = [gw.open_session().sid for _ in range(6)]
+    us = [0.1, 0.9, 0.2, 0.8, 0.3, 0.9]
+    for i, sid in enumerate(sids):
+        gw.submit(sid, FrameRequest(t=0, mel=_mel(rng), u=us[i]))
+    results = gw.tick()
+    assert [r.sid for r in results] == sids       # submission order
+    for r, u in zip(results, us):
+        assert r.k == (2 if u > 0.5 else L)
+        assert r.route == ("split" if u > 0.5 else "edge")
+        assert r.bucket_size == 3
+    assert gw.stats().dispatches == 2             # two buckets, two dispatches
+
+
+# ---------------------------------------------------------------------------
+# Wire accounting through the gateway
+# ---------------------------------------------------------------------------
+
+def test_gateway_wire_bytes_match_boundary_bytes_every_k(params):
+    n = L + 1
+    gw = StreamSplitGateway(CFG, params, policy=SpreadPolicy(L),
+                            capacity=n, window=8, qos_reserve=0)
+    per_sample = boundary_bytes(CFG, dtype_bytes=1)
+    rng = np.random.default_rng(3)
+    sids = [gw.open_session().sid for _ in range(n)]
+    for sid in sids:
+        gw.submit(sid, FrameRequest(t=0, mel=_mel(rng)))
+    for r in gw.tick():
+        if r.k == L:
+            assert r.wire_bytes == 0 and r.route == "edge"
+        else:
+            # +8: per-tensor scale/zero header of the INT8 wire format
+            assert r.wire_bytes == per_sample[r.k] + 8, f"k={r.k}"
+    info = gw.session(sids[0])
+    assert info.wire_bytes == per_sample[0] + 8   # frame 0 ran k=0
+    assert gw.stats().wire_bytes == sum(
+        per_sample[k] + 8 for k in range(L))      # k=L ships nothing
+
+
+# ---------------------------------------------------------------------------
+# Refine cadence + lazy sync surface
+# ---------------------------------------------------------------------------
+
+def test_refine_cadence_and_sync_accounting(params):
+    head_init, head_apply = _head()
+    gw = StreamSplitGateway(CFG, params, policy=FixedKPolicy(L, 2),
+                            capacity=2, window=8, qos_reserve=0,
+                            head_init=head_init, head_apply=head_apply,
+                            refine_every=2)
+    rng = np.random.default_rng(4)
+    sid = gw.open_session().sid
+    for t in range(4):
+        gw.submit(sid, FrameRequest(t=t, mel=_mel(rng), label=t % N_CLASSES,
+                                    bandwidth_mbps=30.0, charging=True))
+        gw.tick()
+    s = gw.stats()
+    assert s.refine_rounds == 2                   # ticks 2 and 4
+    assert np.isfinite(s.last_refine_loss)
+    # lazy sync fired (weights push: charging + high bandwidth)
+    assert s.sync_events >= 1 and s.sync_bytes > 0
+    assert gw.session(sid).sync_bytes == s.sync_bytes
+
+
+def test_atomic_transition_counting(params):
+    gw = StreamSplitGateway(CFG, params,
+                            policy=EntropyThresholdPolicy(L, threshold=0.5,
+                                                          offload_k=1),
+                            capacity=2, window=8, qos_reserve=0)
+    rng = np.random.default_rng(5)
+    sid = gw.open_session().sid
+    for t, u in enumerate([0.1, 0.9, 0.9, 0.1]):  # L, 1, 1, L
+        gw.submit(sid, FrameRequest(t=t, mel=_mel(rng), u=u))
+        gw.tick()
+    assert gw.session(sid).transitions == 2       # L->1 and 1->L
+
+
+# ---------------------------------------------------------------------------
+# Policy unification
+# ---------------------------------------------------------------------------
+
+def test_make_policy_covers_all_controller_kinds():
+    obs = np.array([[0.1, 0.2, 0.9],    # low U, idle cpu, high bw
+                    [0.9, 0.9, 0.01]],  # high U, busy cpu, dead link
+                   np.float32)
+    for kind, expected in [("edge", [L, L]), ("server", [0, 0]),
+                           ("static", [3, 3]), ("rule", [2, L]),
+                           ("entropy", [L, 2])]:
+        pol = make_policy(kind, L)
+        assert isinstance(pol, SplitPolicy)
+        np.testing.assert_array_equal(pol.decide(obs), expected, err_msg=kind)
+    with pytest.raises(ValueError):
+        make_policy("nope", L)
+    with pytest.raises(ValueError):
+        make_policy("rl", L)                      # rl needs params
+
+
+def test_rl_policy_batched_matches_greedy_action():
+    from repro.core.ppo import greedy_action, init_policy
+    rl_params = init_policy(jax.random.PRNGKey(0), 3, L + 1)
+    pol = make_policy("rl", L, rl_params=rl_params)
+    rng = np.random.default_rng(6)
+    obs = rng.random((5, 3)).astype(np.float32)
+    ks = pol.decide(obs)
+    for i in range(5):
+        assert ks[i] == greedy_action(rl_params, obs[i]), f"row {i}"
+
+
+def test_gateway_rejects_mismatched_policy_action_space(params):
+    with pytest.raises(ValueError):
+        StreamSplitGateway(CFG, params, policy=FixedKPolicy(L + 3, 1))

@@ -57,6 +57,41 @@ def test_theorem_3_2_interpolation_bound(T, d, k, t_star, seed):
     assert lhs <= rhs * (1 + 1e-8)
 
 
+@pytest.mark.parametrize("T,k", [(6, 5), (6, 3), (10, 5)])
+def test_theorem_3_2_warns_outside_sparse_regime(T, k):
+    """2k >= T: the temporal graph is near-complete and Eq. 5 is not a
+    valid bound — the implementation must say so instead of returning a
+    silently-wrong number."""
+    rng = np.random.default_rng(0)
+    z = rng.normal(size=(T, 2))
+    A = L.temporal_adjacency(T, k=k)
+    with pytest.warns(UserWarning, match="sparse-graph regime"):
+        L.interpolation_error_bound(z, A, 0)
+
+
+def test_theorem_3_2_warns_on_masked_near_complete_graph():
+    """A masked-out first node must not blind the guard: the remaining
+    nodes form a complete graph, which is still outside the regime."""
+    rng = np.random.default_rng(0)
+    T = 6
+    z = rng.normal(size=(T, 2))
+    mask = np.ones(T)
+    mask[0] = 0.0
+    A = L.temporal_adjacency(T, k=T - 1, mask=mask)
+    with pytest.warns(UserWarning, match="sparse-graph regime"):
+        L.interpolation_error_bound(z, A, 1)
+
+
+def test_theorem_3_2_silent_inside_sparse_regime():
+    import warnings as _w
+    rng = np.random.default_rng(0)
+    z = rng.normal(size=(20, 2))
+    A = L.temporal_adjacency(20, k=4)      # 2k=8 < 20
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        L.interpolation_error_bound(z, A, 0)
+
+
 def test_jitter_degrades_spectral_gap():
     """§3.3: temporal shuffling (jitter) raises L_Lap; masking (drops)
     lowers λ₂ — manifold connectivity degrades as predicted."""

@@ -19,6 +19,20 @@ def enc_setup():
     return cfg, params
 
 
+def test_engine_builds_executables_lazily(enc_setup):
+    """A session that only ever uses one k compiles 2 callables, not
+    2·(L+1) — this is what keeps gateway startup O(1) in L."""
+    cfg, params = enc_setup
+    eng = SplitEngine(cfg)
+    assert not eng._edge and not eng._server
+    mel = jax.random.normal(jax.random.PRNGKey(2), (1, cfg.frames,
+                                                    cfg.n_mels))
+    eng.run(params, mel, 2)
+    assert set(eng._edge) == {2} and set(eng._server) == {2}
+    eng.run(params, mel, cfg.n_blocks)       # k=L: edge-only executable
+    assert set(eng._edge) == {2, cfg.n_blocks} and set(eng._server) == {2}
+
+
 def test_split_exact_every_k_fp32(enc_setup):
     cfg, params = enc_setup
     eng = SplitEngine(cfg, quantize_wire=False)

@@ -67,6 +67,45 @@ def test_env_wire_table_matches_boundary_bytes_every_k():
     assert env.wire_fp32[L] == 4 * EMBED_BYTES
 
 
+def test_run_batch_wire_matches_per_frame_run_every_k(setup):
+    """The gateway hot path: per-frame wire bytes of a k-bucketed batch
+    equal a single-frame ``run`` for every k (per-sample quantization)."""
+    params, mel, B = setup
+    for q in (True, False):
+        eng = SplitEngine(CFG, quantize_wire=q)
+        for k in range(CFG.n_blocks + 1):
+            _, wire_single = eng.run(params, mel[:1], k)
+            _, wire_batch = eng.run_batch(params, mel, k)
+            assert wire_batch == wire_single, f"k={k} quantize={q}"
+
+
+def test_gateway_frame_results_match_boundary_bytes_every_k(setup):
+    """End to end: FrameResult.wire_bytes == the boundary_bytes cost table
+    for every split index, on both wire formats."""
+    from repro.api import FrameRequest, StreamSplitGateway
+
+    class Spread:
+        L = CFG.n_blocks
+
+        def decide(self, obs):
+            return np.arange(len(obs), dtype=np.int64) % (self.L + 1)
+
+    params, _, _ = setup
+    rng = np.random.default_rng(0)
+    n = CFG.n_blocks + 1
+    for q, dtype_bytes, header in ((True, 1, 8), (False, 4, 0)):
+        gw = StreamSplitGateway(CFG, params, policy=Spread(), capacity=n,
+                                window=4, qos_reserve=0, quantize_wire=q)
+        per_sample = boundary_bytes(CFG, dtype_bytes=dtype_bytes)
+        for _ in range(n):
+            sid = gw.open_session().sid
+            gw.submit(sid, FrameRequest(
+                t=0, mel=rng.normal(size=(CFG.frames, CFG.n_mels))))
+        for r in gw.tick():
+            expect = 0 if r.k == CFG.n_blocks else per_sample[r.k] + header
+            assert r.wire_bytes == expect, f"k={r.k} quantize={q}"
+
+
 def test_env_step_costs_use_the_wire_table_every_k():
     env = EdgeCloudEnv(EnvCfg())
     for k in range(env.L + 1):
