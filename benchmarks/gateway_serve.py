@@ -20,7 +20,12 @@ contract.)
 Asserts that gateway embeddings are bit-identical to the per-frame path
 before reporting any throughput number.
 
-    PYTHONPATH=src python -m benchmarks.gateway_serve [--quick]
+    PYTHONPATH=src python -m benchmarks.gateway_serve [--quick] [--shards S]
+
+``--shards S`` additionally serves the same workload through a gateway
+whose fleet data plane is a device-resident ``ShardedFleetBackend`` over
+S forced host devices — same bit-parity contract, plus the measured
+host->device ingest/snapshot traffic of the backend.
 """
 from __future__ import annotations
 
@@ -40,8 +45,9 @@ OFFLOAD_K = 2
 THRESHOLD = 0.5
 
 
-def _setup(n):
-    from repro.api import StreamSplitGateway, make_policy
+def _setup(n, *, shards=0):
+    from repro.api import (ShardedFleetBackend, StreamSplitGateway,
+                           make_policy)
     from repro.core.splitter import SplitEngine
     from repro.models.audio_encoder import AudioEncCfg, init_audio_encoder
     cfg = AudioEncCfg(**ENC_KW)
@@ -56,17 +62,27 @@ def _setup(n):
                          offload_k=OFFLOAD_K)
     obs = np.stack([us, np.zeros(n), np.zeros(n)], 1).astype(np.float32)
     ks = policy.decide(obs)
+    if shards:
+        from repro.launch.mesh import make_sessions_mesh
+        backend = ShardedFleetBackend(capacity=n, window=16,
+                                      dim=cfg.d_embed,
+                                      mesh=make_sessions_mesh(shards))
+    else:
+        backend = None
     gw = StreamSplitGateway(cfg, params, policy=policy, capacity=n,
-                            window=16, qos_reserve=0)
+                            window=16, qos_reserve=0, backend=backend)
     sids = [gw.open_session().sid for _ in range(n)]
     return cfg, params, SplitEngine(cfg), gw, sids, mels, us, ks
 
 
-def bench_gateway(n, *, iters):
-    """-> (per-frame f/s, gateway f/s, bit_identical).  Same frames, same
-    k assignment, both materializing every embedding."""
+def bench_gateway(n, *, iters, shards=0, baseline=True):
+    """-> (per-frame f/s, gateway f/s, bit_identical, stats).  Same
+    frames, same k assignment, both materializing every embedding.
+    ``baseline=False`` skips the per-frame timing repetitions (the
+    sharded lane reuses the numbers already measured) — the parity
+    reference round still runs."""
     from repro.api import FrameRequest
-    cfg, params, eng, gw, sids, mels, us, ks = _setup(n)
+    cfg, params, eng, gw, sids, mels, us, ks = _setup(n, shards=shards)
 
     def submit_all(t):
         for i, sid in enumerate(sids):
@@ -91,25 +107,27 @@ def bench_gateway(n, *, iters):
     pf_best, gw_best = float("inf"), float("inf")
     tick = 1
     for _ in range(5):
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            per_frame_round()
-        pf_best = min(pf_best, time.perf_counter() - t0)
+        if baseline:
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                per_frame_round()
+            pf_best = min(pf_best, time.perf_counter() - t0)
         t0 = time.perf_counter()
         for _ in range(iters):
             submit_all(tick)
             gw.tick()
             tick += 1
         gw_best = min(gw_best, time.perf_counter() - t0)
-    return n * iters / pf_best, n * iters / gw_best, bit_identical
+    return n * iters / pf_best, n * iters / gw_best, bit_identical, \
+        gw.stats()
 
 
-def run_all(*, quick=False):
+def run_all(*, quick=False, shards=0):
     sizes = [n for n in SIZES if not (quick and n > 32)]
     result = {}
     for n in sizes:
         iters = max(4, 128 // n)
-        pf, gwf, exact = bench_gateway(n, iters=iters)
+        pf, gwf, exact, _ = bench_gateway(n, iters=iters)
         assert exact, f"gateway embeddings diverged from per-frame at N={n}"
         speedup = gwf / pf
         result[n] = {"per_frame_fps": pf, "gateway_fps": gwf,
@@ -117,6 +135,22 @@ def run_all(*, quick=False):
         row(f"gateway.per_frame.N{n}", 1e6 / pf, "frames/s baseline")
         row(f"gateway.bucketed.N{n}", 1e6 / gwf,
             f"{speedup:.1f}x vs per-frame, bit-identical")
+        if shards and n % shards == 0:
+            _, shf, exact_s, st = bench_gateway(n, iters=iters,
+                                                shards=shards,
+                                                baseline=False)
+            assert exact_s, \
+                f"sharded-backend embeddings diverged at N={n}"
+            assert st.ingest_h2d_bytes == 0, \
+                "device-resident ingest must not move embedding payload"
+            result[n]["sharded_fps"] = shf
+            result[n]["sharded"] = {
+                "shards": st.shards, "shard_frames": st.shard_frames,
+                "ingest_h2d_bytes": st.ingest_h2d_bytes,
+                "snapshot_h2d_bytes": st.snapshot_h2d_bytes}
+            row(f"gateway.bucketed.sharded{st.shards}.N{n}", 1e6 / shf,
+                f"{shf / pf:.1f}x vs per-frame, bit-identical, ingest "
+                f"payload h2d {st.ingest_h2d_bytes} B (device-resident)")
     print("BENCH " + json.dumps({"bench": "gateway_serve",
                                  "enc": ENC_KW["widths"],
                                  "threshold": THRESHOLD,
@@ -129,5 +163,12 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="skip the N=128 point")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="also serve through a device-resident "
+                         "ShardedFleetBackend over this many forced "
+                         "host devices")
     args = ap.parse_args()
-    run_all(quick=args.quick)
+    if args.shards:
+        from benchmarks.fleet_serve import force_host_devices
+        force_host_devices(args.shards)
+    run_all(quick=args.quick, shards=args.shards)

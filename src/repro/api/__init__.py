@@ -6,6 +6,8 @@
 See docs/API.md for the one-pipeline call flow.
 """
 from repro.api.gateway import StreamSplitGateway
+from repro.core.fleet_backend import (FleetBackend, HostFleetBackend,
+                                      ShardedFleetBackend, make_backend)
 from repro.api.policies import (EntropyThresholdPolicy, FixedKPolicy,
                                 RLPolicy, RulePolicy, SplitPolicy,
                                 make_policy)
@@ -14,6 +16,8 @@ from repro.api.types import (AdmissionError, FrameRequest, FrameResult,
 
 __all__ = [
     "StreamSplitGateway",
+    "FleetBackend", "HostFleetBackend", "ShardedFleetBackend",
+    "make_backend",
     "SplitPolicy", "make_policy", "FixedKPolicy", "RulePolicy", "RLPolicy",
     "EntropyThresholdPolicy",
     "FrameRequest", "FrameResult", "SessionInfo", "GatewayStats",

@@ -8,37 +8,41 @@ One typed surface over what used to be six hand-wired call conventions:
     results = gw.tick()          # decide -> k-bucketed dispatch -> ingest
     gw.close_session(info.sid)
 
-Internally the gateway owns admission into a ``FleetBuffer``, per-tick
-**k-bucketed batched split execution**, periodic ``FleetRefiner`` rounds,
-and per-session ``LazySync`` accounting.  The serving hot path: every
-frame whose policy decision landed on the same split index k rides ONE
-padded ``SplitEngine.run_batch`` dispatch (the serving analogue of
+Internally the gateway owns admission into a ``FleetBackend``, per-tick
+**k-bucketed batched split execution**, periodic fleet refinement
+rounds, and per-session ``LazySync`` accounting.  The fleet data plane
+is pluggable (``backend=``): the default ``HostFleetBackend`` keeps the
+session rings in host numpy, while ``ShardedFleetBackend`` keeps them
+device-resident and sharded over a ``sessions`` mesh axis, refining the
+whole fleet in one ``shard_map`` step (see ``core/fleet_backend.py`` and
+``docs/SHARDING.md``).  The serving hot path: every frame whose policy
+decision landed on the same split index k rides ONE padded
+``SplitEngine.run_batch`` dispatch (the serving analogue of
 ``CascadeServer.handle``'s two sub-batches) instead of one ``run()`` per
 frame — embeddings stay bit-identical to the per-frame path
 (``benchmarks/gateway_serve.py`` measures the speedup and asserts the
 bit-parity; ``tests/test_gateway.py`` pins it).
+
+All wall-clock reads go through the injectable ``clock=`` callable
+(default ``time.perf_counter``), so latency/uptime numbers in
+``FrameResult``/``GatewayStats`` are deterministic under a fake clock in
+tests.
 """
 from __future__ import annotations
 
-import math
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.api.policies import SplitPolicy
 from repro.api.types import (AdmissionError, FrameRequest, FrameResult,
                              GatewayStats, QoSClass, SessionInfo)
 from repro.core.env import EdgeCloudEnv
-from repro.core.fleet import FleetBuffer, FleetFullError, FleetRefiner
+from repro.core.fleet import FleetFullError, HostFleetBackend, pad_pow2
 from repro.core.splitter import SplitEngine
 from repro.core.sync import LazySync, SyncCfg
-
-
-def _pad_pow2(n):
-    """Next power of two — each k compiles O(log capacity) bucket shapes
-    instead of one executable per batch size."""
-    return 1 << max(0, math.ceil(math.log2(n)))
 
 
 class _Session:
@@ -68,21 +72,30 @@ class StreamSplitGateway:
         executes (``core/*`` semantics unchanged — the gateway is a
         dispatch layer, not a new model).
     policy : a batched ``SplitPolicy`` (see ``api/policies.py``).
+    backend : a ``FleetBackend`` owning the session rings + refinement.
+        Defaults to a ``HostFleetBackend`` built from ``capacity`` /
+        ``window`` / ``head_init`` / ``head_apply`` / ``refine_lr`` /
+        ``seed``; pass a ``ShardedFleetBackend`` to shard the fleet over
+        a ``sessions`` mesh (those ctor args are then ignored — the
+        backend already owns them).
     capacity, window : fleet dimensions; the server-side temporal rings
         are ``(capacity, window, enc_cfg.d_embed)``.
-    head_init, head_apply : optional task head for ``FleetRefiner``;
+    head_init, head_apply : optional task head for fleet refinement;
         without them the gateway serves embeddings but never refines.
     refine_every : run one fleet-wide refinement round every this many
         ticks (0 disables).
     qos_reserve : fleet rows held back from BULK (2x) and STANDARD (1x)
         admissions so INTERACTIVE tenants always find room; defaults to
         ``capacity // 8``.
+    clock : zero-arg callable returning seconds (default
+        ``time.perf_counter``) — every timing stat derives from it.
     """
 
     def __init__(self, enc_cfg, params, *, policy: SplitPolicy,
-                 capacity=64, window=100, head_init=None, head_apply=None,
-                 refine_every=0, quantize_wire=True, sync_cfg=None,
-                 qos_reserve=None, refine_lr=1e-2, seed=0):
+                 backend=None, capacity=64, window=100, head_init=None,
+                 head_apply=None, refine_every=0, quantize_wire=True,
+                 sync_cfg=None, qos_reserve=None, refine_lr=1e-2, seed=0,
+                 clock=time.perf_counter):
         if policy.L != enc_cfg.n_blocks:
             raise ValueError(
                 f"policy action space L={policy.L} != encoder "
@@ -91,16 +104,22 @@ class StreamSplitGateway:
         self.params = params
         self.policy = policy
         self.engine = SplitEngine(enc_cfg, quantize_wire=quantize_wire)
-        self.fleet = FleetBuffer(capacity=capacity, window=window,
-                                 dim=enc_cfg.d_embed)
+        if backend is None:
+            backend = HostFleetBackend(
+                capacity=capacity, window=window, dim=enc_cfg.d_embed,
+                head_init=head_init, head_apply=head_apply, lr=refine_lr,
+                seed=seed)
+        elif backend.dim != enc_cfg.d_embed:
+            raise ValueError(
+                f"backend dim={backend.dim} != encoder "
+                f"d_embed={enc_cfg.d_embed}")
+        self.backend = backend
         self.sync_cfg = sync_cfg or SyncCfg()
-        self.qos_reserve = (capacity // 8 if qos_reserve is None
+        self.qos_reserve = (backend.capacity // 8 if qos_reserve is None
                             else qos_reserve)
-        self.refiner = None
         self.refine_every = refine_every
-        if head_init is not None:
-            self.refiner = FleetRefiner(head_init, head_apply, lr=refine_lr,
-                                        seed=seed)
+        self._clock = clock
+        self._t_start = clock()
         self._key = jax.random.PRNGKey(seed)
         self._sessions: dict[int, _Session] = {}
         self._pending: list[tuple[int, FrameRequest]] = []
@@ -116,27 +135,29 @@ class StreamSplitGateway:
         self._sync_events = 0
         self._refine_rounds = 0
         self._last_refine_loss = float("nan")
+        self._last_tick_ms = 0.0
         self._routed = {"edge": 0, "split": 0, "server": 0}
+        self._shard_frames = np.zeros(backend.shards, np.int64)
 
     # -- session lifecycle ---------------------------------------------------
     def open_session(self, platform="pi4",
                      qos: QoSClass = QoSClass.STANDARD) -> SessionInfo:
         """Admit a session into the fleet; raises ``AdmissionError`` (a
         ``FleetFullError``) when its QoS class finds no headroom."""
-        free = self.fleet.capacity - self.fleet.n_active
+        free = self.backend.capacity - self.backend.n_active
         need = {QoSClass.INTERACTIVE: 1,
                 QoSClass.STANDARD: 1 + self.qos_reserve,
                 QoSClass.BULK: 1 + 2 * self.qos_reserve}[qos]
         if free < need:
             self._refusals += 1
-            raise AdmissionError(qos, self.fleet.n_active,
-                                 self.fleet.capacity)
+            raise AdmissionError(qos, self.backend.n_active,
+                                 self.backend.capacity)
         try:
-            sid = self.fleet.admit()
+            sid = self.backend.admit()
         except FleetFullError:
             self._refusals += 1
-            raise AdmissionError(qos, self.fleet.n_active,
-                                 self.fleet.capacity) from None
+            raise AdmissionError(qos, self.backend.n_active,
+                                 self.backend.capacity) from None
         self._sessions[sid] = _Session(sid, platform, qos, self.sync_cfg)
         self._opened += 1
         return self.session(sid)
@@ -147,14 +168,14 @@ class StreamSplitGateway:
             sid=s.sid, platform=s.platform, qos=s.qos, frames=s.frames,
             wire_bytes=s.wire_bytes, sync_bytes=s.sync.total_bytes,
             sync_events=len(s.sync.events), transitions=s.transitions,
-            last_k=s.last_k, fill_fraction=self.fleet.fill_fraction(sid))
+            last_k=s.last_k, fill_fraction=self.backend.fill_fraction(sid))
 
     def close_session(self, sid) -> SessionInfo:
         """Evict the session (O(1) — the fleet row is wiped lazily on its
         next admission).  Unserved pending frames are discarded."""
         info = self.session(sid)
         self._pending = [(s, f) for s, f in self._pending if s != sid]
-        self.fleet.evict(sid)
+        self.backend.evict(sid)
         del self._sessions[sid]
         self._closed += 1
         return info
@@ -180,8 +201,10 @@ class StreamSplitGateway:
     def tick(self) -> list[FrameResult]:
         """Decide -> k-bucketed batched dispatch -> ingest -> sync ->
         (periodic) refine.  Returns results in submission order."""
+        t0 = self._clock()
         pending, self._pending = self._pending, []
         results: list[FrameResult | None] = [None] * len(pending)
+        self._tick_dev: list = []     # (bucket idx, device z) per dispatch
         if pending:
             # normalize bandwidth exactly like the control-plane env so RL
             # policies see the feature scale they were trained on
@@ -197,28 +220,31 @@ class StreamSplitGateway:
                 self._dispatch(k, idx, pending, results)
             self._ingest(pending, results)
         self._ticks += 1
-        if (self.refiner is not None and self.refine_every
+        if (self.backend.can_refine and self.refine_every
                 and self._ticks % self.refine_every == 0
-                and self.fleet.n_active):
+                and self.backend.n_active):
             key = jax.random.fold_in(self._key, self._refine_rounds)
-            loss, _, _ = self.refiner.refine(key, self.fleet)
+            loss, _, _ = self.backend.refine(key)
             self._refine_rounds += 1
             self._last_refine_loss = loss
+        self._last_tick_ms = (self._clock() - t0) * 1e3
         return results  # type: ignore[return-value]
 
     def _dispatch(self, k, idx, pending, results):
         """ONE padded SplitEngine dispatch for every frame bucketed at k."""
-        t0 = time.perf_counter()
+        t0 = self._clock()
         mel = np.stack([np.asarray(pending[i][1].mel, np.float32)
                         for i in idx])
-        pad = _pad_pow2(len(idx))
+        pad = pad_pow2(len(idx))
         if pad > len(idx):   # repeat-pad: shape buckets stay compiled
             mel = np.concatenate(
                 [mel, np.broadcast_to(mel[:1], (pad - len(idx),)
                                       + mel.shape[1:])])
-        z, wire = self.engine.run_batch(self.params, mel, k)
-        z = np.asarray(jax.block_until_ready(z))[:len(idx)]
-        ms = (time.perf_counter() - t0) * 1e3 / len(idx)
+        z_dev, wire = self.engine.run_batch(self.params, mel, k)
+        if self.backend.device_ingest:   # fleet ingest skips the host hop
+            self._tick_dev.append((idx, z_dev[:len(idx)]))
+        z = np.asarray(jax.block_until_ready(z_dev))[:len(idx)]
+        ms = (self._clock() - t0) * 1e3 / len(idx)
         route = ("edge" if k >= self.cfg.n_blocks
                  else "server" if k == 0 else "split")
         self._dispatches += 1
@@ -238,12 +264,25 @@ class StreamSplitGateway:
                 wire_bytes=wire, latency_ms=ms, bucket_size=len(idx))
 
     def _ingest(self, pending, results):
-        """Fleet-buffer ingest + per-session lazy-sync accounting."""
+        """Fleet-backend ingest + per-session lazy-sync accounting.
+
+        On a device-resident backend the embeddings are handed over as
+        the ``jax.Array``s the dispatches produced (reassembled into
+        submission order on device) — the host copy in ``results`` exists
+        only for the clients, never for the fleet."""
         sids = np.array([sid for sid, _ in pending], np.int64)
         ts = np.array([f.t for _, f in pending], np.int64)
-        zs = np.stack([r.z for r in results])
+        if self.backend.device_ingest:
+            order = np.concatenate(
+                [np.asarray(idx) for idx, _ in self._tick_dev])
+            zs = jnp.concatenate([z for _, z in self._tick_dev])[
+                np.argsort(order)]
+        else:
+            zs = np.stack([r.z for r in results])
         labels = np.array([f.label for _, f in pending], np.int64)
-        self.fleet.insert_batch(sids, ts, zs, labels)
+        self.backend.insert_batch(sids, ts, zs, labels)
+        self._shard_frames += np.bincount(
+            self.backend.shards_of(sids), minlength=self.backend.shards)
         for sid, req in pending:
             s = self._sessions[sid]
             for ev in s.sync.on_frame(req.t, charging=req.charging,
@@ -262,4 +301,10 @@ class StreamSplitGateway:
             sync_bytes=self._sync_bytes, sync_events=self._sync_events,
             refine_rounds=self._refine_rounds,
             last_refine_loss=self._last_refine_loss,
-            routed=dict(self._routed))
+            routed=dict(self._routed),
+            backend=self.backend.kind, shards=self.backend.shards,
+            shard_frames=tuple(int(v) for v in self._shard_frames),
+            snapshot_h2d_bytes=self.backend.snapshot_h2d_bytes,
+            ingest_h2d_bytes=self.backend.ingest_h2d_bytes,
+            uptime_s=self._clock() - self._t_start,
+            last_tick_ms=self._last_tick_ms)

@@ -117,6 +117,15 @@ class GatewayStats:
     refine_rounds: int
     last_refine_loss: float    # nan before the first round
     routed: dict               # route -> frame count ("edge"/"split"/"server")
+    # fleet-backend data plane (host vs device-resident sharded)
+    backend: str = "host"      # FleetBackend.kind
+    shards: int = 1            # session mesh-axis size (1 on host backend)
+    shard_frames: tuple = ()   # frames ingested per session shard
+    snapshot_h2d_bytes: int = 0  # fleet snapshot bytes copied per refine
+    ingest_h2d_bytes: int = 0  # frame payload bytes moved host->device
+    # deterministic under an injected clock= (see StreamSplitGateway)
+    uptime_s: float = 0.0      # clock() - clock() at construction
+    last_tick_ms: float = 0.0  # wall-clock of the most recent tick()
 
     @property
     def frames_per_dispatch(self) -> float:

@@ -1,243 +1,27 @@
-"""Fleet serving: many concurrent client sessions, one refinement step.
+"""Compatibility facade over the fleet data plane.
 
-The single-stream path (``core/server.py``) refines one ``TemporalBuffer``
-per ``ServerRefiner.refine`` call — fine for a demo, hopeless for the
-ROADMAP's "millions of users" regime where the server juggles thousands of
-parallel split-learning sessions (cf. parallel split learning: EPSL /
-AdaSplit).  This module packs the whole fleet into dense arrays so the
-server does ONE device dispatch per refinement round:
+The original single-module fleet layer was split along the backend seam:
 
-- ``FleetBuffer`` — N session rings in ``(N, W, d)`` / ``(N, W)`` arrays
-  with per-session write cursors, gap masks and O(1) admission/eviction
-  through a free-list.  Row semantics are identical to ``TemporalBuffer``
-  (same ``-(1 << 60)`` timestamp sentinel, same ring expiry, same
-  gap-mask snapshot).
-- ``FleetRefiner`` — the ServerRefiner hybrid loss vmapped over the
-  session axis inside a single jit: one fleet-shared SWD draw (common
-  random numbers), mask-weighted task/Laplacian terms (the SWD term sees
-  gap-zeroed embeddings, exactly as in ServerRefiner), inactive rows
-  weighted out of the gradient, one optimizer update for the shared head.
+- ``core/fleet_buffer.py``  — host-side ``FleetBuffer`` session rings;
+- ``core/fleet_refiner.py`` — ``FleetRefiner`` + the shared
+  ``make_fleet_loss`` builder (with the cross-shard ``axis_name`` hooks);
+- ``core/fleet_backend.py`` — the ``FleetBackend`` abstraction:
+  ``HostFleetBackend`` (the old path) and ``ShardedFleetBackend``
+  (device-resident rings over a ``sessions`` mesh axis).
 
-A ``FleetRefiner`` step over N=1 is numerically the ``ServerRefiner``
-step (tested to fp32 tolerance in ``tests/test_fleet.py``).
+Every pre-split import keeps working through this module.
 """
-from __future__ import annotations
+from repro.core.fleet_backend import (FleetBackend, HostFleetBackend,
+                                      ShardedFleetBackend, T_SENTINEL_DEV,
+                                      make_backend)
+from repro.core.fleet_buffer import (FleetBuffer, FleetFullError, T_SENTINEL,
+                                     as_host, pad_pow2)
+from repro.core.fleet_refiner import (FleetRefiner, FleetRefinerState,
+                                      make_fleet_loss)
 
-from dataclasses import dataclass
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.hybrid import HybridCfg
-from repro.core.laplacian import laplacian_loss
-from repro.core.swd import (bitonic_diff_sort, diff_sort, random_directions,
-                            sphere_prior_samples)
-
-# Timestamp sentinel: far below any reachable negative window index, so an
-# empty slot can never alias a real frame index (see test_fleet.py).
-T_SENTINEL = -(1 << 60)
-
-
-class FleetFullError(RuntimeError):
-    """Raised by ``FleetBuffer.admit`` when every session row is in use."""
-
-
-class FleetBuffer:
-    """N temporal ring buffers packed into dense arrays.
-
-    Each *row* is one client session with ``TemporalBuffer`` semantics:
-    frames keyed by absolute index ``t`` land in slot ``t % window``,
-    older frames expire by overwrite, and ``snapshot`` returns the last
-    ``window`` frames in temporal order with a validity (gap) mask.
-    Admission hands out the lowest free row in O(1); eviction resets the
-    row and returns it to the free-list in O(1).
-    """
-
-    def __init__(self, capacity=32, window=100, dim=128):
-        self.capacity = capacity
-        self.window = window
-        self.dim = dim
-        self.z = np.zeros((capacity, window, dim), np.float32)
-        self.t = np.full((capacity, window), T_SENTINEL, np.int64)
-        self.label = np.full((capacity, window), -1, np.int64)
-        self.newest = np.full((capacity,), -1, np.int64)
-        self.active = np.zeros((capacity,), bool)
-        self._dirty = np.zeros((capacity,), bool)      # lazy wipe-on-admit
-        self._free = list(range(capacity - 1, -1, -1))  # stack: pop -> row 0
-
-    # -- session lifecycle (O(1)) -------------------------------------------
-    @property
-    def n_active(self):
-        return int(self.active.sum())
-
-    def admit(self):
-        """-> session row id (sid).  Raises FleetFullError when full.
-
-        O(1) except when re-admitting onto a row left dirty by ``evict``,
-        which pays the deferred O(W·d) wipe here — a future tenant never
-        sees the previous tenant's frames (tested against a clean-row
-        oracle in ``tests/test_fleet.py``)."""
-        if not self._free:
-            raise FleetFullError(f"all {self.capacity} session rows in use")
-        sid = self._free.pop()
-        if self._dirty[sid]:
-            self.z[sid] = 0.0
-            self.t[sid] = T_SENTINEL
-            self.label[sid] = -1
-            self.newest[sid] = -1
-            self._dirty[sid] = False
-        self.active[sid] = True
-        return sid
-
-    def evict(self, sid):
-        """Release a session row.  O(1) in *bytes* as well as bookkeeping:
-        the row is only marked dirty — ``snapshot`` already masks inactive
-        rows out of every consumer, and the wipe is deferred to the next
-        ``admit`` of this row (lazy wipe-on-admit)."""
-        if not self.active[sid]:
-            raise KeyError(f"session {sid} is not active")
-        self.active[sid] = False
-        self._dirty[sid] = True
-        self._free.append(sid)
-
-    # -- ingest --------------------------------------------------------------
-    def insert(self, sid, t, z, label=-1):
-        if not self.active[sid]:
-            raise KeyError(f"session {sid} is not active")
-        slot = t % self.window
-        self.z[sid, slot] = np.asarray(z, np.float32)
-        self.t[sid, slot] = t
-        self.label[sid, slot] = label
-        self.newest[sid] = max(self.newest[sid], t)
-
-    def insert_batch(self, sids, ts, zs, labels=None):
-        """Vectorized ingest of one frame per (distinct) session."""
-        sids = np.asarray(sids, np.int64)
-        ts = np.asarray(ts, np.int64)
-        if not self.active[sids].all():
-            raise KeyError("insert_batch into inactive session")
-        slots = ts % self.window
-        self.z[sids, slots] = np.asarray(zs, np.float32)
-        self.t[sids, slots] = ts
-        if labels is None:
-            self.label[sids, slots] = -1
-        else:
-            self.label[sids, slots] = np.asarray(labels, np.int64)
-        np.maximum.at(self.newest, sids, ts)
-
-    # -- snapshot ------------------------------------------------------------
-    def snapshot(self):
-        """-> (z (N, W, d), mask (N, W), labels (N, W)) in temporal order.
-
-        mask=0 marks gaps, expired frames, empty sessions, and every slot
-        of inactive rows — exactly the weights the vmapped loss consumes.
-        """
-        N, W = self.capacity, self.window
-        lo = self.newest - W + 1                       # (N,)
-        order = lo[:, None] + np.arange(W)[None, :]     # (N, W)
-        slots = order % W
-        rows = np.arange(N)[:, None]
-        valid = (self.t[rows, slots] == order)
-        valid &= (self.newest >= 0)[:, None] & self.active[:, None]
-        z = np.where(valid[:, :, None], self.z[rows, slots], 0.0)
-        labels = np.where(valid, self.label[rows, slots], -1)
-        return z.astype(np.float32), valid.astype(np.float32), labels
-
-    def fill_fraction(self, sid):
-        """Fraction of this session's window that holds live frames —
-        O(W) from the timestamp ring, no fleet-wide snapshot."""
-        if not self.active[sid] or self.newest[sid] < 0:
-            return 0.0
-        order = np.arange(self.newest[sid] - self.window + 1,
-                          self.newest[sid] + 1)
-        return float((self.t[sid, order % self.window] == order).mean())
-
-
-@dataclass
-class FleetRefinerState:
-    params: dict
-    opt_state: tuple
-    step: int = 0
-
-
-class FleetRefiner:
-    """One hybrid-loss refinement step for the whole fleet in a single jit.
-
-    Per-session losses reuse the exact ``ServerRefiner`` math (masked CE
-    task term when sparse labels exist, SWD + Laplacian regularizers over
-    the gap-masked snapshot) vmapped over the session axis.  The SWD
-    directions/prior are drawn ONCE per step and shared by every session
-    (common random numbers — see fleet_loss).  Session losses are
-    averaged over *active* rows only and one SGD step updates the shared
-    head.
-    """
-
-    def __init__(self, head_init, head_apply, *, cfg: HybridCfg = HybridCfg(),
-                 lr=1e-2, seed=0):
-        from repro.optim.sgd import sgd_init, sgd_update
-        self.cfg = cfg
-        self.head_apply = head_apply
-        params = head_init(jax.random.PRNGKey(seed))
-        self._sgd_update = sgd_update
-        self.state = FleetRefinerState(params, sgd_init(params), 0)
-        self.lr = lr
-
-        def session_loss(params, z, mask, labels, dirs, prior_q):
-            # per-session math identical to ServerRefiner's loss_fn (the
-            # N=1 parity test pins this); the SWD slice quantile targets
-            # arrive precomputed
-            logits = head_apply(params, z)
-            have_labels = labels >= 0
-            lab = jnp.maximum(labels, 0)
-            logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
-            ce = -jnp.take_along_axis(logp, lab[:, None], 1)[:, 0]
-            w = mask * have_labels.astype(jnp.float32)
-            task = jnp.sum(ce * w) / jnp.maximum(jnp.sum(w), 1.0)
-            px = bitonic_diff_sort(z.astype(jnp.float32) @ dirs.T)
-            sw = jnp.mean(jnp.square(px - prior_q))
-            lap = laplacian_loss(z, k=cfg.knn, mask=mask)
-            loss = task + cfg.lam_sw * sw + cfg.lam_lap * lap
-            return loss, {"task": task, "sw": sw, "lap": lap}
-
-        def fleet_loss(params, key, z, mask, labels, active):
-            # Common random numbers across the fleet: ONE directions/prior
-            # draw (exactly ServerRefiner's draw from the same key, so N=1
-            # stays bit-identical) shared by every session.  Besides
-            # variance reduction, this sorts the prior slice quantiles once
-            # instead of once per session — the sequential path's dominant
-            # cost after the data sort itself.
-            kd, kp = jax.random.split(key)
-            dirs = random_directions(kd, cfg.n_dirs, z.shape[-1])
-            prior = sphere_prior_samples(kp, z.shape[1], z.shape[-1])
-            prior_q = diff_sort(prior @ dirs.T, axis=0)       # (W, M)
-            losses, parts = jax.vmap(
-                session_loss, in_axes=(None, 0, 0, 0, None, None))(
-                    params, z, mask, labels, dirs, prior_q)
-            w = active / jnp.maximum(jnp.sum(active), 1.0)
-            parts = {k: jnp.sum(v * w) for k, v in parts.items()}
-            return jnp.sum(losses * w), (losses, parts)
-
-        self._grad = jax.jit(jax.value_and_grad(fleet_loss, has_aux=True))
-
-    def refine(self, key, fleet: FleetBuffer):
-        """One fleet-wide step with ``key`` seeding the single
-        fleet-shared SWD draw — pass ServerRefiner's key to reproduce its
-        N=1 step exactly (the parity test does).
-
-        -> (mean active loss, mean active parts, per-session losses (N,)).
-        """
-        z, mask, labels = fleet.snapshot()
-        return self.refine_arrays(key, z, mask, labels, fleet.active)
-
-    def refine_arrays(self, key, z, mask, labels, active):
-        """Device-side step on a prepared snapshot (benchmark hot path)."""
-        (loss, (losses, parts)), grads = self._grad(
-            self.state.params, key, jnp.asarray(z), jnp.asarray(mask),
-            jnp.asarray(labels), jnp.asarray(active, jnp.float32))
-        params, opt_state = self._sgd_update(
-            self.state.params, grads, self.state.opt_state, lr=self.lr,
-            momentum=0.9)
-        self.state = FleetRefinerState(params, opt_state, self.state.step + 1)
-        return (float(loss), {k: float(v) for k, v in parts.items()},
-                np.asarray(losses))
+__all__ = [
+    "FleetBuffer", "FleetFullError", "T_SENTINEL", "as_host", "pad_pow2",
+    "FleetRefiner", "FleetRefinerState", "make_fleet_loss",
+    "FleetBackend", "HostFleetBackend", "ShardedFleetBackend",
+    "T_SENTINEL_DEV", "make_backend",
+]

@@ -1,0 +1,157 @@
+"""Host-side fleet session rings: N temporal buffers in dense arrays.
+
+Extracted from the original ``core/fleet.py`` (which now re-exports this
+module) when the fleet data plane grew a backend seam — ``FleetBuffer``
+is the *host* storage implementation behind ``HostFleetBackend``
+(``core/fleet_backend.py``); the device-resident sharded twin keeps the
+same ``(N, W, d)`` layout as ``jax.Array``s on a ``sessions`` mesh axis.
+
+Row semantics are identical to ``TemporalBuffer`` (same ``-(1 << 60)``
+timestamp sentinel, same ring expiry, same gap-mask snapshot).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+# Timestamp sentinel: far below any reachable negative window index, so an
+# empty slot can never alias a real frame index (see test_fleet.py).
+T_SENTINEL = -(1 << 60)
+
+
+class FleetFullError(RuntimeError):
+    """Raised by ``FleetBuffer.admit`` when every session row is in use."""
+
+
+def as_host(x, dtype):
+    """``np.asarray`` that treats ``jax.Array`` inputs as first-class:
+    one device->host transfer, and no second conversion copy when the
+    dtype already matches (the ingest hot path feeds float32 embeddings
+    straight from the split engine)."""
+    if isinstance(x, jax.Array):
+        x = np.asarray(jax.device_get(x))
+    else:
+        x = np.asarray(x)
+    return x if x.dtype == dtype else x.astype(dtype)
+
+
+def pad_pow2(n):
+    """Next power of two (1 for n <= 1) — pow2-padded batches keep the
+    compile cache at O(log capacity) shapes per call site (gateway
+    k-buckets, sharded fleet ingest)."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+class FleetBuffer:
+    """N temporal ring buffers packed into dense arrays.
+
+    Each *row* is one client session with ``TemporalBuffer`` semantics:
+    frames keyed by absolute index ``t`` land in slot ``t % window``,
+    older frames expire by overwrite, and ``snapshot`` returns the last
+    ``window`` frames in temporal order with a validity (gap) mask.
+    Admission hands out the lowest free row in O(1); eviction resets the
+    row and returns it to the free-list in O(1).
+    """
+
+    def __init__(self, capacity=32, window=100, dim=128):
+        self.capacity = capacity
+        self.window = window
+        self.dim = dim
+        self.z = np.zeros((capacity, window, dim), np.float32)
+        self.t = np.full((capacity, window), T_SENTINEL, np.int64)
+        self.label = np.full((capacity, window), -1, np.int64)
+        self.newest = np.full((capacity,), -1, np.int64)
+        self.active = np.zeros((capacity,), bool)
+        self._dirty = np.zeros((capacity,), bool)      # lazy wipe-on-admit
+        self._free = list(range(capacity - 1, -1, -1))  # stack: pop -> row 0
+
+    # -- session lifecycle (O(1)) -------------------------------------------
+    @property
+    def n_active(self):
+        return int(self.active.sum())
+
+    def admit(self):
+        """-> session row id (sid).  Raises FleetFullError when full.
+
+        O(1) except when re-admitting onto a row left dirty by ``evict``,
+        which pays the deferred O(W·d) wipe here — a future tenant never
+        sees the previous tenant's frames (tested against a clean-row
+        oracle in ``tests/test_fleet.py``)."""
+        if not self._free:
+            raise FleetFullError(f"all {self.capacity} session rows in use")
+        sid = self._free.pop()
+        if self._dirty[sid]:
+            self.z[sid] = 0.0
+            self.t[sid] = T_SENTINEL
+            self.label[sid] = -1
+            self.newest[sid] = -1
+            self._dirty[sid] = False
+        self.active[sid] = True
+        return sid
+
+    def evict(self, sid):
+        """Release a session row.  O(1) in *bytes* as well as bookkeeping:
+        the row is only marked dirty — ``snapshot`` already masks inactive
+        rows out of every consumer, and the wipe is deferred to the next
+        ``admit`` of this row (lazy wipe-on-admit)."""
+        if not self.active[sid]:
+            raise KeyError(f"session {sid} is not active")
+        self.active[sid] = False
+        self._dirty[sid] = True
+        self._free.append(sid)
+
+    # -- ingest --------------------------------------------------------------
+    def insert(self, sid, t, z, label=-1):
+        if not self.active[sid]:
+            raise KeyError(f"session {sid} is not active")
+        slot = t % self.window
+        self.z[sid, slot] = as_host(z, np.float32)
+        self.t[sid, slot] = t
+        self.label[sid, slot] = label
+        self.newest[sid] = max(self.newest[sid], t)
+
+    def insert_batch(self, sids, ts, zs, labels=None):
+        """Vectorized ingest of one frame per (distinct) session.
+
+        Accepts ``jax.Array`` inputs without an extra conversion copy
+        (one device->host transfer, reused in place when the dtype
+        already matches)."""
+        sids = as_host(sids, np.int64)
+        ts = as_host(ts, np.int64)
+        if not self.active[sids].all():
+            raise KeyError("insert_batch into inactive session")
+        slots = ts % self.window
+        self.z[sids, slots] = as_host(zs, np.float32)
+        self.t[sids, slots] = ts
+        if labels is None:
+            self.label[sids, slots] = -1
+        else:
+            self.label[sids, slots] = as_host(labels, np.int64)
+        np.maximum.at(self.newest, sids, ts)
+
+    # -- snapshot ------------------------------------------------------------
+    def snapshot(self):
+        """-> (z (N, W, d), mask (N, W), labels (N, W)) in temporal order.
+
+        mask=0 marks gaps, expired frames, empty sessions, and every slot
+        of inactive rows — exactly the weights the vmapped loss consumes.
+        """
+        N, W = self.capacity, self.window
+        lo = self.newest - W + 1                       # (N,)
+        order = lo[:, None] + np.arange(W)[None, :]     # (N, W)
+        slots = order % W
+        rows = np.arange(N)[:, None]
+        valid = (self.t[rows, slots] == order)
+        valid &= (self.newest >= 0)[:, None] & self.active[:, None]
+        z = np.where(valid[:, :, None], self.z[rows, slots], 0.0)
+        labels = np.where(valid, self.label[rows, slots], -1)
+        return z.astype(np.float32), valid.astype(np.float32), labels
+
+    def fill_fraction(self, sid):
+        """Fraction of this session's window that holds live frames —
+        O(W) from the timestamp ring, no fleet-wide snapshot."""
+        if not self.active[sid] or self.newest[sid] < 0:
+            return 0.0
+        order = np.arange(self.newest[sid] - self.window + 1,
+                          self.newest[sid] + 1)
+        return float((self.t[sid, order % self.window] == order).mean())

@@ -1,0 +1,150 @@
+"""Fleet refinement: one hybrid-loss step over N sessions in a single jit.
+
+Extracted from the original ``core/fleet.py`` (which now re-exports this
+module).  The loss builder is shared with the device-resident sharded
+backend (``core/fleet_backend.py``): ``make_fleet_loss(axis_name=...)``
+produces the *same* per-session math with the cross-shard aggregation
+expressed through the collective hooks the repo already had —
+``jax.lax.psum`` of the active-session normalizer (the estimator family
+of ``swd_loss(axis_name=...)`` / ``gmm.em_update(axis_name=...)``) so
+one refine step trains on the whole fleet across a ``sessions`` mesh
+axis.  With ``axis_name=None`` the function is bit-for-bit the original
+single-host loss.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hybrid import HybridCfg
+from repro.core.laplacian import laplacian_loss
+from repro.core.swd import (bitonic_diff_sort, diff_sort, random_directions,
+                            sphere_prior_samples)
+
+
+def make_fleet_loss(head_apply, cfg: HybridCfg, *, axis_name=None,
+                    axis_size=1):
+    """-> fleet_loss(params, key, z, mask, labels, active).
+
+    Per-session losses reuse the exact ``ServerRefiner`` math (masked CE
+    task term when sparse labels exist, SWD + Laplacian regularizers over
+    the gap-masked snapshot) vmapped over the session axis.  The SWD
+    directions/prior are drawn ONCE per step and shared by every session
+    (common random numbers).  Session losses are averaged over *active*
+    rows only.
+
+    With ``axis_name`` the session axis is sharded: the active-row
+    normalizer is ``psum``'d so every shard weights its local sessions by
+    the *global* active count, and the returned loss/parts are pre-scaled
+    by ``axis_size`` so that a ``pmean`` over the axis (gradients included
+    — see ``distributed.grad_sync.pmean_grads``) reconstructs exactly the
+    global sum.  At ``axis_size == 1`` every collective is an identity and
+    the scaling is skipped, so a 1-shard mesh is bit-identical to the
+    unsharded loss (pinned in ``tests/test_fleet_backend.py``).
+    """
+
+    def session_loss(params, z, mask, labels, dirs, prior_q):
+        # per-session math identical to ServerRefiner's loss_fn (the
+        # N=1 parity test pins this); the SWD slice quantile targets
+        # arrive precomputed
+        logits = head_apply(params, z)
+        have_labels = labels >= 0
+        lab = jnp.maximum(labels, 0)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        ce = -jnp.take_along_axis(logp, lab[:, None], 1)[:, 0]
+        w = mask * have_labels.astype(jnp.float32)
+        task = jnp.sum(ce * w) / jnp.maximum(jnp.sum(w), 1.0)
+        px = bitonic_diff_sort(z.astype(jnp.float32) @ dirs.T)
+        sw = jnp.mean(jnp.square(px - prior_q))
+        lap = laplacian_loss(z, k=cfg.knn, mask=mask)
+        loss = task + cfg.lam_sw * sw + cfg.lam_lap * lap
+        return loss, {"task": task, "sw": sw, "lap": lap}
+
+    def fleet_loss(params, key, z, mask, labels, active):
+        # Common random numbers across the fleet: ONE directions/prior
+        # draw (exactly ServerRefiner's draw from the same key, so N=1
+        # stays bit-identical) shared by every session — and, sharded,
+        # by every shard: the key is replicated, so each shard draws the
+        # same dirs/prior and per-session terms match the unsharded run.
+        kd, kp = jax.random.split(key)
+        dirs = random_directions(kd, cfg.n_dirs, z.shape[-1])
+        prior = sphere_prior_samples(kp, z.shape[1], z.shape[-1])
+        prior_q = diff_sort(prior @ dirs.T, axis=0)       # (W, M)
+        losses, parts = jax.vmap(
+            session_loss, in_axes=(None, 0, 0, 0, None, None))(
+                params, z, mask, labels, dirs, prior_q)
+        a_total = jnp.sum(active)
+        if axis_name is not None:
+            a_total = jax.lax.psum(a_total, axis_name)
+        w = active / jnp.maximum(a_total, 1.0)
+        parts = {k: jnp.sum(v * w) for k, v in parts.items()}
+        loss = jnp.sum(losses * w)
+        if axis_name is not None and axis_size > 1:
+            # pre-scale so pmean(loss) == psum(local weighted sums):
+            # the cross-shard mean-over-active-sessions estimator
+            scale = jnp.float32(axis_size)
+            loss = loss * scale
+            parts = {k: v * scale for k, v in parts.items()}
+        return loss, (losses, parts)
+
+    return fleet_loss
+
+
+@dataclass
+class FleetRefinerState:
+    params: dict
+    opt_state: tuple
+    step: int = 0
+
+
+class FleetRefiner:
+    """One hybrid-loss refinement step for the whole fleet in a single jit.
+
+    See ``make_fleet_loss`` for the loss; one SGD step updates the shared
+    head.  A ``FleetRefiner`` step over N=1 is numerically the
+    ``ServerRefiner`` step (tested to fp32 tolerance in
+    ``tests/test_fleet.py``).
+    """
+
+    def __init__(self, head_init, head_apply, *, cfg: HybridCfg = HybridCfg(),
+                 lr=1e-2, seed=0):
+        from repro.optim.sgd import sgd_init, sgd_update
+        self.cfg = cfg
+        self.head_apply = head_apply
+        params = head_init(jax.random.PRNGKey(seed))
+        self._sgd_update = sgd_update
+        self.state = FleetRefinerState(params, sgd_init(params), 0)
+        self.lr = lr
+        self._grad = jax.jit(jax.value_and_grad(
+            make_fleet_loss(head_apply, cfg), has_aux=True))
+
+    def refine(self, key, fleet):
+        """One fleet-wide step with ``key`` seeding the single
+        fleet-shared SWD draw — pass ServerRefiner's key to reproduce its
+        N=1 step exactly (the parity test does).
+
+        -> (mean active loss, mean active parts, per-session losses (N,)).
+        """
+        z, mask, labels = fleet.snapshot()
+        return self.refine_arrays(key, z, mask, labels, fleet.active)
+
+    def refine_arrays(self, key, z, mask, labels, active):
+        """Device-side step on a prepared snapshot (benchmark hot path)."""
+        (loss, (losses, parts)), grads = self._grad(
+            self.state.params, key, jnp.asarray(z), jnp.asarray(mask),
+            jnp.asarray(labels), jnp.asarray(active, jnp.float32))
+        self.apply_grads(grads)
+        return (float(loss), {k: float(v) for k, v in parts.items()},
+                np.asarray(losses))
+
+    def apply_grads(self, grads):
+        """Shared optimizer step — the sharded backend reuses this on its
+        pmean'd gradients so both backends run the identical update math
+        (the 1-shard bitwise-parity contract)."""
+        params, opt_state = self._sgd_update(
+            self.state.params, grads, self.state.opt_state, lr=self.lr,
+            momentum=0.9)
+        self.state = FleetRefinerState(params, opt_state, self.state.step + 1)

@@ -91,12 +91,18 @@ def normalized_entropy(state: GMMState, z):
 
 
 def em_update(state: GMMState, z, *, decay=0.05, axis_name=None,
-              reseed_frac=0.2) -> GMMState:
+              reseed_frac=0.2, weights=None) -> GMMState:
     """One streaming-EM step on a batch of embeddings z: (B, d).
 
     Stepwise EM: S <- (1-λ) S + λ * batch_sufficient_stats.  When
     ``axis_name`` is given the batch statistics are psum'd across that mesh
     axis first — distributed streaming EM with identical fixed point.
+
+    ``weights`` (B,) optionally down-weights frames in the sufficient
+    statistics (0 drops a frame entirely) — the fleet backends feed the
+    gap-masked session snapshot this way, so padding/invalid frames never
+    move the memory.  ``weights=None`` is bit-identical to the original
+    unweighted update.
 
     Dead-component reinitialization: components whose mixing weight falls
     below ``reseed_frac / C`` are re-seeded at the batch's *least-explained*
@@ -107,10 +113,18 @@ def em_update(state: GMMState, z, *, decay=0.05, axis_name=None,
     """
     z = z.astype(jnp.float32)
     r = responsibilities(state, z)                        # (B, C)
-    b0 = jnp.sum(r, axis=0)                               # (C,)
-    b1 = r.T @ z                                          # (C, d)
-    b2 = r.T @ jnp.square(z)                              # (C, d)
-    n = jnp.float32(z.shape[0])
+    if weights is None:
+        b0 = jnp.sum(r, axis=0)                           # (C,)
+        b1 = r.T @ z                                      # (C, d)
+        b2 = r.T @ jnp.square(z)                          # (C, d)
+        n = jnp.float32(z.shape[0])
+    else:
+        w = weights.astype(jnp.float32)
+        rw = r * w[:, None]                               # (B, C)
+        b0 = jnp.sum(rw, axis=0)
+        b1 = rw.T @ z
+        b2 = rw.T @ jnp.square(z)
+        n = jnp.sum(w)
     if axis_name is not None:
         b0 = jax.lax.psum(b0, axis_name)
         b1 = jax.lax.psum(b1, axis_name)
@@ -127,8 +141,13 @@ def em_update(state: GMMState, z, *, decay=0.05, axis_name=None,
         C = s0.shape[0]
         pi = s0 / jnp.maximum(jnp.sum(s0), 1e-8)
         dead = pi < (reseed_frac / C)                      # (C,)
-        # least-explained frames first (novelty = low max responsibility)
-        novelty_order = jnp.argsort(jnp.max(r, axis=-1))   # (B,)
+        # least-explained frames first (novelty = low max responsibility);
+        # zero-weight frames must never seed a component, so they sort
+        # strictly last (max responsibility is <= 1)
+        novelty = jnp.max(r, axis=-1)
+        if weights is not None:
+            novelty = novelty + 2.0 * (1.0 - jnp.minimum(w, 1.0))
+        novelty_order = jnp.argsort(novelty)               # (B,)
         rank = jnp.cumsum(dead.astype(jnp.int32)) - 1      # slot per dead c
         rows = novelty_order[jnp.clip(rank, 0, z.shape[0] - 1)]
         seed_z = z[rows]                                   # (C, d)

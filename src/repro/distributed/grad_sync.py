@@ -18,6 +18,20 @@ from jax.sharding import PartitionSpec as P
 from repro.optim.compression import ErrorFeedback
 
 
+def pmean_grads(grads, axis_name):
+    """Cross-shard gradient mean — the uncompressed synchronization used
+    by the sharded fleet backend's refine step (the loss is pre-scaled by
+    the shard count, so the pmean reconstructs the global psum; see
+    ``core.fleet_refiner.make_fleet_loss``)."""
+    return jax.tree.map(lambda g: jax.lax.pmean(g, axis_name), grads)
+
+
+def psum_grads(grads, axis_name):
+    """Cross-shard gradient sum, for losses that already carry global
+    normalization."""
+    return jax.tree.map(lambda g: jax.lax.psum(g, axis_name), grads)
+
+
 def make_compressed_dp_step(mesh, loss_fn, opt_update, *, axis="data",
                             lr=1e-3, compress=True, opt_kwargs=None):
     """loss_fn(params, batch) -> scalar;  batch sharded over ``axis``.

@@ -234,6 +234,28 @@ def rules_for(mesh: Mesh, cfg, *, batch=None, kind="train",
     return AxisRules(param_rules, act_rules, mesh)
 
 
+# ---------------------------------------------------------------------------
+# Fleet/session axis (the serving data plane).
+# ---------------------------------------------------------------------------
+
+# The mesh axis the fleet data plane shards the session dimension over:
+# every (N, W, d) session ring, its timestamp/label rings, and the
+# per-session masks are partitioned on dim 0 (see docs/SHARDING.md and
+# core/fleet_backend.py::ShardedFleetBackend).
+SESSIONS_AXIS = "sessions"
+
+
+def sessions_spec(axis: str = SESSIONS_AXIS) -> P:
+    """PartitionSpec sharding dim 0 (the session axis) over ``axis`` and
+    replicating everything trailing (window, embed)."""
+    return P(axis)
+
+
+def sessions_sharding(mesh: Mesh, axis: str = SESSIONS_AXIS) -> NamedSharding:
+    """NamedSharding placing fleet state on a ``sessions`` mesh axis."""
+    return NamedSharding(mesh, sessions_spec(axis))
+
+
 def mesh_axis_size(name: str) -> int:
     rules = current_rules()
     if rules is None or rules.mesh is None or name not in rules.mesh.axis_names:

@@ -1,10 +1,12 @@
 """Public jit'd wrappers for the Pallas kernels: shape padding, block-size
-selection, and kernel/ref dispatch.  ``interpret=True`` (default here)
-executes the kernel bodies on CPU for validation; on TPU pass
-``interpret=False``.
+selection, and kernel/ref dispatch.  ``interpret=True`` executes the
+kernel bodies on CPU for validation; on TPU pass ``interpret=False`` (or
+run the whole process with ``REPRO_PALLAS_INTERPRET=0`` — the
+compiled-backend CI lane does exactly that, see ``.github/workflows``).
 """
 from __future__ import annotations
 
+import os
 from functools import partial
 
 import jax
@@ -19,6 +21,46 @@ from repro.kernels.laplacian_energy import laplacian_energy_pallas
 from repro.kernels.swd_kernel import swd_pallas
 
 
+# Process-level backend switch for every wrapper below: callers that do
+# not pass ``interpret=`` explicitly get this default, so one env var
+# flips the whole suite between interpret mode (the CPU default) and the
+# compiled Pallas backend (TPU/GPU runners).  Read once at import — a
+# process-level switch, not a per-call one — and ``default_interpret``
+# reports that same snapshot so probes can never disagree with what the
+# wrappers actually resolve to.
+_DEFAULT_INTERPRET = os.environ.get(
+    "REPRO_PALLAS_INTERPRET", "1").lower() not in ("0", "false", "no")
+_COMPILED_OK: bool | None = None
+
+
+def default_interpret() -> bool:
+    return _DEFAULT_INTERPRET
+
+
+def _resolve(interpret):
+    return _DEFAULT_INTERPRET if interpret is None else interpret
+
+
+def compiled_backend_supported() -> bool:
+    """Probe (once) whether this jax backend can *compile* Pallas kernels
+    — CPU-only jaxlibs support interpret mode only, so the compiled CI
+    lane self-skips there (``tests/test_kernels.py``).
+
+    Only the CPU backend may swallow the probe failure: on an
+    accelerator, a failing compile is exactly the regression the
+    compiled lane exists to catch, so it propagates."""
+    global _COMPILED_OK
+    if _COMPILED_OK is None:
+        try:
+            int8_quantize(jnp.ones((8,), jnp.float32), interpret=False)
+            _COMPILED_OK = True
+        except Exception:
+            if jax.default_backend() != "cpu":
+                raise
+            _COMPILED_OK = False
+    return _COMPILED_OK
+
+
 def _pad_rows(x, mult, value=0.0):
     n = x.shape[0]
     pad = (-n) % mult
@@ -29,8 +71,9 @@ def _pad_rows(x, mult, value=0.0):
 
 
 @partial(jax.jit, static_argnames=("interpret", "block_b"))
-def gmm_posterior(z, mu, var, logpi, *, block_b=128, interpret=True):
+def gmm_posterior(z, mu, var, logpi, *, block_b=128, interpret=None):
     """-> (responsibilities (B, C), entropy (B,))."""
+    interpret = _resolve(interpret)
     zp, n = _pad_rows(z, block_b)
     resp, ent = gmm_posterior_pallas(zp, mu, var, logpi, block_b=block_b,
                                      interpret=interpret)
@@ -39,8 +82,9 @@ def gmm_posterior(z, mu, var, logpi, *, block_b=128, interpret=True):
 
 @partial(jax.jit, static_argnames=("tau", "interpret", "block_b", "block_n"))
 def infonce_vneg(z, z_pos, z_neg, *, tau=0.1, block_b=64, block_n=128,
-                 interpret=True):
+                 interpret=None):
     """Per-sample streaming InfoNCE (Eq. 10). Inputs must be l2-normalized."""
+    interpret = _resolve(interpret)
     B, d = z.shape
     N = z_neg.shape[1]
     bb = min(block_b, B)
@@ -54,8 +98,9 @@ def infonce_vneg(z, z_pos, z_neg, *, tau=0.1, block_b=64, block_n=128,
 
 
 @partial(jax.jit, static_argnames=("n_dirs", "interpret"))
-def swd(key, x, *, n_dirs=50, interpret=True):
+def swd(key, x, *, n_dirs=50, interpret=None):
     """Sliced-W2² to the uniform sphere prior, fully fused (Eq. 3)."""
+    interpret = _resolve(interpret)
     from repro.core.swd import random_directions, sphere_prior_samples
     N, d = x.shape
     kd, kp = jax.random.split(key)
@@ -70,22 +115,22 @@ def swd(key, x, *, n_dirs=50, interpret=True):
 
 
 @partial(jax.jit, static_argnames=("interpret",))
-def int8_quantize(x, *, interpret=True):
-    return int8_quantize_pallas(x, interpret=interpret)
+def int8_quantize(x, *, interpret=None):
+    return int8_quantize_pallas(x, interpret=_resolve(interpret))
 
 
 @partial(jax.jit, static_argnames=("interpret", "dtype"))
-def int8_dequantize(q, scale, zero, *, dtype=jnp.float32, interpret=True):
+def int8_dequantize(q, scale, zero, *, dtype=jnp.float32, interpret=None):
     return int8_dequantize_pallas(q, scale, zero, dtype=dtype,
-                                  interpret=interpret)
+                                  interpret=_resolve(interpret))
 
 
 @partial(jax.jit, static_argnames=("k", "interpret"))
-def laplacian_energy(z, mask=None, *, k=5, interpret=True):
+def laplacian_energy(z, mask=None, *, k=5, interpret=None):
     if z.ndim == 2:
         z = z[None]
     if mask is None:
         mask = jnp.ones(z.shape[:2], jnp.float32)
     elif mask.ndim == 1:
         mask = mask[None]
-    return laplacian_energy_pallas(z, mask, k=k, interpret=interpret)
+    return laplacian_energy_pallas(z, mask, k=k, interpret=_resolve(interpret))

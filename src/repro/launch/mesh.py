@@ -21,3 +21,15 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for multi-device CPU tests (subprocesses set
     --xla_force_host_platform_device_count accordingly)."""
     return _mk(shape, axes)
+
+
+def make_sessions_mesh(n_shards=None, *, axis=None):
+    """1-D fleet-serving mesh over the session axis.
+
+    ``ShardedFleetBackend`` shards its (N, W, d) session rings over this
+    axis; defaults to every visible device (1 on a plain test process,
+    ``--xla_force_host_platform_device_count`` many in the forced-host
+    multi-shard tests and benchmarks)."""
+    from repro.distributed.sharding import SESSIONS_AXIS
+    n = len(jax.devices()) if n_shards is None else n_shards
+    return _mk((n,), (axis or SESSIONS_AXIS,))

@@ -265,3 +265,79 @@ def test_rl_policy_batched_matches_greedy_action():
 def test_gateway_rejects_mismatched_policy_action_space(params):
     with pytest.raises(ValueError):
         StreamSplitGateway(CFG, params, policy=FixedKPolicy(L + 3, 1))
+
+
+# ---------------------------------------------------------------------------
+# Fleet backend seam + injected clock
+# ---------------------------------------------------------------------------
+
+def test_injected_clock_makes_timing_deterministic(params):
+    """Every timing stat derives from the injected clock: with a fake
+    counter clock the latency/uptime numbers are exact, not wall-clock."""
+    ticks = iter(range(10_000))
+    gw = StreamSplitGateway(CFG, params, policy=FixedKPolicy(L, 2),
+                            capacity=2, window=8, qos_reserve=0,
+                            clock=lambda: 0.5 * next(ticks))
+    sid = gw.open_session().sid
+    rng = np.random.default_rng(7)
+    gw.submit(sid, FrameRequest(t=0, mel=_mel(rng)))
+    (r,) = gw.tick()
+    # dispatch reads the clock twice: (t1 - t0) * 1e3 / bucket = 500ms
+    assert r.latency_ms == 500.0
+    s = gw.stats()
+    # tick reads it at entry and exit around the dispatch pair: 1.5 s
+    assert s.last_tick_ms == 1500.0
+    # reads: ctor(0), tick entry(1), dispatch(2,3), tick exit(4), stats(5)
+    assert s.uptime_s == 0.5 * 5
+
+
+def test_gateway_on_sharded_backend_bit_matches_host(params):
+    """The backend seam must not change serving results: a gateway over a
+    1-shard device-resident backend serves bit-identical embeddings and
+    refine losses, with zero snapshot h2d traffic."""
+    from repro.api import ShardedFleetBackend
+    head_init, head_apply = _head()
+
+    def mk(backend=None):
+        kw = dict(capacity=4, window=8, qos_reserve=0)
+        if backend is None:
+            kw.update(head_init=head_init, head_apply=head_apply)
+        return StreamSplitGateway(CFG, params, policy=SpreadPolicy(L),
+                                  refine_every=2, backend=backend, **kw)
+
+    gw_h = mk()
+    gw_s = mk(ShardedFleetBackend(
+        capacity=4, window=8, dim=CFG.d_embed, head_init=head_init,
+        head_apply=head_apply, lr=1e-2, seed=0))
+    rng = np.random.default_rng(8)
+    sids_h = [gw_h.open_session().sid for _ in range(4)]
+    sids_s = [gw_s.open_session().sid for _ in range(4)]
+    for t in range(4):
+        mels = [_mel(rng) for _ in range(4)]
+        for gw, sids in ((gw_h, sids_h), (gw_s, sids_s)):
+            for i, sid in enumerate(sids):
+                gw.submit(sid, FrameRequest(t=t, mel=mels[i],
+                                            label=t % N_CLASSES))
+        for rh, rs in zip(gw_h.tick(), gw_s.tick()):
+            np.testing.assert_array_equal(rh.z, rs.z)
+            assert rh.k == rs.k and rh.wire_bytes == rs.wire_bytes
+    sh, ss = gw_h.stats(), gw_s.stats()
+    assert sh.refine_rounds == ss.refine_rounds == 2
+    assert ss.last_refine_loss == sh.last_refine_loss  # bitwise
+    assert (sh.backend, sh.shards) == ("host", 1)
+    assert (ss.backend, ss.shards) == ("sharded", 1)
+    assert sum(ss.shard_frames) == ss.frames == 16
+    assert ss.snapshot_h2d_bytes == 0 and sh.snapshot_h2d_bytes > 0
+    # gateway hands embeddings to the sharded fleet as device arrays
+    assert ss.ingest_h2d_bytes == 0
+    # session-level accounting rides the same seam
+    assert gw_h.session(sids_h[0]).fill_fraction == \
+        gw_s.session(sids_s[0]).fill_fraction
+
+
+def test_gateway_rejects_backend_dim_mismatch(params):
+    from repro.api import HostFleetBackend
+    with pytest.raises(ValueError):
+        StreamSplitGateway(CFG, params, policy=FixedKPolicy(L, 1),
+                           backend=HostFleetBackend(
+                               capacity=2, window=8, dim=CFG.d_embed + 1))
