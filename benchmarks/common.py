@@ -19,6 +19,14 @@ def row(name, us_per_call, derived=""):
     print(f"{name},{us_per_call:.2f},{derived}")
 
 
+def pcts(ms):
+    """mean/p50/p95 of a latency sample list — the shape every serving
+    benchmark reports alongside its throughput number."""
+    return {"mean": float(np.mean(ms)),
+            "p50": float(np.percentile(ms, 50)),
+            "p95": float(np.percentile(ms, 95))}
+
+
 def time_us(fn, *args, warmup=2, iters=10):
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))

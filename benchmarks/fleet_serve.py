@@ -11,8 +11,10 @@ Measures, for N ∈ {1, 8, 32, 128} concurrent sessions:
   through ``HostFleetBackend`` (numpy rings, full snapshot copied to the
   device every round) vs ``ShardedFleetBackend`` (device-resident rings
   over the ``sessions`` mesh, donated in-place ingest, shard_map refine).
-  Reports per-shard refine throughput and the measured host->device
-  traffic: the sharded plane moves **zero** snapshot bytes per round;
+  Reports per-shard refine throughput, mean/p50/p95 round latency
+  (measured after an explicit warmup round so XLA compile never pollutes
+  the numbers), and the measured host->device traffic: the sharded plane
+  moves **zero** snapshot bytes per round;
 - sessions/sec   — end-to-end admission → ingest → batched refine;
 - requests/sec   — the batched two-sub-batch ``CascadeServer.handle``.
 
@@ -34,7 +36,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import pcts, row
 
 W, DIM, N_CLASSES = 100, 64, 10
 SIZES = (1, 8, 32, 128)
@@ -138,27 +140,35 @@ def bench_backends(n, *, iters, shards=1):
                            np.full(n, t % N_CLASSES))
             b.refine(jax.random.PRNGKey(i))
 
-        round_(0, W)                             # warmup: compile
+        # warmup: compile BOTH the full-batch ingest scatter and the
+        # refine step before anything is timed
+        round_(0, W)
         snap0, ing0 = b.snapshot_h2d_bytes, b.ingest_h2d_bytes
+        round_ms = []
         t0 = time.perf_counter()
         for i in range(iters):
+            t1 = time.perf_counter()
             round_(1 + i, W + 1 + i)
+            round_ms.append((time.perf_counter() - t1) * 1e3)
         rounds_s = iters / (time.perf_counter() - t0)
         snap_rd = (b.snapshot_h2d_bytes - snap0) // iters
         ing_rd = (b.ingest_h2d_bytes - ing0) // iters
+        round_pcts = pcts(round_ms)
+        p50, p95 = round_pcts["p50"], round_pcts["p95"]
         out[kind] = {
             "shards": b.shards,
             "rounds_per_s": rounds_s,
             "session_steps_per_s": n * rounds_s,
             "per_shard_sessions": n // b.shards,
             "per_shard_steps_per_s": n // b.shards * rounds_s,
+            "round_ms": round_pcts,
             "snapshot_h2d_bytes_per_round": snap_rd,
             "ingest_h2d_bytes_per_round": ing_rd,
         }
         tag = f"sharded{b.shards}" if kind == "sharded" else "host"
         row(f"fleet.backend.{tag}.N{n}", 1e6 / rounds_s,
-            f"{n // b.shards * rounds_s:.1f} steps/s/shard, "
-            f"snapshot h2d {snap_rd} B/round")
+            f"{n // b.shards * rounds_s:.1f} steps/s/shard, round p50 "
+            f"{p50:.2f}ms p95 {p95:.2f}ms, snapshot h2d {snap_rd} B/round")
     assert out["sharded"]["snapshot_h2d_bytes_per_round"] == 0, \
         "device-resident refine must not copy the fleet snapshot"
     assert out["host"]["snapshot_h2d_bytes_per_round"] > 0

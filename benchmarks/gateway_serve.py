@@ -1,28 +1,42 @@
 """Gateway serving benchmark: k-bucketed batched dispatch vs the
-per-frame ``SplitEngine.run`` loop (the seed's serving model).
+per-frame ``SplitEngine.run`` loop, and the overlapped single-sync tick
+vs the PR-3 per-bucket-sync dispatch.
 
-N concurrent sessions each submit one frame per tick; the entropy
-policy routes them into two k-buckets (easy -> fully local k=L, hard ->
-shallow split k=2), so every tick is a handful of padded dispatches
-instead of one 3-executable chain per frame.  Both paths deliver each
-frame's embedding to its client as a host array — serving returns
-results, so the baseline materializes per frame exactly like the
-gateway's ``FrameResult``s do.
+Two lanes:
 
-The encoder is a smoke-scale instance of the paper's model family: the
-paper serves a small (~11M-param full-scale, ~0.1 GFLOP) streaming edge
-CNN, which is exactly the regime where per-frame dispatch overhead, not
-FLOPs, dominates the serving loop — the overhead k-bucketing amortizes.
-(At CPU-server widths the per-frame loop is compute-bound instead and
-the win shrinks to ~2-3x; both regimes share the same bit-parity
-contract.)
+1. **Entropy lane** (the PR-2 contract): N concurrent sessions, the
+   entropy policy routes them into two k-buckets (easy -> fully local
+   k=L, hard -> shallow split k=2), so every tick is a handful of padded
+   dispatches instead of one 3-executable chain per frame.  Measured
+   against the per-frame ``run`` loop (the seed's serving model).
 
-Asserts that gateway embeddings are bit-identical to the per-frame path
-before reporting any throughput number.
+2. **Mixed-k lane** (the PR-4 contract): a deep thin encoder (L=8) and a
+   policy that spreads frames over every split index — 9 k-buckets per
+   tick.  The same workload is served through ``overlap=False`` (the
+   PR-3 data plane: host staging + one blocking device round-trip per
+   bucket) and ``overlap=True`` (ONE staged H2D, async bucket chains,
+   ONE sync + ONE D2H per tick).  Reports frames/s, the measured
+   syncs/tick and staged H2D bytes, and mean/p50/p95 tick latency.
 
-    PYTHONPATH=src python -m benchmarks.gateway_serve [--quick] [--shards S]
+Every path warms up its per-k executables (and every pow2 batch-shape
+bucket) BEFORE the timed region — first-tick XLA compile never pollutes
+a frames/s number — and asserts bit-parity against the per-frame
+``SplitEngine.run`` reference before reporting any throughput.
 
-``--shards S`` additionally serves the same workload through a gateway
+Regime note: the speedup of lane 2 is bounded by how much work can
+actually overlap.  On a CPU-only jax (this repo's CI) the "device" is a
+thread pool sharing cores with the dispatching host thread, so the
+single-sync plane wins exactly as much host-side dispatch time as the
+spare cores can absorb (~1.3-1.7x on a 2-core runner, ~1.0x when
+throttled to one).  On an accelerator backend every per-bucket
+round-trip the PR-3 path pays is a real H2D/D2H + launch-latency stall,
+which is the ≥2x regime the paper's latency claims live in (docs/PERF.md
+walks through the pipeline stages and where the one sync point sits).
+
+    PYTHONPATH=src python -m benchmarks.gateway_serve [--quick|--smoke]
+                                                      [--shards S]
+
+``--shards S`` additionally serves the entropy lane through a gateway
 whose fleet data plane is a device-resident ``ShardedFleetBackend`` over
 S forced host devices — same bit-parity contract, plus the measured
 host->device ingest/snapshot traffic of the backend.
@@ -36,21 +50,40 @@ import time
 import jax
 import numpy as np
 
+from benchmarks.common import pcts as _pcts
 from benchmarks.common import row
 
 ENC_KW = dict(widths=(16, 16, 32, 32), strides=(1, 2, 1, 2), n_mels=16,
               frames=16, d_embed=32, groups=4)
+# the mixed-k lane's encoder: deep (9 split points -> 9 buckets/tick)
+# and thin — the paper's small streaming edge-CNN regime, where
+# per-bucket dispatch overhead, not FLOPs, dominates the serving loop
+DEEP_KW = dict(widths=(8,) * 8, strides=(1,) * 8, n_mels=8, frames=8,
+               d_embed=16, groups=2)
 SIZES = (8, 32, 128)
+MIXED_SIZES = (32, 64)
 OFFLOAD_K = 2
 THRESHOLD = 0.5
 
 
-def _setup(n, *, shards=0):
+class MixedKPolicy:
+    """Deterministic mixed-k policy: uncertainty quantile -> split index,
+    spreading one tick over every k in [0, L] (L+1 buckets)."""
+
+    def __init__(self, L):
+        self.L = L
+
+    def decide(self, obs_batch):
+        return np.clip((obs_batch[:, 0] * (self.L + 1)).astype(np.int64),
+                       0, self.L)
+
+
+def _setup(n, *, shards=0, enc_kw=ENC_KW, policy=None, overlap=True):
     from repro.api import (ShardedFleetBackend, StreamSplitGateway,
                            make_policy)
     from repro.core.splitter import SplitEngine
     from repro.models.audio_encoder import AudioEncCfg, init_audio_encoder
-    cfg = AudioEncCfg(**ENC_KW)
+    cfg = AudioEncCfg(**enc_kw)
     params = init_audio_encoder(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     mels = rng.normal(size=(n, cfg.frames, cfg.n_mels)).astype(np.float32)
@@ -58,8 +91,9 @@ def _setup(n, *, shards=0):
     # calibrated operating point (CascadeServer auto-calibrates its
     # threshold to a quantile of observed entropies for the same reason)
     us = rng.permutation(np.linspace(0.05, 0.95, n))
-    policy = make_policy("entropy", cfg.n_blocks, threshold=THRESHOLD,
-                         offload_k=OFFLOAD_K)
+    if policy is None:
+        policy = make_policy("entropy", cfg.n_blocks, threshold=THRESHOLD,
+                             offload_k=OFFLOAD_K)
     obs = np.stack([us, np.zeros(n), np.zeros(n)], 1).astype(np.float32)
     ks = policy.decide(obs)
     if shards:
@@ -70,16 +104,17 @@ def _setup(n, *, shards=0):
     else:
         backend = None
     gw = StreamSplitGateway(cfg, params, policy=policy, capacity=n,
-                            window=16, qos_reserve=0, backend=backend)
+                            window=16, qos_reserve=0, backend=backend,
+                            overlap=overlap)
     sids = [gw.open_session().sid for _ in range(n)]
     return cfg, params, SplitEngine(cfg), gw, sids, mels, us, ks
 
 
 def bench_gateway(n, *, iters, shards=0, baseline=True):
-    """-> (per-frame f/s, gateway f/s, bit_identical, stats).  Same
-    frames, same k assignment, both materializing every embedding.
-    ``baseline=False`` skips the per-frame timing repetitions (the
-    sharded lane reuses the numbers already measured) — the parity
+    """-> (per-frame f/s, gateway f/s, bit_identical, tick percentiles,
+    stats).  Same frames, same k assignment, both materializing every
+    embedding.  ``baseline=False`` skips the per-frame timing repetitions
+    (the sharded lane reuses the numbers already measured) — the parity
     reference round still runs."""
     from repro.api import FrameRequest
     cfg, params, eng, gw, sids, mels, us, ks = _setup(n, shards=shards)
@@ -92,10 +127,13 @@ def bench_gateway(n, *, iters, shards=0, baseline=True):
         return [np.asarray(eng.run(params, mels[i:i + 1], int(ks[i]))[0])[0]
                 for i in range(n)]
 
-    # warmup: compile every executable both paths touch
+    # warmup: compile every per-k executable (and every pow2 bucket
+    # shape) BOTH paths touch, before anything is timed
     submit_all(0)
     results = gw.tick()
     z_ref = per_frame_round()
+    submit_all(1)
+    gw.tick()
 
     # parity first: a fast wrong answer is not a result
     bit_identical = all((r.z == z_ref[i]).all() and r.k == ks[i]
@@ -105,7 +143,8 @@ def bench_gateway(n, *, iters, shards=0, baseline=True):
     # scheduler/contention noise (the batched path threads across cores,
     # so background load hits it disproportionately)
     pf_best, gw_best = float("inf"), float("inf")
-    tick = 1
+    tick_ms: list[float] = []
+    tick = 2
     for _ in range(5):
         if baseline:
             t0 = time.perf_counter()
@@ -115,30 +154,111 @@ def bench_gateway(n, *, iters, shards=0, baseline=True):
         t0 = time.perf_counter()
         for _ in range(iters):
             submit_all(tick)
+            t1 = time.perf_counter()
             gw.tick()
+            tick_ms.append((time.perf_counter() - t1) * 1e3)
             tick += 1
         gw_best = min(gw_best, time.perf_counter() - t0)
     return n * iters / pf_best, n * iters / gw_best, bit_identical, \
-        gw.stats()
+        _pcts(tick_ms), gw.stats()
 
 
-def run_all(*, quick=False, shards=0):
-    sizes = [n for n in SIZES if not (quick and n > 32)]
+def bench_mixed(n, *, iters, repeats=6):
+    """The overlapped single-sync plane vs the PR-3 per-bucket-sync path
+    on an L+1-bucket mixed-k tick.  Both gateways serve identical frames
+    with identical k assignments; embeddings are asserted bit-identical
+    to each other AND to the per-frame ``SplitEngine.run`` reference
+    before any number is reported.  Repeats are interleaved sync/async so
+    machine drift hits both paths equally."""
+    from repro.api import FrameRequest
+    from repro.models.audio_encoder import AudioEncCfg
+    L = AudioEncCfg(**DEEP_KW).n_blocks
+    lanes = {}
+    for mode, overlap in (("sync", False), ("async", True)):
+        cfg, params, eng, gw, sids, mels, us, ks = _setup(
+            n, enc_kw=DEEP_KW, policy=MixedKPolicy(L), overlap=overlap)
+        lanes[mode] = dict(gw=gw, sids=sids, mels=mels, us=us, ks=ks,
+                           eng=eng, params=params, times=[], best=float("inf"))
+    n_buckets = len(set(int(k) for k in lanes["sync"]["ks"]))
+    assert n_buckets >= 4, f"mixed-k lane needs >=4 buckets, got {n_buckets}"
+
+    def submit_all(mode, t):
+        ln = lanes[mode]
+        for i, sid in enumerate(ln["sids"]):
+            ln["gw"].submit(sid, FrameRequest(t=t, mel=ln["mels"][i],
+                                              u=float(ln["us"][i])))
+
+    # warmup + parity: both paths vs the per-frame reference, bitwise
+    ln = lanes["sync"]
+    z_ref = [np.asarray(ln["eng"].run(ln["params"], ln["mels"][i:i + 1],
+                                      int(ln["ks"][i]))[0])[0]
+             for i in range(n)]
+    first = {}
+    for mode in ("sync", "async"):
+        submit_all(mode, 0)
+        first[mode] = lanes[mode]["gw"].tick()
+        submit_all(mode, 1)
+        lanes[mode]["gw"].tick()
+    bit_identical = all(
+        (ra.z == rs.z).all() and (ra.z == z_ref[i]).all() and ra.k == rs.k
+        for i, (ra, rs) in enumerate(zip(first["async"], first["sync"])))
+
+    tick = 2
+    for _ in range(repeats):
+        for mode in ("sync", "async"):
+            ln = lanes[mode]
+            t = tick
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                submit_all(mode, t)
+                t1 = time.perf_counter()
+                ln["gw"].tick()
+                ln["times"].append((time.perf_counter() - t1) * 1e3)
+                t += 1
+            ln["best"] = min(ln["best"],
+                             (time.perf_counter() - t0) / iters)
+        tick += iters
+    sync_fps = n / lanes["sync"]["best"]
+    async_fps = n / lanes["async"]["best"]
+    st_a = lanes["async"]["gw"].stats()
+    st_s = lanes["sync"]["gw"].stats()
+    # the single-sync contract, measured off the instrumented counters
+    assert st_a.device_syncs_per_tick == 1 and st_a.d2h_copies_per_tick == 1
+    assert st_s.device_syncs_per_tick == n_buckets
+    return {
+        "n": n,
+        "buckets_per_tick": n_buckets,
+        "bit_identical": bool(bit_identical),
+        "sync_fps": sync_fps,
+        "async_fps": async_fps,
+        "speedup": async_fps / sync_fps,
+        "device_syncs_per_tick": {"sync": st_s.device_syncs_per_tick,
+                                  "async": st_a.device_syncs_per_tick},
+        "staged_h2d_bytes_per_tick": st_a.staged_h2d_bytes // st_a.ticks,
+        "tick_ms": {"sync": _pcts(lanes["sync"]["times"]),
+                    "async": _pcts(lanes["async"]["times"])},
+    }
+
+
+def run_all(*, quick=False, shards=0, smoke=False):
+    sizes = [n for n in SIZES if not ((quick or smoke) and n > 32)]
     result = {}
     for n in sizes:
-        iters = max(4, 128 // n)
-        pf, gwf, exact, _ = bench_gateway(n, iters=iters)
+        iters = max(2 if smoke else 4, (32 if smoke else 128) // n)
+        pf, gwf, exact, pcts, _ = bench_gateway(n, iters=iters)
         assert exact, f"gateway embeddings diverged from per-frame at N={n}"
         speedup = gwf / pf
         result[n] = {"per_frame_fps": pf, "gateway_fps": gwf,
-                     "speedup": speedup, "bit_identical": exact}
+                     "speedup": speedup, "bit_identical": exact,
+                     "tick_ms": pcts}
         row(f"gateway.per_frame.N{n}", 1e6 / pf, "frames/s baseline")
         row(f"gateway.bucketed.N{n}", 1e6 / gwf,
-            f"{speedup:.1f}x vs per-frame, bit-identical")
+            f"{speedup:.1f}x vs per-frame, bit-identical, tick p50 "
+            f"{pcts['p50']:.2f}ms p95 {pcts['p95']:.2f}ms")
         if shards and n % shards == 0:
-            _, shf, exact_s, st = bench_gateway(n, iters=iters,
-                                                shards=shards,
-                                                baseline=False)
+            _, shf, exact_s, _, st = bench_gateway(n, iters=iters,
+                                                   shards=shards,
+                                                   baseline=False)
             assert exact_s, \
                 f"sharded-backend embeddings diverged at N={n}"
             assert st.ingest_h2d_bytes == 0, \
@@ -151,6 +271,21 @@ def run_all(*, quick=False, shards=0):
             row(f"gateway.bucketed.sharded{st.shards}.N{n}", 1e6 / shf,
                 f"{shf / pf:.1f}x vs per-frame, bit-identical, ingest "
                 f"payload h2d {st.ingest_h2d_bytes} B (device-resident)")
+    result["mixed_k"] = {}
+    for n in MIXED_SIZES:
+        m = bench_mixed(n, iters=max(2 if smoke else 8, 64 // n),
+                        repeats=3 if smoke else 6)
+        assert m["bit_identical"], \
+            f"mixed-k overlapped embeddings diverged at N={n}"
+        result["mixed_k"][n] = m
+        row(f"gateway.mixed.sync.N{n}", 1e6 / m["sync_fps"],
+            f"PR-3 baseline: {m['buckets_per_tick']} syncs/tick, tick p50 "
+            f"{m['tick_ms']['sync']['p50']:.2f}ms "
+            f"p95 {m['tick_ms']['sync']['p95']:.2f}ms")
+        row(f"gateway.mixed.async.N{n}", 1e6 / m["async_fps"],
+            f"{m['speedup']:.2f}x vs per-bucket-sync, 1 sync/tick, "
+            f"bit-identical, tick p50 {m['tick_ms']['async']['p50']:.2f}ms "
+            f"p95 {m['tick_ms']['async']['p95']:.2f}ms")
     print("BENCH " + json.dumps({"bench": "gateway_serve",
                                  "enc": ENC_KW["widths"],
                                  "threshold": THRESHOLD,
@@ -159,10 +294,46 @@ def run_all(*, quick=False, shards=0):
     return result
 
 
+def write_bench_json(result, path="BENCH_gateway.json"):
+    """Machine-readable perf trajectory (tracked across PRs; uploaded as
+    a CI artifact — see docs/PERF.md for how to read it)."""
+    mixed = result.get("mixed_k", {})
+    doc = {
+        "bench": "gateway_serve",
+        "schema": 1,
+        "backend": jax.default_backend(),
+        "mixed_k": {
+            str(n): {
+                "frames_per_s": {"sync": m["sync_fps"],
+                                 "async": m["async_fps"]},
+                "speedup_async_vs_sync": m["speedup"],
+                "buckets_per_tick": m["buckets_per_tick"],
+                "device_syncs_per_tick": m["device_syncs_per_tick"],
+                "staged_h2d_bytes_per_tick": m["staged_h2d_bytes_per_tick"],
+                "tick_ms": m["tick_ms"],
+                "bit_identical": m["bit_identical"],
+            } for n, m in mixed.items()},
+        "entropy": {
+            str(n): {
+                "frames_per_s": v["gateway_fps"],
+                "speedup_vs_per_frame": v["speedup"],
+                "tick_ms": v["tick_ms"],
+                "bit_identical": v["bit_identical"],
+            } for n, v in result.items() if isinstance(n, int)},
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="skip the N=128 point")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: fewest iterations that still "
+                         "exercise every assert")
     ap.add_argument("--shards", type=int, default=0,
                     help="also serve through a device-resident "
                          "ShardedFleetBackend over this many forced "
@@ -171,4 +342,5 @@ if __name__ == "__main__":
     if args.shards:
         from benchmarks.fleet_serve import force_host_devices
         force_host_devices(args.shards)
-    run_all(quick=args.quick, shards=args.shards)
+    out = run_all(quick=args.quick, shards=args.shards, smoke=args.smoke)
+    print("wrote", write_bench_json(out))

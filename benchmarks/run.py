@@ -2,9 +2,17 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (value semantics per row name:
 KB, ms, mJ, %, correlation r, ... — the derived column carries the paper's
-number for side-by-side comparison).
+number for side-by-side comparison), and writes ``BENCH_gateway.json`` —
+the machine-readable serving-perf trajectory (frames/s, syncs/tick,
+staged H2D bytes, p50/p95 tick latency at N ∈ {32, 64}) that CI uploads
+as an artifact so gateway performance is tracked across PRs
+(docs/PERF.md explains the fields).
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only PREFIX]
+    PYTHONPATH=src python -m benchmarks.run [--quick|--smoke] [--only PREFIX]
+
+``--smoke`` is the CI configuration: the fewest iterations that still
+exercise every bit-parity assert (a benchmark whose parity assert trips
+fails the process loudly — that is the point of running it in CI).
 """
 from __future__ import annotations
 
@@ -19,17 +27,26 @@ def main() -> None:
                     help="run only benches whose module matches")
     ap.add_argument("--quick", action="store_true",
                     help="skip the slowest (training-based) benches")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config (implies --quick)")
     args = ap.parse_args()
+    quick = args.quick or args.smoke
 
     from benchmarks import (fleet_serve, gateway_serve, kernels_bench,
                             quality_tables, system_tables)
     print("name,us_per_call,derived")
     t0 = time.time()
+
+    def gateway():
+        out = gateway_serve.run_all(quick=quick, smoke=args.smoke)
+        path = gateway_serve.write_bench_json(out)
+        print(f"# wrote {path}", file=sys.stderr)
+
     suites = [("system", system_tables.run_all),
               ("kernels", kernels_bench.run_all),
-              ("fleet", lambda: fleet_serve.run_all(quick=args.quick)),
-              ("gateway", lambda: gateway_serve.run_all(quick=args.quick))]
-    if not args.quick:
+              ("fleet", lambda: fleet_serve.run_all(quick=quick)),
+              ("gateway", gateway)]
+    if not quick:
         suites.insert(1, ("quality", quality_tables.run_all))
     for name, fn in suites:
         if args.only and args.only not in name:

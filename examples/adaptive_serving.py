@@ -43,7 +43,11 @@ def main():
             mel = rng.normal(size=(CFG.frames, CFG.n_mels)).astype(np.float32)
             gw.submit(sid, FrameRequest(t=t, mel=mel, u=float(u),
                                         bandwidth_mbps=20.0))
-        for r in gw.tick():
+        # profile=True: per-bucket timing (one sync per bucket) so the
+        # two tiers are attributable — the serving default is the
+        # overlapped single-sync tick, whose latency_ms is a per-TICK
+        # figure identical across routes (docs/PERF.md)
+        for r in gw.tick(profile=True):
             if t > 0:          # steady state: tick 0 pays the JIT compile
                 lat[r.route].append(r.latency_ms)
 
@@ -55,7 +59,7 @@ def main():
     print(f"escalation rate {esc:.2f} (threshold U>{THRESHOLD}) | "
           f"edge tier {np.median(lat['edge']):.2f} ms/frame | "
           f"escalated tier {np.median(lat['split']):.2f} ms/frame "
-          f"(median, amortized over each bucket)")
+          f"(median, profile mode: amortized over each bucket)")
     print(f"split-link traffic {s.wire_bytes/1024:.1f} KB — "
           f"{100*(1-esc):.0f}% of frames never ship an activation")
     for sid in sids:

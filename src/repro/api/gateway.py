@@ -17,11 +17,21 @@ device-resident and sharded over a ``sessions`` mesh axis, refining the
 whole fleet in one ``shard_map`` step (see ``core/fleet_backend.py`` and
 ``docs/SHARDING.md``).  The serving hot path: every frame whose policy
 decision landed on the same split index k rides ONE padded
-``SplitEngine.run_batch`` dispatch (the serving analogue of
+``SplitEngine`` dispatch (the serving analogue of
 ``CascadeServer.handle``'s two sub-batches) instead of one ``run()`` per
 frame — embeddings stay bit-identical to the per-frame path
 (``benchmarks/gateway_serve.py`` measures the speedup and asserts the
 bit-parity; ``tests/test_gateway.py`` pins it).
+
+The tick itself is an **overlapped, single-sync data plane**
+(docs/PERF.md): the whole tick's frames are staged host→device as ONE
+``(B, frames, n_mels)`` transfer, each k-bucket gathers its rows on
+device (``jnp.take``) and issues its edge→wire→server chain
+asynchronously, and the tick blocks exactly once on the concatenated
+embeddings — one device sync and one device→host copy per tick, however
+many buckets the policy produced.  ``overlap=False`` restores the PR-3
+per-bucket-sync dispatch (the benchmark baseline), and
+``tick(profile=True)`` trades the single sync for per-bucket timing.
 
 All wall-clock reads go through the injectable ``clock=`` callable
 (default ``time.perf_counter``), so latency/uptime numbers in
@@ -87,6 +97,11 @@ class StreamSplitGateway:
     qos_reserve : fleet rows held back from BULK (2x) and STANDARD (1x)
         admissions so INTERACTIVE tenants always find room; defaults to
         ``capacity // 8``.
+    overlap : serve ticks through the overlapped single-sync data plane
+        (default).  ``False`` restores the PR-3 per-bucket-sync dispatch
+        — one host staging + device round-trip per k-bucket — kept as
+        the measured baseline of ``benchmarks/gateway_serve.py`` and the
+        bit-parity reference of ``tests/test_gateway.py``.
     clock : zero-arg callable returning seconds (default
         ``time.perf_counter``) — every timing stat derives from it.
     """
@@ -95,7 +110,7 @@ class StreamSplitGateway:
                  backend=None, capacity=64, window=100, head_init=None,
                  head_apply=None, refine_every=0, quantize_wire=True,
                  sync_cfg=None, qos_reserve=None, refine_lr=1e-2, seed=0,
-                 clock=time.perf_counter):
+                 overlap=True, clock=time.perf_counter):
         if policy.L != enc_cfg.n_blocks:
             raise ValueError(
                 f"policy action space L={policy.L} != encoder "
@@ -118,11 +133,13 @@ class StreamSplitGateway:
         self.qos_reserve = (backend.capacity // 8 if qos_reserve is None
                             else qos_reserve)
         self.refine_every = refine_every
+        self.overlap = overlap
         self._clock = clock
         self._t_start = clock()
         self._key = jax.random.PRNGKey(seed)
         self._sessions: dict[int, _Session] = {}
-        self._pending: list[tuple[int, FrameRequest]] = []
+        # (sid, request, validated float32 mel) — converted ONCE at submit
+        self._pending: list[tuple[int, FrameRequest, np.ndarray]] = []
         # aggregate counters (surfaced as GatewayStats)
         self._ticks = 0
         self._frames = 0
@@ -138,6 +155,12 @@ class StreamSplitGateway:
         self._last_tick_ms = 0.0
         self._routed = {"edge": 0, "split": 0, "server": 0}
         self._shard_frames = np.zeros(backend.shards, np.int64)
+        # overlapped data plane instrumentation: every blocking wait and
+        # every embedding D2H copy inside tick() goes through _block/_d2h,
+        # so the single-sync contract is countable (and pinned by test)
+        self._staged_h2d = 0
+        self._tick_syncs = 0
+        self._tick_d2h = 0
 
     # -- session lifecycle ---------------------------------------------------
     def open_session(self, platform="pi4",
@@ -174,7 +197,7 @@ class StreamSplitGateway:
         """Evict the session (O(1) — the fleet row is wiped lazily on its
         next admission).  Unserved pending frames are discarded."""
         info = self.session(sid)
-        self._pending = [(s, f) for s, f in self._pending if s != sid]
+        self._pending = [p for p in self._pending if p[0] != sid]
         self.backend.evict(sid)
         del self._sessions[sid]
         self._closed += 1
@@ -187,38 +210,59 @@ class StreamSplitGateway:
 
     # -- ingest --------------------------------------------------------------
     def submit(self, sid, frame: FrameRequest) -> None:
-        """Queue one frame for the next ``tick``."""
+        """Queue one frame for the next ``tick``.
+
+        The mel payload is validated AND converted to float32 here, once
+        — ``tick`` stages the stored array directly, so no frame is ever
+        converted twice (the seed path re-ran ``np.asarray`` per
+        dispatch)."""
         self._require(sid)
-        mel = np.asarray(frame.mel)
+        mel = np.asarray(frame.mel, np.float32)
         if mel.shape != (self.cfg.frames, self.cfg.n_mels):
             raise ValueError(
                 f"frame.mel shape {mel.shape} != "
                 f"({self.cfg.frames}, {self.cfg.n_mels}) — submit one "
                 "unbatched sample per FrameRequest")
-        self._pending.append((sid, frame))
+        self._pending.append((sid, frame, mel))
 
     # -- the pipeline tick ---------------------------------------------------
-    def tick(self) -> list[FrameResult]:
+    def tick(self, *, profile=False) -> list[FrameResult]:
         """Decide -> k-bucketed batched dispatch -> ingest -> sync ->
-        (periodic) refine.  Returns results in submission order."""
+        (periodic) refine.  Returns results in submission order.
+
+        On the overlapped plane (``overlap=True``) the dispatch costs one
+        staged H2D transfer, one device sync and one D2H embedding copy
+        per tick — every bucket's chain runs asynchronously in between.
+        ``profile=True`` syncs after each bucket instead, so
+        ``FrameResult.latency_ms`` is per-bucket (diagnostics; the tick
+        then pays one round-trip per bucket like ``overlap=False``)."""
         t0 = self._clock()
         pending, self._pending = self._pending, []
         results: list[FrameResult | None] = [None] * len(pending)
         self._tick_dev: list = []     # (bucket idx, device z) per dispatch
+        self._tick_syncs = 0
+        self._tick_d2h = 0
         if pending:
             # normalize bandwidth exactly like the control-plane env so RL
             # policies see the feature scale they were trained on
             bw_norm = EdgeCloudEnv.BW_NORM
             obs = np.array([[f.u, f.cpu, min(f.bandwidth_mbps / bw_norm, 1.0)]
-                            for _, f in pending], np.float32)
+                            for _, f, _ in pending], np.float32)
             ks = np.clip(np.asarray(self.policy.decide(obs), np.int64),
                          0, self.cfg.n_blocks)
             buckets: dict[int, list[int]] = {}
             for i, k in enumerate(ks):
                 buckets.setdefault(int(k), []).append(i)
-            for k, idx in sorted(buckets.items()):
-                self._dispatch(k, idx, pending, results)
-            self._ingest(pending, results)
+            if self.overlap:
+                # handles its own ingest: fleet scatter + lazy-sync
+                # accounting are issued BEFORE the sync point so they
+                # overlap the in-flight device chains
+                self._dispatch_overlapped(buckets, pending, results,
+                                          profile)
+            else:
+                for k, idx in sorted(buckets.items()):
+                    self._dispatch(k, idx, pending, results)
+                self._ingest(pending, results)
         self._ticks += 1
         if (self.backend.can_refine and self.refine_every
                 and self._ticks % self.refine_every == 0
@@ -230,11 +274,116 @@ class StreamSplitGateway:
         self._last_tick_ms = (self._clock() - t0) * 1e3
         return results  # type: ignore[return-value]
 
+    # instrumented sync points: every blocking wait and embedding D2H
+    # copy in the DISPATCH plane routes through these two, so the
+    # single-sync contract is a counted fact
+    # (GatewayStats.device_syncs_per_tick / d2h_copies_per_tick), not an
+    # assumption.  A periodic backend.refine() blocks on its own loss
+    # read and is deliberately outside this scoreboard.
+    def _block(self, x):
+        self._tick_syncs += 1
+        return jax.block_until_ready(x)
+
+    def _d2h(self, x):
+        self._tick_d2h += 1
+        return np.asarray(x)
+
+    def _dispatch_overlapped(self, buckets, pending, results, profile):
+        """The overlapped tick data plane: ONE staged H2D for the whole
+        tick, device-side bucket gathers, async edge→wire→server chains,
+        then exactly one sync + one D2H of the concatenated embeddings.
+
+        Everything the host can do without the embedding *values* —
+        session/wire counters, lazy-sync accounting, and (on a
+        device-resident backend) the fleet ring scatter — is issued
+        BEFORE the sync point, hiding that work under the in-flight
+        device chains.  Only ``FrameResult`` construction (which needs
+        the host values) and a host backend's ring insert wait."""
+        t_d0 = self._clock()
+        # (1) stage the whole tick's frames as ONE host->device transfer
+        mel_host = np.stack([m for _, _, m in pending])
+        staged = jax.device_put(mel_host)
+        self._staged_h2d += mel_host.nbytes
+        # (2) per-bucket device-side gathers + async dispatch chains
+        launched = []   # (k, idx, padded z_dev, wire, per-bucket ms)
+        pos = np.empty(len(pending), np.int32)   # frame i -> row in concat
+        offset = 0
+        for k, idx in sorted(buckets.items()):
+            t_b = self._clock() if profile else None
+            padded = pad_pow2(len(idx))
+            gather = np.asarray(idx + idx[:1] * (padded - len(idx)),
+                                np.int32)
+            mel_b = jnp.take(staged, gather, axis=0)
+            z_dev, wire = self.engine.run_batch_async(self.params, mel_b, k)
+            ms = None
+            if profile:   # diagnostic mode: per-bucket round-trips
+                self._block(z_dev)
+                ms = (self._clock() - t_b) * 1e3 / len(idx)
+            launched.append((k, idx, z_dev, wire, ms))
+            pos[idx] = offset + np.arange(len(idx), dtype=np.int32)
+            offset += padded
+        # (3) reassemble into submission order ON DEVICE — one gather
+        # straight out of the padded concat (drops pad rows + un-buckets
+        # in the same op)
+        z_all = jnp.take(
+            jnp.concatenate([z for _, _, z, _, _ in launched]), pos, axis=0)
+        # (4) host bookkeeping + device-resident fleet scatter, all while
+        # the chains are still in flight
+        for k, idx, _, wire, _ in launched:
+            self._account_bucket(k, idx, pending, wire)
+        if self.backend.device_ingest:
+            self._ingest_fleet(pending, z_all)     # async device scatter
+        self._sync_accounting(pending)
+        # (5) THE tick's one device sync + one D2H copy.  In profile
+        # mode the bucket chains are already done, but the reassembly
+        # gather still needs its own (counted) wait — np.asarray would
+        # otherwise block uncounted inside _d2h.
+        z_all = self._block(z_all)
+        z_host = self._d2h(z_all)
+        tick_ms = (self._clock() - t_d0) * 1e3 / len(pending)
+        if not self.backend.device_ingest:
+            self._ingest_fleet(pending, z_host)
+        for k, idx, _, wire, ms in launched:
+            route = self._route(k)
+            for i in idx:
+                sid, req, _ = pending[i]
+                results[i] = FrameResult(
+                    sid=sid, t=req.t, z=z_host[i], route=route, k=k,
+                    wire_bytes=wire, latency_ms=ms if profile else tick_ms,
+                    bucket_size=len(idx))
+
+    def _route(self, k):
+        return ("edge" if k >= self.cfg.n_blocks
+                else "server" if k == 0 else "split")
+
+    def _account_bucket(self, k, idx, pending, wire):
+        """Per-bucket serving counters + per-session accounting (pure
+        host state — needs no embedding values, so the overlapped plane
+        runs it under the in-flight dispatches; the PR-3 path shares it
+        so the two planes can never drift apart in what they report)."""
+        route = self._route(k)
+        self._dispatches += 1
+        self._frames += len(idx)
+        self._wire_bytes += wire * len(idx)
+        self._routed[route] += len(idx)
+        for i in idx:
+            sid = pending[i][0]
+            s = self._sessions[sid]
+            if s.last_k >= 0 and k != s.last_k:
+                s.transitions += 1
+            s.last_k = k
+            s.frames += 1
+            s.wire_bytes += wire
+
     def _dispatch(self, k, idx, pending, results):
-        """ONE padded SplitEngine dispatch for every frame bucketed at k."""
+        """The PR-3 per-bucket-sync dispatch (``overlap=False``): host
+        staging, one ``run_batch``, one blocking round-trip — per bucket.
+        Kept behaviorally identical to PR 3 as the measured baseline +
+        bit-parity reference (it shares ``_account_bucket`` with the
+        overlapped plane so the two can never drift in what they
+        report)."""
         t0 = self._clock()
-        mel = np.stack([np.asarray(pending[i][1].mel, np.float32)
-                        for i in idx])
+        mel = np.stack([pending[i][2] for i in idx])
         pad = pad_pow2(len(idx))
         if pad > len(idx):   # repeat-pad: shape buckets stay compiled
             mel = np.concatenate(
@@ -243,35 +392,44 @@ class StreamSplitGateway:
         z_dev, wire = self.engine.run_batch(self.params, mel, k)
         if self.backend.device_ingest:   # fleet ingest skips the host hop
             self._tick_dev.append((idx, z_dev[:len(idx)]))
-        z = np.asarray(jax.block_until_ready(z_dev))[:len(idx)]
+        z = self._d2h(self._block(z_dev))[:len(idx)]
         ms = (self._clock() - t0) * 1e3 / len(idx)
-        route = ("edge" if k >= self.cfg.n_blocks
-                 else "server" if k == 0 else "split")
-        self._dispatches += 1
-        self._frames += len(idx)
-        self._wire_bytes += wire * len(idx)
-        self._routed[route] += len(idx)
+        self._account_bucket(k, idx, pending, wire)
+        route = self._route(k)
         for j, i in enumerate(idx):
-            sid, req = pending[i]
-            s = self._sessions[sid]
-            if s.last_k >= 0 and k != s.last_k:
-                s.transitions += 1
-            s.last_k = k
-            s.frames += 1
-            s.wire_bytes += wire
+            sid, req, _ = pending[i]
             results[i] = FrameResult(
                 sid=sid, t=req.t, z=z[j], route=route, k=k,
                 wire_bytes=wire, latency_ms=ms, bucket_size=len(idx))
 
-    def _ingest(self, pending, results):
-        """Fleet-backend ingest + per-session lazy-sync accounting.
+    def _ingest_fleet(self, pending, zs):
+        """Fleet-backend ingest of the tick's submission-ordered
+        embeddings.  On a device-resident backend ``zs`` is the
+        ``jax.Array`` the dispatches produced — the payload flows
+        dispatch → rings without ever touching the host (the host copy
+        in ``results`` exists only for the clients); on a host backend
+        it is the host copy the tick already made."""
+        sids = np.array([sid for sid, _, _ in pending], np.int64)
+        ts = np.array([f.t for _, f, _ in pending], np.int64)
+        labels = np.array([f.label for _, f, _ in pending], np.int64)
+        self.backend.insert_batch(sids, ts, zs, labels)
+        self._shard_frames += np.bincount(
+            self.backend.shards_of(sids), minlength=self.backend.shards)
 
-        On a device-resident backend the embeddings are handed over as
-        the ``jax.Array``s the dispatches produced (reassembled into
-        submission order on device) — the host copy in ``results`` exists
-        only for the clients, never for the fleet."""
-        sids = np.array([sid for sid, _ in pending], np.int64)
-        ts = np.array([f.t for _, f in pending], np.int64)
+    def _sync_accounting(self, pending):
+        """Per-session lazy-sync protocol accounting (host state only —
+        the overlapped plane runs it under the in-flight dispatches)."""
+        for sid, req, _ in pending:
+            s = self._sessions[sid]
+            for ev in s.sync.on_frame(req.t, charging=req.charging,
+                                      bandwidth_mbps=req.bandwidth_mbps):
+                self._sync_bytes += ev.bytes
+                self._sync_events += 1
+
+    def _ingest(self, pending, results):
+        """The PR-3 composite ingest (``overlap=False`` only): reassemble
+        the per-dispatch device slices into submission order, insert,
+        then run lazy-sync accounting."""
         if self.backend.device_ingest:
             order = np.concatenate(
                 [np.asarray(idx) for idx, _ in self._tick_dev])
@@ -279,16 +437,8 @@ class StreamSplitGateway:
                 np.argsort(order)]
         else:
             zs = np.stack([r.z for r in results])
-        labels = np.array([f.label for _, f in pending], np.int64)
-        self.backend.insert_batch(sids, ts, zs, labels)
-        self._shard_frames += np.bincount(
-            self.backend.shards_of(sids), minlength=self.backend.shards)
-        for sid, req in pending:
-            s = self._sessions[sid]
-            for ev in s.sync.on_frame(req.t, charging=req.charging,
-                                      bandwidth_mbps=req.bandwidth_mbps):
-                self._sync_bytes += ev.bytes
-                self._sync_events += 1
+        self._ingest_fleet(pending, zs)
+        self._sync_accounting(pending)
 
     # -- observability -------------------------------------------------------
     def stats(self) -> GatewayStats:
@@ -306,5 +456,8 @@ class StreamSplitGateway:
             shard_frames=tuple(int(v) for v in self._shard_frames),
             snapshot_h2d_bytes=self.backend.snapshot_h2d_bytes,
             ingest_h2d_bytes=self.backend.ingest_h2d_bytes,
+            device_syncs_per_tick=self._tick_syncs,
+            d2h_copies_per_tick=self._tick_d2h,
+            staged_h2d_bytes=self._staged_h2d,
             uptime_s=self._clock() - self._t_start,
             last_tick_ms=self._last_tick_ms)

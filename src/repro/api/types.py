@@ -79,7 +79,12 @@ class FrameResult:
     route: str                 # "edge" (k=L) | "server" (k=0) | "split"
     k: int                     # split index the policy chose
     wire_bytes: int            # synchronous split-link payload (0 at k=L)
-    latency_ms: float          # bucket dispatch wall-clock / bucket size
+    # dispatch wall-clock per frame.  On the overlapped data plane the
+    # tick is one staged H2D + async bucket chains + ONE sync, so this is
+    # the measured per-TICK figure (tick dispatch time / frames served);
+    # ``tick(profile=True)`` restores per-bucket timing (one sync per
+    # bucket — a diagnostic mode, not the serving path).
+    latency_ms: float
     bucket_size: int           # how many frames shared this dispatch
 
 
@@ -123,6 +128,14 @@ class GatewayStats:
     shard_frames: tuple = ()   # frames ingested per session shard
     snapshot_h2d_bytes: int = 0  # fleet snapshot bytes copied per refine
     ingest_h2d_bytes: int = 0  # frame payload bytes moved host->device
+    # overlapped tick data plane (docs/PERF.md): the dispatch chain is
+    # issued asynchronously and synced ONCE per tick, so a mixed-k tick
+    # costs one device round-trip regardless of bucket count.  Both
+    # counters cover the DISPATCH plane only — a periodic refine round
+    # blocks on its own loss read outside this scoreboard.
+    device_syncs_per_tick: int = 0   # dispatch-plane waits, last tick
+    d2h_copies_per_tick: int = 0     # embedding D2H copies, last tick
+    staged_h2d_bytes: int = 0  # cumulative mel bytes staged host->device
     # deterministic under an injected clock= (see StreamSplitGateway)
     uptime_s: float = 0.0      # clock() - clock() at construction
     last_tick_ms: float = 0.0  # wall-clock of the most recent tick()

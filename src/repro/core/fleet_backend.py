@@ -26,6 +26,12 @@ Contracts (pinned in ``tests/test_fleet_backend.py``):
 - both report host<->device traffic (``snapshot_h2d_bytes`` /
   ``ingest_h2d_bytes``) so ``benchmarks/fleet_serve.py`` can show the
   snapshot copy is gone.
+
+The gateway's overlapped tick (docs/PERF.md) stages every frame as one
+device array and hands the submission-ordered dispatch embeddings to
+``insert_batch`` as a ``jax.Array``: on the sharded backend the payload
+flows dispatch → rings entirely on device (``ingest_h2d_bytes`` stays 0;
+the zero-copy volume is measured in ``ingest_d2d_bytes``).
 """
 from __future__ import annotations
 
@@ -58,7 +64,9 @@ class FleetBackend(abc.ABC):
     size on the sharded one.  ``snapshot_h2d_bytes`` accumulates fleet
     snapshot bytes copied host->device for refinement (the cost the
     device-resident backend eliminates); ``ingest_h2d_bytes`` accumulates
-    frame payload bytes moved host->device at ingest.
+    frame payload bytes moved host->device at ingest, and
+    ``ingest_d2d_bytes`` the payload that arrived as ``jax.Array``s and
+    never crossed the host boundary (the gateway's staged dispatch path).
     """
 
     capacity: int
@@ -71,6 +79,7 @@ class FleetBackend(abc.ABC):
     device_ingest: bool = False
     snapshot_h2d_bytes: int = 0
     ingest_h2d_bytes: int = 0
+    ingest_d2d_bytes: int = 0
 
     # -- session lifecycle ---------------------------------------------------
     @property
@@ -257,6 +266,7 @@ class ShardedFleetBackend(FleetBackend):
         self._free = list(range(capacity - 1, -1, -1))
         self.snapshot_h2d_bytes = 0
         self.ingest_h2d_bytes = 0
+        self.ingest_d2d_bytes = 0
 
         # -- compiled state transitions (donated: in-place on device) -------
         def _ins(z, t, label, newest, sids, slots, ts, zs, labels,
@@ -421,6 +431,8 @@ class ShardedFleetBackend(FleetBackend):
         if not isinstance(zs, jax.Array):
             zs = as_host(zs, np.float32)
             self.ingest_h2d_bytes += zs.nbytes
+        else:   # staged dispatch path: payload never touches the host
+            self.ingest_d2d_bytes += zs.nbytes
         keys = sids32.astype(np.int64) * self.window + slots32
         if len(np.unique(keys)) < n:
             # duplicate (sid, slot) writes in one batch: jnp scatter with

@@ -20,6 +20,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
 from repro.models import audio_encoder as enc
 from repro.quant.int8 import dequantize, fake_quant, quantize
 
@@ -114,6 +115,38 @@ class SplitEngine:
         per_frame = act.size // act.shape[0]
         if self.quantize_wire:
             act = self._qdq_sample(act)
+            wire_bytes = per_frame + 8    # int8 payload + scale/zero header
+        else:
+            wire_bytes = per_frame * 4
+        z = self._server_exec(k)(params, act)
+        return z, wire_bytes
+
+    def run_batch_async(self, params, mel, k):
+        """``run_batch`` without ever materializing on the host: accepts a
+        device-resident mel batch, returns the **unmaterialized** device
+        embedding — no block, no device→host copy.  The caller owns the
+        tick's single sync point (``StreamSplitGateway.tick``), so B
+        buckets overlap on the device instead of paying one round-trip
+        each.
+
+        The wire stage runs the fused Pallas ``wire_roundtrip`` kernel
+        (``kernels/int8_quant.py``) — still its OWN executable, never
+        fused into the edge/server stages, and pinned bitwise against the
+        vmapped ``quantize∘dequantize`` reference that ``run_batch``
+        executes — so embeddings stay bit-identical to both the PR-3 sync
+        path and B separate ``run`` calls.
+        """
+        L = self.cfg.n_blocks
+        k = int(k)
+        if k >= L:
+            return self._edge_exec(L)(params, mel), 0
+        # k=0 offloads the raw input: _edge_fn(0) is the identity, so the
+        # dispatch skips its executable entirely (bitwise no-op, one less
+        # host->device program launch on the hot path)
+        act = mel if k == 0 else self._edge_exec(k)(params, mel)
+        per_frame = act.size // act.shape[0]
+        if self.quantize_wire:
+            act = kernel_ops.wire_roundtrip(act)
             wire_bytes = per_frame + 8    # int8 payload + scale/zero header
         else:
             wire_bytes = per_frame * 4

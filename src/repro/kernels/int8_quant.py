@@ -70,6 +70,62 @@ def int8_quantize_pallas(x, *, block=4096, interpret=True):
     return q, scale, zero
 
 
+def _wire_roundtrip_kernel(x_ref, out_ref):
+    """A (block_b, n) tile of samples per grid step: row-wise min/max
+    reduction, affine quantize to the int8 grid and requantize back to
+    fp32 — one VMEM pass, no int8 tensor ever written to HBM.  The
+    arithmetic is kept op-for-op identical to per-sample
+    ``quant.int8.dequantize(quantize(x))`` (row min/max are exactly
+    associative, the affine chain is elementwise), which is what makes
+    the bitwise pin against the vmapped reference possible."""
+    x = x_ref[...].astype(jnp.float32)
+    lo = jnp.min(x, axis=1, keepdims=True)
+    hi = jnp.max(x, axis=1, keepdims=True)
+    scale = jnp.maximum((hi - lo) / 255.0, 1e-12)
+    zero = -128.0 - lo / scale
+    q = jnp.clip(jnp.round(x / scale + zero), -128, 127).astype(jnp.int8)
+    out_ref[...] = (q.astype(jnp.float32) - zero) * scale
+
+
+def wire_roundtrip_pallas(x, *, block_b=8, interpret=True):
+    """Fused per-sample INT8 wire simulation: ``vmap(dequantize∘quantize)``
+    over the leading (batch) dim as ONE kernel.
+
+    The two-executable path (``int8_quantize_pallas`` +
+    ``int8_dequantize_pallas``) writes the int8 payload to HBM and reads
+    it back; serving only needs the *received* activation, so the fused
+    kernel keeps each sample's tile in VMEM through reduce → quantize →
+    requantize and writes fp32 once.  ``block_b`` rows ride one grid step
+    — (8, 128·m) tiles, the fp32 minimum on TPU.  -> same shape as ``x``,
+    float32, bitwise-equal to the vmapped reference
+    (tests/test_kernels.py pins it in both interpret and compiled modes).
+    """
+    B = x.shape[0]
+    shape = x.shape
+    flat = x.reshape(B, -1).astype(jnp.float32)
+    n = flat.shape[1]
+    pad_n = (-n) % 128               # lane-width alignment for the TPU path
+    if pad_n:
+        # pad each row with its OWN first element: per-sample min/max —
+        # and therefore every quantization constant — is unchanged
+        flat = jnp.concatenate(
+            [flat, jnp.broadcast_to(flat[:, :1], (B, pad_n))], axis=1)
+    bb = min(block_b, B)
+    pad_b = (-B) % bb                # pad rows quantize too, sliced off
+    if pad_b:
+        flat = jnp.concatenate(
+            [flat, jnp.broadcast_to(flat[:1], (pad_b,) + flat.shape[1:])])
+    out = pl.pallas_call(
+        _wire_roundtrip_kernel,
+        grid=(flat.shape[0] // bb,),
+        in_specs=[pl.BlockSpec((bb, flat.shape[1]), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb, flat.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+        interpret=interpret,
+    )(flat)
+    return out[:B, :n].reshape(shape)
+
+
 def int8_dequantize_pallas(q, scale, zero, *, block=4096, dtype=jnp.float32,
                            interpret=True):
     shape = q.shape

@@ -16,7 +16,8 @@ from repro.kernels import ref
 from repro.kernels.gmm_posterior import gmm_posterior_pallas
 from repro.kernels.infonce_vneg import infonce_vneg_pallas
 from repro.kernels.int8_quant import (int8_dequantize_pallas,
-                                      int8_quantize_pallas)
+                                      int8_quantize_pallas,
+                                      wire_roundtrip_pallas)
 from repro.kernels.laplacian_energy import laplacian_energy_pallas
 from repro.kernels.swd_kernel import swd_pallas
 
@@ -123,6 +124,17 @@ def int8_quantize(x, *, interpret=None):
 def int8_dequantize(q, scale, zero, *, dtype=jnp.float32, interpret=None):
     return int8_dequantize_pallas(q, scale, zero, dtype=dtype,
                                   interpret=_resolve(interpret))
+
+
+@partial(jax.jit, static_argnames=("interpret", "block_b"))
+def wire_roundtrip(x, *, block_b=8, interpret=None):
+    """Fused per-sample INT8 quantize∘dequantize over the leading batch
+    dim — the split-link wire stage of ``SplitEngine.run_batch_async``.
+    Bitwise-equal to ``jax.vmap(lambda a: dequantize(quantize(a)))``
+    (pinned in tests/test_kernels.py), so the per-frame vs bucketed
+    bit-parity contract survives the fusion."""
+    return wire_roundtrip_pallas(x, block_b=block_b,
+                                 interpret=_resolve(interpret))
 
 
 @partial(jax.jit, static_argnames=("k", "interpret"))

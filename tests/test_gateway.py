@@ -170,6 +170,70 @@ def test_results_in_submission_order_with_bucket_sizes(params):
 
 
 # ---------------------------------------------------------------------------
+# Overlapped tick data plane: single-sync contract + PR-3 path parity
+# ---------------------------------------------------------------------------
+
+def test_async_tick_bit_matches_pr3_sync_path(params):
+    """A mixed-k tick through the overlapped plane (staged H2D, async
+    bucket chains, fused Pallas wire kernel, ONE sync) is bit-identical
+    to the PR-3 per-bucket-sync dispatch — and performs exactly one
+    device sync and one D2H embedding copy where PR-3 paid one round-trip
+    per bucket (counted through the instrumented _block/_d2h hooks)."""
+    n = 2 * (L + 1)   # every k twice -> L+1 buckets per tick (mixed-k)
+
+    def mk(overlap):
+        return StreamSplitGateway(CFG, params, policy=SpreadPolicy(L),
+                                  capacity=n, window=8, qos_reserve=0,
+                                  overlap=overlap)
+
+    gw_a, gw_s = mk(True), mk(False)
+    rng = np.random.default_rng(11)
+    sids_a = [gw_a.open_session().sid for _ in range(n)]
+    sids_s = [gw_s.open_session().sid for _ in range(n)]
+    for t in range(2):
+        mels = [_mel(rng) for _ in range(n)]
+        for gw, sids in ((gw_a, sids_a), (gw_s, sids_s)):
+            for i, sid in enumerate(sids):
+                gw.submit(sid, FrameRequest(t=t, mel=mels[i]))
+        for ra, rs in zip(gw_a.tick(), gw_s.tick()):
+            np.testing.assert_array_equal(
+                ra.z, rs.z, err_msg=f"k={ra.k} diverged from the sync path")
+            assert ra.k == rs.k and ra.wire_bytes == rs.wire_bytes
+            assert ra.bucket_size == rs.bucket_size
+    sa, ss = gw_a.stats(), gw_s.stats()
+    # THE contract: one sync + one D2H per tick, however many buckets
+    assert sa.device_syncs_per_tick == 1
+    assert sa.d2h_copies_per_tick == 1
+    assert ss.device_syncs_per_tick == L + 1      # PR-3: one per bucket
+    assert ss.d2h_copies_per_tick == L + 1
+    # the whole tick's frames staged as ONE h2d transfer, measured
+    assert sa.staged_h2d_bytes == 2 * n * CFG.frames * CFG.n_mels * 4
+    assert ss.staged_h2d_bytes == 0               # PR-3 staged per bucket
+    assert sa.frames == ss.frames == 2 * n
+
+
+def test_profile_tick_restores_per_bucket_timing(params):
+    """``tick(profile=True)`` is the diagnostic mode: one sync per bucket
+    (so per-bucket latency is measurable) while results stay identical."""
+    n = L + 1
+    ticks = iter(range(10_000))
+    gw = StreamSplitGateway(CFG, params, policy=SpreadPolicy(L),
+                            capacity=n, window=8, qos_reserve=0,
+                            clock=lambda: 0.5 * next(ticks))
+    rng = np.random.default_rng(12)
+    sids = [gw.open_session().sid for _ in range(n)]
+    for sid in sids:
+        gw.submit(sid, FrameRequest(t=0, mel=_mel(rng)))
+    results = gw.tick(profile=True)
+    s = gw.stats()
+    # one per bucket + the final reassembly-gather wait
+    assert s.device_syncs_per_tick == n + 1
+    assert s.d2h_copies_per_tick == 1             # embeddings still 1 copy
+    # fake clock: each bucket spans one 0.5 s read pair -> 500 ms/frame
+    assert all(r.latency_ms == 500.0 for r in results)
+
+
+# ---------------------------------------------------------------------------
 # Wire accounting through the gateway
 # ---------------------------------------------------------------------------
 
@@ -328,8 +392,10 @@ def test_gateway_on_sharded_backend_bit_matches_host(params):
     assert (ss.backend, ss.shards) == ("sharded", 1)
     assert sum(ss.shard_frames) == ss.frames == 16
     assert ss.snapshot_h2d_bytes == 0 and sh.snapshot_h2d_bytes > 0
-    # gateway hands embeddings to the sharded fleet as device arrays
+    # gateway hands embeddings to the sharded fleet as device arrays:
+    # zero h2d payload, the full volume measured as device-to-device
     assert ss.ingest_h2d_bytes == 0
+    assert gw_s.backend.ingest_d2d_bytes == ss.frames * CFG.d_embed * 4
     # session-level accounting rides the same seam
     assert gw_h.session(sids_h[0]).fill_fraction == \
         gw_s.session(sids_s[0]).fill_fraction

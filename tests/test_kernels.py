@@ -87,6 +87,38 @@ def test_int8_quant_sweep(shape, dtype):
         float(sc) * 0.51 + 1e-6
 
 
+@pytest.mark.parametrize("B,shape", [(1, (40, 32)), (5, (16, 16)),
+                                     (17, (7,)), (64, (16, 16)),
+                                     (3, (100,)), (13, (10, 8, 4)),
+                                     (2, (128,)), (33, (20, 24))])
+def test_wire_roundtrip_bitwise_matches_vmapped_reference(B, shape):
+    """The fused wire kernel IS the vmapped quantize∘dequantize pair —
+    bitwise, not allclose: ``SplitEngine.run_batch_async`` swaps one for
+    the other inside the serving hot path, so any divergence would break
+    the per-frame vs bucketed embedding parity contract.  Odd batch
+    sizes and non-128-multiple sample lengths exercise the lane padding
+    (which pads each row with its own first element, leaving per-sample
+    min/max untouched)."""
+    from repro.quant.int8 import dequantize, quantize
+    x = (3.0 * jax.random.normal(jax.random.PRNGKey(B + sum(shape)),
+                                 (B,) + shape) + 1.0)
+    fused = ops.wire_roundtrip(x)
+    vmapped = jax.jit(jax.vmap(lambda a: dequantize(quantize(a))))(x)
+    assert fused.dtype == jnp.float32 and fused.shape == x.shape
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(vmapped))
+
+
+def test_wire_roundtrip_b1_matches_per_tensor_reference():
+    """At B=1 the per-sample kernel equals the per-tensor quantize of
+    ``SplitEngine.run`` — the parity boundary between the batched and
+    per-frame serving paths."""
+    from repro.quant.int8 import dequantize, quantize
+    x = jax.random.normal(jax.random.PRNGKey(9), (1, 24, 16)) * 2.0
+    fused = ops.wire_roundtrip(x)
+    tensor = jax.jit(lambda a: dequantize(quantize(a)))(x)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(tensor))
+
+
 @pytest.mark.parametrize("B,T,d,k", [(1, 100, 128, 5), (4, 50, 32, 3),
                                      (2, 16, 8, 7)])
 def test_laplacian_kernel_sweep(B, T, d, k):
