@@ -2,11 +2,13 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (value semantics per row name:
 KB, ms, mJ, %, correlation r, ... — the derived column carries the paper's
-number for side-by-side comparison), and writes ``BENCH_gateway.json`` —
-the machine-readable serving-perf trajectory (frames/s, syncs/tick,
-staged H2D bytes, p50/p95 tick latency at N ∈ {32, 64}) that CI uploads
-as an artifact so gateway performance is tracked across PRs
-(docs/PERF.md explains the fields).
+number for side-by-side comparison), and writes the machine-readable
+serving-perf trajectories CI uploads as artifacts so performance is
+tracked across PRs: ``BENCH_gateway.json`` (frames/s, syncs/tick, staged
+H2D bytes, p50/p95 tick latency at N ∈ {32, 64}; docs/PERF.md) and
+``BENCH_stream.json`` (sustained streaming frames/s, per-class p95 queue
+waits, deadline-miss rates, preemption counts, syncs/tick;
+docs/STREAMING.md).
 
     PYTHONPATH=src python -m benchmarks.run [--quick|--smoke] [--only PREFIX]
 
@@ -33,7 +35,7 @@ def main() -> None:
     quick = args.quick or args.smoke
 
     from benchmarks import (fleet_serve, gateway_serve, kernels_bench,
-                            quality_tables, system_tables)
+                            quality_tables, stream_serve, system_tables)
     print("name,us_per_call,derived")
     t0 = time.time()
 
@@ -42,10 +44,16 @@ def main() -> None:
         path = gateway_serve.write_bench_json(out)
         print(f"# wrote {path}", file=sys.stderr)
 
+    def stream():
+        out = stream_serve.run_all(quick=quick, smoke=args.smoke)
+        path = stream_serve.write_bench_json(out)
+        print(f"# wrote {path}", file=sys.stderr)
+
     suites = [("system", system_tables.run_all),
               ("kernels", kernels_bench.run_all),
               ("fleet", lambda: fleet_serve.run_all(quick=quick)),
-              ("gateway", gateway)]
+              ("gateway", gateway),
+              ("stream", stream)]
     if not quick:
         suites.insert(1, ("quality", quality_tables.run_all))
     for name, fn in suites:

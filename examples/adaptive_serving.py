@@ -8,6 +8,13 @@ the unified API: every tick the escalated frames share ONE padded split
 dispatch and the local frames share another (the gateway analogue of
 ``CascadeServer.handle``'s two sub-batches).
 
+NOTE: the hand-rolled ``submit``/``tick`` loop below is the *diagnostic*
+way to drive the pipeline (here it runs ``tick(profile=True)`` to
+attribute per-tier latency).  To actually serve a fleet, use the
+always-on streaming runtime instead — ``examples/streaming_demo.py`` is
+the canonical entry point (``repro.serving.StreamServer``: threaded
+ingest, QoS scheduling, cross-tick pipelining; docs/STREAMING.md).
+
     PYTHONPATH=src python examples/adaptive_serving.py
 """
 import jax

@@ -12,7 +12,8 @@ from repro.api.policies import (EntropyThresholdPolicy, FixedKPolicy,
                                 RLPolicy, RulePolicy, SplitPolicy,
                                 make_policy)
 from repro.api.types import (AdmissionError, FrameRequest, FrameResult,
-                             GatewayStats, QoSClass, SessionInfo)
+                             GatewayStats, QoSClass, SessionInfo,
+                             StreamStats)
 
 __all__ = [
     "StreamSplitGateway",
@@ -21,5 +22,5 @@ __all__ = [
     "SplitPolicy", "make_policy", "FixedKPolicy", "RulePolicy", "RLPolicy",
     "EntropyThresholdPolicy",
     "FrameRequest", "FrameResult", "SessionInfo", "GatewayStats",
-    "QoSClass", "AdmissionError",
+    "QoSClass", "AdmissionError", "StreamStats",
 ]

@@ -33,6 +33,14 @@ many buckets the policy produced.  ``overlap=False`` restores the PR-3
 per-bucket-sync dispatch (the benchmark baseline), and
 ``tick(profile=True)`` trades the single sync for per-bucket timing.
 
+The overlapped tick is split into two public phases —
+``tick_launch() -> TickPlan`` (stage + async dispatch + overlapped host
+bookkeeping, never blocks) and ``tick_collect(plan)`` (the one sync +
+D2H + delivery) — with ``tick()`` simply composing them.  The streaming
+runtime (``repro.serving.StreamServer``, docs/STREAMING.md) exploits the
+seam for cross-tick pipelining: tick t+1 launches while tick t's chains
+are still in flight, and ``device_syncs_per_tick`` stays 1.
+
 All wall-clock reads go through the injectable ``clock=`` callable
 (default ``time.perf_counter``), so latency/uptime numbers in
 ``FrameResult``/``GatewayStats`` are deterministic under a fake clock in
@@ -53,6 +61,31 @@ from repro.core.env import EdgeCloudEnv
 from repro.core.fleet import FleetFullError, HostFleetBackend, pad_pow2
 from repro.core.splitter import SplitEngine
 from repro.core.sync import LazySync, SyncCfg
+
+
+class TickPlan:
+    """One in-flight overlapped tick, between ``tick_launch`` and
+    ``tick_collect``: the launched device chains plus the host context
+    needed to deliver their results.  Opaque to callers — the streaming
+    runtime (``serving/server.py``) holds at most one while it stages
+    the NEXT tick under this one's chains (cross-tick pipelining)."""
+
+    __slots__ = ("pending", "t0", "profile", "launched", "z_all", "t_d0",
+                 "syncs", "d2h", "seq")
+
+    def __init__(self, pending, t0, profile=False, seq=0):
+        self.pending = pending     # [(sid, FrameRequest, mel f32)] served
+        self.t0 = t0               # clock at tick_launch entry
+        self.profile = profile
+        self.launched = []         # (k, idx, wire bytes, per-bucket ms)
+        self.z_all = None          # unmaterialized (B, d) device embeddings
+        self.t_d0 = t0             # clock at dispatch start
+        self.syncs = 0             # launch-phase waits (profile mode only)
+        self.d2h = 0
+        self.seq = seq             # launch order — collect must match
+
+    def __len__(self):
+        return len(self.pending)
 
 
 class _Session:
@@ -161,6 +194,11 @@ class StreamSplitGateway:
         self._staged_h2d = 0
         self._tick_syncs = 0
         self._tick_d2h = 0
+        # launch/collect sequence numbers: plans MUST collect in launch
+        # order (the fleet rings see launch-order scatters) — a
+        # violation raises instead of silently corrupting parity
+        self._launch_seq = 0
+        self._collect_seq = 0
 
     # -- session lifecycle ---------------------------------------------------
     def open_session(self, platform="pi4",
@@ -209,6 +247,20 @@ class StreamSplitGateway:
         return self._sessions[sid]
 
     # -- ingest --------------------------------------------------------------
+    def validate_mel(self, mel) -> np.ndarray:
+        """Validate one frame's mel payload and return it as float32.
+        THE validation — shared with the streaming runtime
+        (``serving/server.py`` runs it on the client's thread) so the
+        two surfaces can never drift.  A no-op copy-wise when the input
+        is already a float32 ndarray."""
+        mel = np.asarray(mel, np.float32)
+        if mel.shape != (self.cfg.frames, self.cfg.n_mels):
+            raise ValueError(
+                f"frame.mel shape {mel.shape} != "
+                f"({self.cfg.frames}, {self.cfg.n_mels}) — submit one "
+                "unbatched sample per FrameRequest")
+        return mel
+
     def submit(self, sid, frame: FrameRequest) -> None:
         """Queue one frame for the next ``tick``.
 
@@ -217,13 +269,16 @@ class StreamSplitGateway:
         converted twice (the seed path re-ran ``np.asarray`` per
         dispatch)."""
         self._require(sid)
-        mel = np.asarray(frame.mel, np.float32)
-        if mel.shape != (self.cfg.frames, self.cfg.n_mels):
-            raise ValueError(
-                f"frame.mel shape {mel.shape} != "
-                f"({self.cfg.frames}, {self.cfg.n_mels}) — submit one "
-                "unbatched sample per FrameRequest")
-        self._pending.append((sid, frame, mel))
+        self._pending.append((sid, frame, self.validate_mel(frame.mel)))
+
+    def submit_validated(self, sid, frame: FrameRequest) -> None:
+        """``submit`` minus the re-validation: ``frame.mel`` MUST
+        already be a float32 ndarray of shape (frames, n_mels) — i.e.
+        have passed ``validate_mel``.  The streaming runtime validates
+        at enqueue time on the client's thread and uses this on the
+        serving hot path so no frame is checked twice."""
+        self._require(sid)
+        self._pending.append((sid, frame, frame.mel))
 
     # -- the pipeline tick ---------------------------------------------------
     def tick(self, *, profile=False) -> list[FrameResult]:
@@ -233,9 +288,15 @@ class StreamSplitGateway:
         On the overlapped plane (``overlap=True``) the dispatch costs one
         staged H2D transfer, one device sync and one D2H embedding copy
         per tick — every bucket's chain runs asynchronously in between.
+        ``tick()`` is exactly ``tick_collect(tick_launch())``: the
+        streaming runtime (``serving/server.py``) calls the two phases
+        separately so tick t+1 can stage and launch while tick t's
+        chains are still in flight (cross-tick pipelining).
         ``profile=True`` syncs after each bucket instead, so
         ``FrameResult.latency_ms`` is per-bucket (diagnostics; the tick
         then pays one round-trip per bucket like ``overlap=False``)."""
+        if self.overlap:
+            return self.tick_collect(self.tick_launch(profile=profile))
         t0 = self._clock()
         pending, self._pending = self._pending, []
         results: list[FrameResult | None] = [None] * len(pending)
@@ -243,26 +304,82 @@ class StreamSplitGateway:
         self._tick_syncs = 0
         self._tick_d2h = 0
         if pending:
-            # normalize bandwidth exactly like the control-plane env so RL
-            # policies see the feature scale they were trained on
-            bw_norm = EdgeCloudEnv.BW_NORM
-            obs = np.array([[f.u, f.cpu, min(f.bandwidth_mbps / bw_norm, 1.0)]
-                            for _, f, _ in pending], np.float32)
-            ks = np.clip(np.asarray(self.policy.decide(obs), np.int64),
-                         0, self.cfg.n_blocks)
-            buckets: dict[int, list[int]] = {}
-            for i, k in enumerate(ks):
-                buckets.setdefault(int(k), []).append(i)
-            if self.overlap:
-                # handles its own ingest: fleet scatter + lazy-sync
-                # accounting are issued BEFORE the sync point so they
-                # overlap the in-flight device chains
-                self._dispatch_overlapped(buckets, pending, results,
-                                          profile)
-            else:
-                for k, idx in sorted(buckets.items()):
-                    self._dispatch(k, idx, pending, results)
-                self._ingest(pending, results)
+            for k, idx in sorted(self._decide(pending).items()):
+                self._dispatch(k, idx, pending, results)
+            self._ingest(pending, results, now=t0)
+        self._finish_tick(t0)
+        return results  # type: ignore[return-value]
+
+    def tick_launch(self, *, profile=False) -> TickPlan:
+        """Launch phase of the overlapped tick: decide, stage the tick's
+        mels as ONE H2D transfer, issue every k-bucket's async
+        edge→wire→server chain, and run all the host bookkeeping that
+        needs no embedding values — WITHOUT ever blocking on the device.
+
+        Returns the in-flight ``TickPlan``; pass it to ``tick_collect``
+        to pay the tick's one sync and receive the ``FrameResult``s.
+        Between the two calls the chains run on the device, so a caller
+        may stage and launch the NEXT tick first — the cross-tick
+        pipelining of ``serving.StreamServer``.  At most the launched
+        plan's own frames are taken from the pending queue; ``submit``s
+        that arrive after the launch ride the next plan."""
+        if not self.overlap:
+            raise RuntimeError(
+                "tick_launch/tick_collect phase the overlapped data plane; "
+                "construct the gateway with overlap=True")
+        t0 = self._clock()
+        pending, self._pending = self._pending, []
+        self._tick_syncs = 0
+        self._tick_d2h = 0
+        plan = TickPlan(pending, t0, profile, seq=self._launch_seq)
+        self._launch_seq += 1
+        if pending:
+            self._launch_overlapped(plan, self._decide(pending))
+        plan.syncs, plan.d2h = self._tick_syncs, self._tick_d2h
+        return plan
+
+    def tick_collect(self, plan: TickPlan) -> list[FrameResult]:
+        """Collect phase: the tick's ONE device sync + ONE D2H embedding
+        copy, ``FrameResult`` delivery in submission order, host-backend
+        ingest, tick counters and the periodic refine round.  Plans MUST
+        be collected in launch order — the fleet rings already saw the
+        launch-order scatters — and out-of-order (or double) collection
+        raises instead of silently corrupting parity."""
+        if plan.seq != self._collect_seq:
+            raise RuntimeError(
+                f"tick_collect out of launch order: plan #{plan.seq} "
+                f"offered, #{self._collect_seq} expected (plans collect "
+                "exactly once, oldest first)")
+        self._collect_seq += 1
+        # the per-tick sync scoreboard restarts from THIS plan's launch
+        # counts: with another tick launched in between (pipelining), the
+        # gateway counters were reset by that launch — a collected tick
+        # still reports exactly its own waits/copies
+        self._tick_syncs, self._tick_d2h = plan.syncs, plan.d2h
+        results: list[FrameResult | None] = [None] * len(plan.pending)
+        if plan.pending:
+            self._collect_overlapped(plan, results)
+        self._finish_tick(plan.t0)
+        return results  # type: ignore[return-value]
+
+    def _decide(self, pending):
+        """Policy decision for one tick's pending frames -> {k: [frame
+        indices]} buckets.  Bandwidth is normalized exactly like the
+        control-plane env so RL policies see the feature scale they were
+        trained on."""
+        bw_norm = EdgeCloudEnv.BW_NORM
+        obs = np.array([[f.u, f.cpu, min(f.bandwidth_mbps / bw_norm, 1.0)]
+                        for _, f, _ in pending], np.float32)
+        ks = np.clip(np.asarray(self.policy.decide(obs), np.int64),
+                     0, self.cfg.n_blocks)
+        buckets: dict[int, list[int]] = {}
+        for i, k in enumerate(ks):
+            buckets.setdefault(int(k), []).append(i)
+        return buckets
+
+    def _finish_tick(self, t0):
+        """Tick epilogue shared by every plane: counters, the periodic
+        fleet refine round, and the clock-derived tick latency."""
         self._ticks += 1
         if (self.backend.can_refine and self.refine_every
                 and self._ticks % self.refine_every == 0
@@ -272,7 +389,17 @@ class StreamSplitGateway:
             self._refine_rounds += 1
             self._last_refine_loss = loss
         self._last_tick_ms = (self._clock() - t0) * 1e3
-        return results  # type: ignore[return-value]
+
+    def refine_due_next_tick(self) -> bool:
+        """True when the NEXT collected tick will run a fleet refine
+        round — the streaming runtime drains its pipeline first so the
+        refine sees exactly the frames a sequential gateway would have
+        ingested by that tick (``serving/server.py``).  Mirrors
+        ``_finish_tick``'s condition exactly, including ``n_active`` —
+        an idle fleet never forces a pipeline drain."""
+        return bool(self.backend.can_refine and self.refine_every
+                    and (self._ticks + 1) % self.refine_every == 0
+                    and self.backend.n_active)
 
     # instrumented sync points: every blocking wait and embedding D2H
     # copy in the DISPATCH plane routes through these two, so the
@@ -288,25 +415,38 @@ class StreamSplitGateway:
         self._tick_d2h += 1
         return np.asarray(x)
 
-    def _dispatch_overlapped(self, buckets, pending, results, profile):
-        """The overlapped tick data plane: ONE staged H2D for the whole
-        tick, device-side bucket gathers, async edge→wire→server chains,
-        then exactly one sync + one D2H of the concatenated embeddings.
-
-        Everything the host can do without the embedding *values* —
-        session/wire counters, lazy-sync accounting, and (on a
-        device-resident backend) the fleet ring scatter — is issued
-        BEFORE the sync point, hiding that work under the in-flight
-        device chains.  Only ``FrameResult`` construction (which needs
-        the host values) and a host backend's ring insert wait."""
-        t_d0 = self._clock()
-        # (1) stage the whole tick's frames as ONE host->device transfer
+    def _launch_overlapped(self, plan, buckets):
+        """Launch half of the overlapped tick data plane: ONE staged H2D
+        for the whole tick, device-side bucket gathers, async
+        edge→wire→server chains, plus everything the host can do without
+        the embedding *values* — session/wire counters, lazy-sync
+        accounting, and (on a device-resident backend) the fleet ring
+        scatter — all issued WITHOUT a sync, so the work hides under the
+        in-flight device chains (and, pipelined, under the PREVIOUS
+        tick's chains too)."""
+        pending, profile = plan.pending, plan.profile
+        plan.t_d0 = self._clock()
+        # (1) stage the whole tick's frames as ONE host->device transfer,
+        # repeat-padded to a pow2 row count: a streaming scheduler ticks
+        # at arbitrary batch sizes, and every device-side bucket gather
+        # below is compiled against the staged shape — pow2 padding keeps
+        # that cache at O(log capacity) executables instead of one per
+        # distinct tick size (pad rows are never gathered: bitwise no-op)
         mel_host = np.stack([m for _, _, m in pending])
+        pad_rows = pad_pow2(len(pending)) - len(pending)
+        if pad_rows:
+            mel_host = np.concatenate(
+                [mel_host, np.broadcast_to(mel_host[:1], (pad_rows,)
+                                           + mel_host.shape[1:])])
         staged = jax.device_put(mel_host)
         self._staged_h2d += mel_host.nbytes
         # (2) per-bucket device-side gathers + async dispatch chains
-        launched = []   # (k, idx, padded z_dev, wire, per-bucket ms)
-        pos = np.empty(len(pending), np.int32)   # frame i -> row in concat
+        z_bufs = []
+        # frame i -> row in the padded concat; itself pow2-padded (pad
+        # entries re-read row 0 and are dropped on the host) so the
+        # reassembly gather is also compiled per pow2 size, not per
+        # arbitrary streaming tick size
+        pos = np.zeros(pad_pow2(len(pending)), np.int32)
         offset = 0
         for k, idx in sorted(buckets.items()):
             t_b = self._clock() if profile else None
@@ -319,37 +459,48 @@ class StreamSplitGateway:
             if profile:   # diagnostic mode: per-bucket round-trips
                 self._block(z_dev)
                 ms = (self._clock() - t_b) * 1e3 / len(idx)
-            launched.append((k, idx, z_dev, wire, ms))
+            z_bufs.append(z_dev)
+            plan.launched.append((k, idx, wire, ms))
             pos[idx] = offset + np.arange(len(idx), dtype=np.int32)
             offset += padded
         # (3) reassemble into submission order ON DEVICE — one gather
         # straight out of the padded concat (drops pad rows + un-buckets
         # in the same op)
-        z_all = jnp.take(
-            jnp.concatenate([z for _, _, z, _, _ in launched]), pos, axis=0)
+        plan.z_all = jnp.take(jnp.concatenate(z_bufs), pos, axis=0)
         # (4) host bookkeeping + device-resident fleet scatter, all while
-        # the chains are still in flight
-        for k, idx, _, wire, _ in launched:
+        # the chains are still in flight.  The scatter slices z_all to
+        # the real row count — one trivial slice executable per distinct
+        # tick size, which is the cheapest option: handing the padded
+        # array over instead would duplicate (sid, slot) keys and push
+        # insert_batch down its duplicate-fold path, whose own gather is
+        # per-size too AND pays a host-side fold per tick
+        for k, idx, wire, _ in plan.launched:
             self._account_bucket(k, idx, pending, wire)
         if self.backend.device_ingest:
-            self._ingest_fleet(pending, z_all)     # async device scatter
-        self._sync_accounting(pending)
-        # (5) THE tick's one device sync + one D2H copy.  In profile
-        # mode the bucket chains are already done, but the reassembly
-        # gather still needs its own (counted) wait — np.asarray would
-        # otherwise block uncounted inside _d2h.
-        z_all = self._block(z_all)
-        z_host = self._d2h(z_all)
-        tick_ms = (self._clock() - t_d0) * 1e3 / len(pending)
+            self._ingest_fleet(pending,            # async device scatter
+                               plan.z_all[:len(pending)])
+        self._sync_accounting(pending, now=plan.t_d0)
+
+    def _collect_overlapped(self, plan, results):
+        """Collect half: THE tick's one device sync + one D2H copy, then
+        ``FrameResult`` delivery (which needs the host values) and a host
+        backend's ring insert.  In profile mode the bucket chains are
+        already done, but the reassembly gather still needs its own
+        (counted) wait — np.asarray would otherwise block uncounted
+        inside ``_d2h``."""
+        pending = plan.pending
+        z_host = self._d2h(self._block(plan.z_all))
+        tick_ms = (self._clock() - plan.t_d0) * 1e3 / len(pending)
         if not self.backend.device_ingest:
-            self._ingest_fleet(pending, z_host)
-        for k, idx, _, wire, ms in launched:
+            self._ingest_fleet(pending, z_host[:len(pending)])
+        for k, idx, wire, ms in plan.launched:
             route = self._route(k)
             for i in idx:
                 sid, req, _ = pending[i]
                 results[i] = FrameResult(
                     sid=sid, t=req.t, z=z_host[i], route=route, k=k,
-                    wire_bytes=wire, latency_ms=ms if profile else tick_ms,
+                    wire_bytes=wire,
+                    latency_ms=ms if plan.profile else tick_ms,
                     bucket_size=len(idx))
 
     def _route(self, k):
@@ -416,17 +567,21 @@ class StreamSplitGateway:
         self._shard_frames += np.bincount(
             self.backend.shards_of(sids), minlength=self.backend.shards)
 
-    def _sync_accounting(self, pending):
+    def _sync_accounting(self, pending, now=0.0):
         """Per-session lazy-sync protocol accounting (host state only —
-        the overlapped plane runs it under the in-flight dispatches)."""
+        the overlapped plane runs it under the in-flight dispatches).
+        ``now`` is the tick's dispatch timestamp from the injected
+        ``clock=``, stamped onto every emitted ``SyncEvent.at_s`` so sync
+        timelines stay deterministic under a fake clock."""
         for sid, req, _ in pending:
             s = self._sessions[sid]
             for ev in s.sync.on_frame(req.t, charging=req.charging,
-                                      bandwidth_mbps=req.bandwidth_mbps):
+                                      bandwidth_mbps=req.bandwidth_mbps,
+                                      now=now):
                 self._sync_bytes += ev.bytes
                 self._sync_events += 1
 
-    def _ingest(self, pending, results):
+    def _ingest(self, pending, results, now=0.0):
         """The PR-3 composite ingest (``overlap=False`` only): reassemble
         the per-dispatch device slices into submission order, insert,
         then run lazy-sync accounting."""
@@ -438,9 +593,21 @@ class StreamSplitGateway:
         else:
             zs = np.stack([r.z for r in results])
         self._ingest_fleet(pending, zs)
-        self._sync_accounting(pending)
+        self._sync_accounting(pending, now=now)
 
     # -- observability -------------------------------------------------------
+    @property
+    def clock(self):
+        """The injected timing source (``clock=``) — the serving runtime
+        defaults to it so one fake clock drives the whole stack."""
+        return self._clock
+
+    @property
+    def ticks(self) -> int:
+        """Collected-tick count (a launched-but-uncollected ``TickPlan``
+        is not a tick yet)."""
+        return self._ticks
+
     def stats(self) -> GatewayStats:
         return GatewayStats(
             ticks=self._ticks, frames=self._frames,

@@ -138,10 +138,48 @@ class GatewayStats:
     staged_h2d_bytes: int = 0  # cumulative mel bytes staged host->device
     # deterministic under an injected clock= (see StreamSplitGateway)
     uptime_s: float = 0.0      # clock() - clock() at construction
-    last_tick_ms: float = 0.0  # wall-clock of the most recent tick()
+    # wall-clock of the most recent tick, launch -> collect.  Under the
+    # streaming runtime's cross-tick pipelining this span deliberately
+    # INCLUDES the next tick's interleaved staging/launch — it is the
+    # tick's in-flight lifetime, not its exclusive compute cost.
+    last_tick_ms: float = 0.0
 
     @property
     def frames_per_dispatch(self) -> float:
         """The batching win: 1.0 is the per-frame loop; N/buckets when
         k-bucketing collapses a tick into few dispatches."""
         return self.frames / self.dispatches if self.dispatches else 0.0
+
+
+@dataclass(frozen=True)
+class StreamStats:
+    """Point-in-time scoreboard of the streaming serving runtime
+    (``repro.serving.StreamServer``; docs/STREAMING.md).
+
+    Every per-class dict is keyed by the ``QoSClass.value`` strings
+    (``"interactive"``/``"standard"``/``"bulk"``) so the whole snapshot
+    is JSON-serializable as-is (``benchmarks/stream_serve.py`` writes
+    it).  Conservation is an invariant, not a hope: per class,
+    ``frames_submitted == frames_served + queue_depth + in_flight`` at
+    every snapshot, and ``preempted == requeued`` always — a preempted
+    frame goes back to the front of its queue, it is never dropped
+    silently.  Frames refused at submit (bounded queue full) raise the
+    typed ``serving.QueueFullError`` and count in ``rejected_full``
+    WITHOUT entering ``frames_submitted``.
+    """
+
+    running: bool              # serving thread alive right now
+    ticks: int                 # ticks the runtime has collected
+    pipelined_ticks: int       # launched while the previous tick's chains
+    #                            were still in flight (cross-tick overlap)
+    frames_submitted: dict     # class -> frames accepted into the queues
+    frames_served: dict        # class -> frames delivered as FrameResults
+    queue_depth: dict          # class -> frames waiting (queued + staged)
+    in_flight: dict            # class -> frames launched, not yet collected
+    rejected_full: dict        # class -> bounded-queue refusals at submit
+    preempted: dict            # class -> frames bumped from a staged tick
+    requeued: dict             # class -> preempted frames put back (== preempted)
+    deadline_misses: dict      # class -> frames admitted past their deadline
+    queue_wait_ms: dict        # class -> {"p50","p95","mean","max"} wait
+    #                            between submit and tick admission
+    gateway: GatewayStats      # the dispatch-plane scoreboard underneath

@@ -32,10 +32,19 @@ device array and hands the submission-ordered dispatch embeddings to
 ``insert_batch`` as a ``jax.Array``: on the sharded backend the payload
 flows dispatch → rings entirely on device (``ingest_h2d_bytes`` stays 0;
 the zero-copy volume is measured in ``ingest_d2d_bytes``).
+
+Both backends are **thread-safe by contract**: every state transition
+(admit/evict/insert/refine/snapshot) holds one re-entrant lock, because
+the streaming runtime (``serving/server.py``) ingests from a background
+serving thread while clients open/close sessions from their own.  The
+sharded backend additionally places admissions **least-loaded** across
+the session mesh (ROADMAP: per-shard load balancing) — see
+``ShardedFleetBackend.admit``.
 """
 from __future__ import annotations
 
 import abc
+import threading
 from functools import partial
 
 import jax
@@ -80,6 +89,14 @@ class FleetBackend(abc.ABC):
     snapshot_h2d_bytes: int = 0
     ingest_h2d_bytes: int = 0
     ingest_d2d_bytes: int = 0
+
+    def __init__(self):
+        # Ingest is thread-safe by contract: the streaming runtime
+        # (``serving/server.py``) drives admit/insert/refine from its
+        # serving thread while clients open/close sessions from their
+        # own — every state transition in a concrete backend holds this
+        # re-entrant lock.
+        self._lock = threading.RLock()
 
     # -- session lifecycle ---------------------------------------------------
     @property
@@ -138,6 +155,7 @@ class HostFleetBackend(FleetBackend):
     def __init__(self, *, capacity=32, window=100, dim=128, head_init=None,
                  head_apply=None, cfg: HybridCfg = HybridCfg(), lr=1e-2,
                  seed=0, n_components=0, memory_decay=0.05):
+        super().__init__()
         if n_components and head_init is None:
             raise ValueError("fleet memory (n_components) updates ride the "
                              "refine round: pass head_init/head_apply too")
@@ -170,35 +188,43 @@ class HostFleetBackend(FleetBackend):
         return self.buffer.active
 
     def admit(self):
-        return self.buffer.admit()
+        with self._lock:
+            return self.buffer.admit()
 
     def evict(self, sid):
-        self.buffer.evict(sid)
+        with self._lock:
+            self.buffer.evict(sid)
 
     def insert(self, sid, t, z, label=-1):
-        self.buffer.insert(sid, t, z, label=label)
+        with self._lock:
+            self.buffer.insert(sid, t, z, label=label)
 
     def insert_batch(self, sids, ts, zs, labels=None):
-        self.buffer.insert_batch(sids, ts, zs, labels)
+        with self._lock:
+            self.buffer.insert_batch(sids, ts, zs, labels)
 
     def fill_fraction(self, sid):
-        return self.buffer.fill_fraction(sid)
+        with self._lock:
+            return self.buffer.fill_fraction(sid)
 
     def snapshot(self):
-        return self.buffer.snapshot()
+        with self._lock:
+            return self.buffer.snapshot()
 
     def refine(self, key):
         if self.refiner is None:
             raise RuntimeError("backend built without a head: no refiner")
-        z, mask, labels = self.buffer.snapshot()
-        self.snapshot_h2d_bytes += (z.nbytes + mask.nbytes + labels.nbytes
-                                    + self.buffer.active.nbytes)
-        out = self.refiner.refine_arrays(key, z, mask, labels,
-                                         self.buffer.active)
-        if self.memory is not None:
-            self.memory = self._em(self.memory, z.reshape(-1, self.dim),
-                                   weights=mask.reshape(-1))
-        return out
+        with self._lock:
+            z, mask, labels = self.buffer.snapshot()
+            self.snapshot_h2d_bytes += (z.nbytes + mask.nbytes
+                                        + labels.nbytes
+                                        + self.buffer.active.nbytes)
+            out = self.refiner.refine_arrays(key, z, mask, labels,
+                                             self.buffer.active)
+            if self.memory is not None:
+                self.memory = self._em(self.memory, z.reshape(-1, self.dim),
+                                       weights=mask.reshape(-1))
+            return out
 
 
 def _snapshot_rows(z, t, label, newest, active, *, window):
@@ -230,6 +256,15 @@ class ShardedFleetBackend(FleetBackend):
     pmean of loss/parts/grads, optional psum'd distributional-memory
     update — and only scalars + the (N,) per-session losses ever leave
     the device.
+
+    Admission is **least-loaded**: each shard owns a contiguous block of
+    rows (``shards_of``), and ``admit`` places the new session on the
+    shard with the fewest active sessions (ties break to the lowest
+    shard index; within a shard rows hand out lowest-first, exactly the
+    host free-list order).  A fleet that fills and drains therefore
+    keeps its refine work balanced across the mesh instead of stacking
+    every live session on shard 0 (ROADMAP: per-shard load balancing of
+    admissions; pinned in ``tests/test_fleet_backend.py``).
     """
 
     kind = "sharded"
@@ -240,6 +275,7 @@ class ShardedFleetBackend(FleetBackend):
                  seed=0, n_components=0, memory_decay=0.05, mesh=None,
                  axis=SESSIONS_AXIS):
         from repro.compat import shard_map
+        super().__init__()
         if n_components and head_init is None:
             raise ValueError("fleet memory (n_components) updates ride the "
                              "refine round: pass head_init/head_apply too")
@@ -260,10 +296,16 @@ class ShardedFleetBackend(FleetBackend):
         self.label = put(jnp.full((capacity, window), -1, jnp.int32))
         self.newest = put(jnp.full((capacity,), -1, jnp.int32))
         self.active_dev = put(jnp.zeros((capacity,), jnp.float32))
-        # host-side admission bookkeeping (mirrors FleetBuffer's free-list)
+        # host-side admission bookkeeping: one free-list PER SHARD (each
+        # a lowest-row-first stack like FleetBuffer's) + per-shard active
+        # counts, so admit can place least-loaded across the mesh
         self._active = np.zeros((capacity,), bool)
         self._dirty = np.zeros((capacity,), bool)
-        self._free = list(range(capacity - 1, -1, -1))
+        rows = capacity // self.shards
+        self._free_by_shard = [
+            list(range((s + 1) * rows - 1, s * rows - 1, -1))
+            for s in range(self.shards)]
+        self._shard_active = [0] * self.shards
         self.snapshot_h2d_bytes = 0
         self.ingest_h2d_bytes = 0
         self.ingest_d2d_bytes = 0
@@ -367,29 +409,40 @@ class ShardedFleetBackend(FleetBackend):
         return self._active
 
     def admit(self):
-        if not self._free:
-            raise FleetFullError(f"all {self.capacity} session rows in use")
-        sid = self._free.pop()
-        if self._dirty[sid]:   # deferred O(W·d) wipe, on device
-            (self.z, self.t, self.label, self.newest,
-             self.active_dev) = self._wipe_fn(
-                self.z, self.t, self.label, self.newest, self.active_dev,
-                jnp.int32(sid))
-            self._dirty[sid] = False
-        else:
-            self.active_dev = self._set_active_fn(
-                self.active_dev, jnp.int32(sid), jnp.float32(1.0))
-        self._active[sid] = True
-        return sid
+        """Least-loaded placement: the new session lands on the shard
+        with the fewest active sessions (ties -> lowest shard index)."""
+        with self._lock:
+            ranked = [(self._shard_active[s], s)
+                      for s in range(self.shards) if self._free_by_shard[s]]
+            if not ranked:
+                raise FleetFullError(
+                    f"all {self.capacity} session rows in use")
+            _, shard = min(ranked)
+            sid = self._free_by_shard[shard].pop()
+            self._shard_active[shard] += 1
+            if self._dirty[sid]:   # deferred O(W·d) wipe, on device
+                (self.z, self.t, self.label, self.newest,
+                 self.active_dev) = self._wipe_fn(
+                    self.z, self.t, self.label, self.newest, self.active_dev,
+                    jnp.int32(sid))
+                self._dirty[sid] = False
+            else:
+                self.active_dev = self._set_active_fn(
+                    self.active_dev, jnp.int32(sid), jnp.float32(1.0))
+            self._active[sid] = True
+            return sid
 
     def evict(self, sid):
-        if not self._active[sid]:
-            raise KeyError(f"session {sid} is not active")
-        self._active[sid] = False
-        self._dirty[sid] = True
-        self._free.append(sid)
-        self.active_dev = self._set_active_fn(
-            self.active_dev, jnp.int32(sid), jnp.float32(0.0))
+        with self._lock:
+            if not self._active[sid]:
+                raise KeyError(f"session {sid} is not active")
+            self._active[sid] = False
+            self._dirty[sid] = True
+            shard = self.shard_of(sid)
+            self._free_by_shard[shard].append(sid)
+            self._shard_active[shard] -= 1
+            self.active_dev = self._set_active_fn(
+                self.active_dev, jnp.int32(sid), jnp.float32(0.0))
 
     # -- ingest --------------------------------------------------------------
     def insert(self, sid, t, z, label=-1):
@@ -407,6 +460,10 @@ class ShardedFleetBackend(FleetBackend):
         identical values — a well-defined scatter).  Caller-supplied
         duplicate (sid, slot) pairs are folded to numpy's last-wins
         semantics before the scatter, keeping the host-backend parity."""
+        with self._lock:
+            self._insert_batch_locked(sids, ts, zs, labels)
+
+    def _insert_batch_locked(self, sids, ts, zs, labels):
         sids = as_host(sids, np.int64)
         ts = as_host(ts, np.int64)
         if not self._active[sids].all():
@@ -464,14 +521,15 @@ class ShardedFleetBackend(FleetBackend):
             ts32, jnp.asarray(zs, jnp.float32), labels32, ts_newest)
 
     def fill_fraction(self, sid):
-        if not self._active[sid]:
-            return 0.0
-        newest = int(self.newest[sid])
-        if newest < 0:
-            return 0.0
-        order = np.arange(newest - self.window + 1, newest + 1)
-        t_row = np.asarray(self.t[sid])
-        return float((t_row[order % self.window] == order).mean())
+        with self._lock:
+            if not self._active[sid]:
+                return 0.0
+            newest = int(self.newest[sid])
+            if newest < 0:
+                return 0.0
+            order = np.arange(newest - self.window + 1, newest + 1)
+            t_row = np.asarray(self.t[sid])
+            return float((t_row[order % self.window] == order).mean())
 
     # -- refinement ----------------------------------------------------------
     def refine(self, key):
@@ -481,25 +539,27 @@ class ShardedFleetBackend(FleetBackend):
         """
         if self.refiner is None:
             raise RuntimeError("backend built without a head: no refiner")
-        args = (self.refiner.state.params,)
-        if self.memory is not None:
-            args += (self.memory,)
-        out = self._refine_step(*args, key, self.z, self.t, self.label,
-                                self.newest, self.active_dev)
-        if self.memory is not None:
-            loss, parts, losses, grads, self.memory = out
-        else:
-            loss, parts, losses, grads = out
-        self.refiner.apply_grads(grads)
-        return (float(loss), {k: float(v) for k, v in parts.items()},
-                np.asarray(losses))
+        with self._lock:
+            args = (self.refiner.state.params,)
+            if self.memory is not None:
+                args += (self.memory,)
+            out = self._refine_step(*args, key, self.z, self.t, self.label,
+                                    self.newest, self.active_dev)
+            if self.memory is not None:
+                loss, parts, losses, grads, self.memory = out
+            else:
+                loss, parts, losses, grads = out
+            self.refiner.apply_grads(grads)
+            return (float(loss), {k: float(v) for k, v in parts.items()},
+                    np.asarray(losses))
 
     # -- observability -------------------------------------------------------
     def snapshot(self):
         """Host copy of the fleet view (observability / compat — NOT the
         refine path, which reads the device rings in place)."""
-        z, mask, labels = self._snapshot_fn(self.z, self.t, self.label,
-                                            self.newest, self.active_dev)
+        with self._lock:
+            z, mask, labels = self._snapshot_fn(self.z, self.t, self.label,
+                                                self.newest, self.active_dev)
         return (np.asarray(z), np.asarray(mask),
                 np.asarray(labels, np.int64))
 

@@ -26,6 +26,11 @@ class SyncEvent:
     frame: int
     bytes: int
     energy_j: float
+    # wall-clock of the emitting tick, from the CALLER's clock (the
+    # gateway threads its injectable ``clock=`` through ``on_frame``'s
+    # ``now=`` so sync timelines are deterministic under a fake clock —
+    # 0.0 when the caller tracks frames only)
+    at_s: float = 0.0
 
 
 class LazySync:
@@ -37,20 +42,22 @@ class LazySync:
         self.total_energy_j = 0.0
         self.events: list[SyncEvent] = []
 
-    def on_frame(self, frame, *, charging=False, bandwidth_mbps=0.0):
+    def on_frame(self, frame, *, charging=False, bandwidth_mbps=0.0,
+                 now=0.0):
         out = []
         if frame - self.last_gmm >= self.cfg.t_sync_frames:
-            out.append(self._emit("gmm", frame, self.cfg.gmm_bytes))
+            out.append(self._emit("gmm", frame, self.cfg.gmm_bytes, now))
             self.last_gmm = frame
         if ((charging or bandwidth_mbps >= self.cfg.wifi_mbps_threshold)
                 and frame - self.last_weights >= self.cfg.t_weights_min_frames):
-            out.append(self._emit("weights", frame, self.cfg.encoder_bytes))
+            out.append(self._emit("weights", frame, self.cfg.encoder_bytes,
+                                  now))
             self.last_weights = frame
         return out
 
-    def _emit(self, kind, frame, nbytes):
+    def _emit(self, kind, frame, nbytes, now=0.0):
         e = SyncEvent(kind, frame, nbytes,
-                      nbytes * self.cfg.joules_per_byte_down)
+                      nbytes * self.cfg.joules_per_byte_down, at_s=now)
         self.total_bytes += nbytes
         self.total_energy_j += e.energy_j
         self.events.append(e)

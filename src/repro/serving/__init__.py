@@ -1,0 +1,30 @@
+"""Streaming serving runtime: continuous audio in, ticked batches out.
+
+    from repro.serving import StreamServer, SchedulerCfg
+
+    server = StreamServer(gateway, cfg=SchedulerCfg(max_batch=64))
+    with server:                         # starts the serving thread
+        info = server.open_session(qos=QoSClass.INTERACTIVE)
+        server.submit(info.sid, FrameRequest(t=0, mel=mel))
+        ...
+        server.close_session(info.sid)   # drains, then evicts
+
+The subsystem (docs/STREAMING.md): bounded per-QoS-class ingest queues
+(``queues``), a deadline-aware preempting tick scheduler
+(``scheduler``), and the always-on ``StreamServer`` (``server``) that
+pipelines tick t+1's staging under tick t's in-flight device chains via
+the gateway's ``tick_launch``/``tick_collect`` seam.
+"""
+from repro.api.types import StreamStats
+from repro.serving.queues import ClassQueue, QoSQueues, QueuedFrame, \
+    QueueFullError
+from repro.serving.scheduler import (DEADLINE_MS, PRIORITY, SchedulerCfg,
+                                     TickScheduler)
+from repro.serving.server import StreamServer
+
+__all__ = [
+    "StreamServer",
+    "TickScheduler", "SchedulerCfg", "DEADLINE_MS", "PRIORITY",
+    "QoSQueues", "ClassQueue", "QueuedFrame", "QueueFullError",
+    "StreamStats",
+]

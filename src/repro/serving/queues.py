@@ -1,0 +1,140 @@
+"""Bounded per-QoS-class ingest queues of the streaming runtime.
+
+Clients (any thread) ``submit`` frames into one of three bounded FIFO
+queues — ``INTERACTIVE`` / ``STANDARD`` / ``BULK`` — and the serving
+thread drains them tick by tick through the ``TickScheduler``
+(``serving/scheduler.py``).  Design rules:
+
+- **Bounded, never silently lossy.**  A full class queue refuses the
+  frame with the typed ``QueueFullError`` (backpressure to the caller)
+  and counts the refusal; an accepted frame can only leave the system
+  as a served ``FrameResult``.  Preempted frames re-enter at the FRONT
+  of their queue with their original deadline.
+- **Deterministic.**  No internal clock: every timestamp
+  (``QueuedFrame.enq_s`` / ``deadline_s``) comes from the caller, so a
+  fake clock reproduces every queue-wait and deadline decision exactly
+  (``tests/test_serving.py``).
+- **One lock for all three queues.**  ``QoSQueues.cond`` is a single
+  condition variable shared by every class, so the serving thread can
+  sleep on "any frame arrived" and ``submit`` wakes it with one notify.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+
+from repro.api.types import FrameRequest, QoSClass
+
+
+class QueueFullError(RuntimeError):
+    """Typed backpressure signal of ``QoSQueues.submit``: the class
+    queue is at capacity.  The frame was NOT enqueued — the caller owns
+    the retry/shed decision, and the refusal is counted
+    (``StreamStats.rejected_full``), never silent."""
+
+    def __init__(self, qos: QoSClass, depth: int, maxlen: int):
+        self.qos = qos
+        self.depth = depth
+        self.maxlen = maxlen
+        super().__init__(
+            f"{qos.value} queue full: {depth}/{maxlen} frames waiting")
+
+
+@dataclass
+class QueuedFrame:
+    """One frame waiting for (or staged toward) admission into a tick."""
+
+    sid: int
+    frame: FrameRequest
+    qos: QoSClass
+    seq: int                   # global arrival number (FIFO tiebreak)
+    enq_s: float               # caller clock at submit
+    deadline_s: float          # enq_s + the class deadline budget
+    preemptions: int = 0       # times bumped out of a staged tick
+
+
+@dataclass
+class ClassQueue:
+    """One bounded FIFO plus its conservation counters.  Never locked on
+    its own — the owning ``QoSQueues`` serializes every access."""
+
+    qos: QoSClass
+    maxlen: int
+    q: deque = field(default_factory=deque)
+    submitted: int = 0         # frames accepted (rejections excluded)
+    rejected: int = 0          # QueueFullError refusals
+    preempted: int = 0         # frames bumped from a staged tick ...
+    requeued: int = 0          # ... and put back (always == preempted)
+
+
+class QoSQueues:
+    """The three bounded class queues behind one condition variable.
+
+    ``maxlen`` bounds each class queue (override per class with
+    ``maxlens={QoSClass.BULK: 512, ...}``).  All mutation goes through
+    methods that take ``self.cond``; ``cond`` is also the sleep/wake
+    channel between client threads and the serving thread.
+    """
+
+    def __init__(self, *, maxlen: int = 256, maxlens=None):
+        self.cond = threading.Condition()
+        over = maxlens or {}
+        self.by_class = {q: ClassQueue(q, int(over.get(q, maxlen)))
+                         for q in QoSClass}
+        self._seq = 0
+
+    # -- producer side (any thread) ------------------------------------------
+    def submit(self, sid, frame: FrameRequest, qos: QoSClass, *, now: float,
+               deadline_s: float) -> QueuedFrame:
+        """Enqueue one frame; raises ``QueueFullError`` at capacity."""
+        with self.cond:
+            cq = self.by_class[qos]
+            if len(cq.q) >= cq.maxlen:
+                cq.rejected += 1
+                raise QueueFullError(qos, len(cq.q), cq.maxlen)
+            qf = QueuedFrame(sid=sid, frame=frame, qos=qos, seq=self._seq,
+                             enq_s=now, deadline_s=deadline_s)
+            self._seq += 1
+            cq.q.append(qf)
+            cq.submitted += 1
+            self.cond.notify_all()
+            return qf
+
+    # -- consumer side (serving thread; caller holds ``cond``) ---------------
+    def pop_locked(self, qos: QoSClass) -> QueuedFrame | None:
+        """Oldest waiting frame of the class (FIFO == EDF: every frame
+        of a class carries the same deadline budget), or None."""
+        cq = self.by_class[qos].q
+        return cq.popleft() if cq else None
+
+    def requeue_front_locked(self, qf: QueuedFrame) -> None:
+        """Return a preempted frame to the FRONT of its class queue with
+        its original enqueue time and deadline — conservation: the
+        preemption is counted, the frame is never dropped.  Re-entry is
+        exempt from the maxlen bound (the frame already held a slot)."""
+        cq = self.by_class[qf.qos]
+        qf.preemptions += 1
+        cq.q.appendleft(qf)
+        cq.preempted += 1
+        cq.requeued += 1
+
+    def depth_locked(self, qos: QoSClass) -> int:
+        return len(self.by_class[qos].q)
+
+    def pending_locked(self) -> int:
+        return sum(len(c.q) for c in self.by_class.values())
+
+    # -- observability -------------------------------------------------------
+    def depths(self) -> dict:
+        with self.cond:
+            return {q.value: len(c.q) for q, c in self.by_class.items()}
+
+    def counters(self) -> dict:
+        """{"submitted"/"rejected"/"preempted"/"requeued":
+        {class: count}} — one consistent snapshot."""
+        with self.cond:
+            return {name: {q.value: getattr(c, name)
+                           for q, c in self.by_class.items()}
+                    for name in ("submitted", "rejected", "preempted",
+                                 "requeued")}

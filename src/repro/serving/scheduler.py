@@ -1,0 +1,175 @@
+"""Deadline-aware QoS tick scheduler: who rides the next tick.
+
+The scheduler turns the three class queues into one tick batch in two
+deterministic phases that mirror the runtime's cross-tick pipeline
+(``serving/server.py``):
+
+1. ``stage(queues)`` — while the PREVIOUS tick's device chains are
+   still in flight, reserve up to ``max_batch`` frames by strict class
+   priority (``INTERACTIVE`` → ``STANDARD`` → ``BULK``; FIFO == EDF
+   within a class, since every frame of a class carries the same
+   deadline budget).
+2. ``admit(queues, now)`` — immediately before launch, finalize the
+   batch: first backfill free slots from the queues (same priority
+   order), then run the **preemption pass** — while an
+   ``INTERACTIVE``/``STANDARD`` frame is still waiting and the staged
+   batch holds a ``BULK`` frame, the newest-staged BULK frame is bumped
+   back to the FRONT of its queue (original deadline intact, bump
+   counted) and the waiting frame takes its slot.  Preempted frames
+   re-queue; they are never dropped.
+
+Frames that arrive between ``stage`` and ``admit`` — i.e. during the
+previous tick's sync — are exactly the ones that can trigger a
+preemption: that window is where "tick t+1 staging under tick t's
+chains" meets "latency-sensitive tenants jump the line".
+
+Everything here is pure host-side Python and clock-injected: decisions
+are a function of (queue contents, ``now``) only, so every policy
+property — priority order, deadline monotonicity, preempted-frame
+conservation — is pinned by deterministic fake-clock tests
+(``tests/test_serving.py``).
+
+Wait/deadline accounting happens once per frame, at admission: the
+queue wait is ``now - enq_s`` and a deadline miss is ``now >
+deadline_s`` — both against the caller's injected clock.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.api.types import QoSClass
+from repro.serving.queues import QoSQueues, QueuedFrame
+
+# Default per-class deadline budgets (ms between submit and tick
+# admission).  The INTERACTIVE budget is the paper's ~2 mel-frame
+# interactivity envelope.  BULK is strictly best-effort: under
+# sustained higher-class load >= max_batch it is starved outright (by
+# design — visible as growing queue_depth/max wait, and its deadline
+# misses are only counted when a frame is finally admitted; aging /
+# promotion is an open ROADMAP item).
+DEADLINE_MS = {
+    QoSClass.INTERACTIVE: 50.0,
+    QoSClass.STANDARD: 250.0,
+    QoSClass.BULK: 2000.0,
+}
+
+# Admission order == preemption precedence (first is most privileged).
+PRIORITY = (QoSClass.INTERACTIVE, QoSClass.STANDARD, QoSClass.BULK)
+
+
+@dataclass(frozen=True)
+class SchedulerCfg:
+    """Tick-composition policy knobs (all deterministic)."""
+
+    max_batch: int = 64                  # frames per tick (dispatch width)
+    deadline_ms: dict = field(
+        default_factory=lambda: dict(DEADLINE_MS))
+    preempt_bulk: bool = True            # bump staged BULK for INT/STD
+
+    def deadline_s(self, qos: QoSClass) -> float:
+        return self.deadline_ms[qos] * 1e-3
+
+
+class TickScheduler:
+    """Composes each tick's batch by class priority with deadline
+    accounting and BULK preemption.  Owns the staged (reserved) frames
+    and the admission-side counters; the queues own the
+    submit/reject/requeue side.  Call pattern (serving thread only, with
+    ``queues.cond`` NOT held — the scheduler takes it):
+
+        sched.stage(queues)         # under the in-flight tick
+        ...previous tick syncs; more frames arrive...
+        batch = sched.admit(queues, now)   # backfill + preemption pass
+    """
+
+    def __init__(self, cfg: SchedulerCfg | None = None):
+        # cfg defaults to None, not a shared module-level SchedulerCfg:
+        # the frozen dataclass holds a mutable deadline_ms dict, and a
+        # shared default instance would leak mutations across servers
+        self.cfg = cfg if cfg is not None else SchedulerCfg()
+        self.staged: list[QueuedFrame] = []
+        self.admitted = {q.value: 0 for q in QoSClass}
+        self.deadline_misses = {q.value: 0 for q in QoSClass}
+        # bounded wait-sample rings -> p50/p95 queue wait per class
+        self.waits_ms = {q.value: deque(maxlen=4096) for q in QoSClass}
+
+    # -- phase 1: reserve under the in-flight tick ---------------------------
+    def stage(self, queues: QoSQueues) -> int:
+        """Reserve frames (strict priority, FIFO within class) up to
+        ``max_batch``; returns how many are staged in total.  Takes no
+        clock: every wait/deadline decision is accounted at ``admit``."""
+        with queues.cond:
+            return self._fill_locked(queues)
+
+    def _fill_locked(self, queues) -> int:
+        for qos in PRIORITY:
+            while len(self.staged) < self.cfg.max_batch:
+                qf = queues.pop_locked(qos)
+                if qf is None:
+                    break
+                self.staged.append(qf)
+        return len(self.staged)
+
+    # -- phase 2: finalize at launch -----------------------------------------
+    def admit(self, queues: QoSQueues, now: float) -> list[QueuedFrame]:
+        """Backfill + preemption pass + wait/deadline accounting; clears
+        and returns the staged batch (admission order: class priority)."""
+        with queues.cond:
+            self._fill_locked(queues)
+            if self.cfg.preempt_bulk:
+                self._preempt_locked(queues)
+            batch = sorted(self.staged,
+                           key=lambda f: (PRIORITY.index(f.qos), f.seq))
+            self.staged = []
+        for qf in batch:
+            cls = qf.qos.value
+            self.admitted[cls] += 1
+            self.waits_ms[cls].append((now - qf.enq_s) * 1e3)
+            if now > qf.deadline_s:
+                self.deadline_misses[cls] += 1
+        return batch
+
+    def _preempt_locked(self, queues) -> None:
+        """While a higher-class frame waits and the staged batch holds
+        BULK frames, bump the newest-staged BULK frame (LIFO — least
+        committed) back to the front of its queue and stage the waiting
+        frame in its place."""
+        for qos in (QoSClass.INTERACTIVE, QoSClass.STANDARD):
+            while queues.depth_locked(qos):
+                bulk_at = max(
+                    (i for i, f in enumerate(self.staged)
+                     if f.qos is QoSClass.BULK),
+                    default=None,
+                    key=lambda i: self.staged[i].seq)
+                if bulk_at is None:
+                    return
+                queues.requeue_front_locked(self.staged.pop(bulk_at))
+                self.staged.append(queues.pop_locked(qos))
+
+    # -- observability -------------------------------------------------------
+    def staged_depths(self) -> dict:
+        """Staged (reserved-but-unlaunched) frames per class — counted
+        into ``StreamStats.queue_depth`` so conservation holds at every
+        snapshot."""
+        out = {q.value: 0 for q in QoSClass}
+        for qf in self.staged:
+            out[qf.qos.value] += 1
+        return out
+
+    def wait_percentiles(self) -> dict:
+        """{class: {"p50","p95","mean","max"}} over the retained wait
+        samples (empty classes report zeros)."""
+        out = {}
+        for cls, ring in self.waits_ms.items():
+            if ring:
+                a = np.asarray(ring, np.float64)
+                out[cls] = {"p50": float(np.percentile(a, 50)),
+                            "p95": float(np.percentile(a, 95)),
+                            "mean": float(a.mean()),
+                            "max": float(a.max())}
+            else:
+                out[cls] = {"p50": 0.0, "p95": 0.0, "mean": 0.0, "max": 0.0}
+        return out

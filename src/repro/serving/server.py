@@ -1,0 +1,432 @@
+"""``StreamServer`` — the always-on streaming runtime over the gateway.
+
+The paper's premise is *continuous* ambient audio meeting discrete batch
+compute; this module closes that gap.  Instead of a hand-rolled
+``submit``/``tick`` loop, clients talk to a server that owns:
+
+- a **background serving thread** draining bounded per-QoS-class ingest
+  queues (``serving/queues.py``) — clients ``submit`` from any thread
+  and get backpressure (``QueueFullError``), never silent loss;
+- the **deadline-aware ``TickScheduler``** (``serving/scheduler.py``)
+  composing each tick by class priority, with BULK preemption under
+  load and per-class wait/deadline accounting;
+- **cross-tick pipelining** over the gateway's ``tick_launch`` /
+  ``tick_collect`` seam: tick t+1 is staged H2D and its bucket chains
+  launched while tick t's chains are still in flight, so the dispatch
+  plane never idles between ticks and ``device_syncs_per_tick`` stays 1
+  (double-buffered: at most one collected-pending tick at a time).
+
+Determinism is load-bearing: the serving thread only ever runs
+``step()``, which is also public — tests drive it synchronously with a
+fake clock and get byte-for-byte reproducible schedules, and the
+benchmark replays a recorded schedule through a plain sequential
+gateway to assert the served embeddings are **bit-identical**
+(``benchmarks/stream_serve.py``; docs/STREAMING.md).
+
+One serving-order caveat, by design: when a fleet refine round is due,
+the server drains its pipeline first (collects tick t before launching
+t+1), so refinement sees exactly the frames a sequential gateway would
+have ingested by that tick — pipelining never reorders learning.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import replace
+
+from repro.api.types import (FrameRequest, QoSClass, SessionInfo,
+                             StreamStats)
+from repro.serving.queues import QoSQueues, QueuedFrame  # noqa: F401
+from repro.serving.scheduler import SchedulerCfg, TickScheduler
+
+
+class _ServedSession:
+    """Server-side session record (the gateway keeps its own)."""
+
+    __slots__ = ("sid", "qos", "submitted", "served", "closing", "closed")
+
+    def __init__(self, sid, qos):
+        self.sid = sid
+        self.qos = qos
+        self.submitted = 0       # frames accepted into the queues
+        self.served = 0          # frames delivered as FrameResults
+        self.closing = False     # no new submits; drain then evict
+        self.closed = threading.Event()
+
+
+class StreamServer:
+    """Always-on serving runtime over a ``StreamSplitGateway``.
+
+    Parameters
+    ----------
+    gateway : a ``StreamSplitGateway`` built with ``overlap=True`` (the
+        phased tick is the pipelining seam).  The server owns the
+        gateway once serving starts: all ``submit``/``tick`` traffic
+        must flow through the server.
+    cfg : ``SchedulerCfg`` — tick width, per-class deadline budgets,
+        BULK preemption.
+    queue_maxlen / queue_maxlens : bounded ingest queue capacity
+        (per-class override via ``queue_maxlens``).
+    pipeline : ``False`` degrades to launch+collect back-to-back (no
+        cross-tick overlap) — the measured baseline knob.
+    on_result : optional callable invoked with each ``FrameResult`` on
+        the serving thread (keep it cheap).  With a callback installed
+        results are NOT also buffered — an always-on server must not
+        grow with uptime; without one they accumulate until
+        ``drain_results()``, which the caller is expected to poll.
+    clock : timing source; defaults to the gateway's injected clock so
+        one fake clock drives queue waits, deadlines and tick latency.
+    schedule_keep : how many recent ticks of the admitted schedule to
+        retain for ``schedule()`` replay/debugging (bounded for the
+        same always-on reason).
+    """
+
+    def __init__(self, gateway, *, cfg: SchedulerCfg | None = None,
+                 queue_maxlen: int = 256, queue_maxlens=None,
+                 pipeline: bool = True, on_result=None, clock=None,
+                 schedule_keep: int = 4096):
+        if not gateway.overlap:
+            raise ValueError(
+                "StreamServer pipelines tick_launch/tick_collect — "
+                "construct the gateway with overlap=True")
+        self.gateway = gateway
+        self.cfg = cfg = cfg if cfg is not None else SchedulerCfg()
+        self.pipeline = pipeline
+        self.queues = QoSQueues(maxlen=queue_maxlen, maxlens=queue_maxlens)
+        self.scheduler = TickScheduler(cfg)
+        self._clock = clock if clock is not None else gateway.clock
+        self._on_result = on_result
+        self._sessions: dict[int, _ServedSession] = {}
+        self._lock = threading.RLock()        # session table + gateway admin
+        # serializes step(): normally only the serving thread runs it,
+        # but close_session's caller-driven fallback (no live thread)
+        # may be entered from several client threads at once
+        self._step_lock = threading.Lock()
+        self._plan = None                     # the in-flight TickPlan
+        self._plan_classes: list[str] = []    # its frames' classes
+        self._results: list = []              # drained by drain_results()
+        # per tick: [(sid, t), ...] — BOUNDED: an always-on server must
+        # not grow host state with uptime, so only the newest
+        # ``schedule_keep`` ticks are retained for replay/debugging
+        self._schedule: deque = deque(maxlen=schedule_keep)
+        self._pipelined_ticks = 0
+        self._ticks = 0
+        self._served = {q.value: 0 for q in QoSClass}
+        # frames admitted out of the queues but not yet delivered —
+        # updated under _lock inside the admit/collect transitions so
+        # the StreamStats conservation invariant holds at every snapshot
+        self._inflight = {q.value: 0 for q in QoSClass}
+        self._thread: threading.Thread | None = None
+        self._stopping = False
+        self._drain_on_stop = True
+        self._closing_n = 0                   # sessions draining to close
+        self._fault: BaseException | None = None   # serving-loop death
+
+    # -- session lifecycle (any thread) --------------------------------------
+    def open_session(self, platform="pi4",
+                     qos: QoSClass = QoSClass.STANDARD) -> SessionInfo:
+        """Admit a session (delegates to the gateway, which may raise
+        the typed ``AdmissionError``)."""
+        with self._lock:
+            info = self.gateway.open_session(platform=platform, qos=qos)
+            self._sessions[info.sid] = _ServedSession(info.sid, qos)
+            return info
+
+    def close_session(self, sid, *, timeout: float | None = 30.0) -> None:
+        """Graceful close: no new submits are accepted, every frame
+        already accepted for the session is still served, then the
+        gateway evicts the row.  Blocks until drained when the serving
+        thread runs (raises ``TimeoutError`` past ``timeout``);
+        otherwise the caller drives ``step()`` to completion."""
+        with self._lock:
+            s = self._require(sid)
+            if not s.closing:       # concurrent closers all wait below
+                s.closing = True
+                self._closing_n += 1
+        with self.queues.cond:
+            self.queues.cond.notify_all()
+        t = self._thread
+        if threading.current_thread() is t:
+            # called ON the serving thread (e.g. from an on_result
+            # callback): waiting would self-deadlock — the close is
+            # marked and _process_closes completes it this same loop
+            return
+        if t is not None and t.is_alive():
+            if not s.closed.wait(timeout):
+                self._check_fault()    # the real cause, if the loop died
+                raise TimeoutError(f"session {sid} did not drain in "
+                                   f"{timeout}s")
+        else:
+            while not s.closed.is_set():
+                self._check_fault()
+                self.step()
+
+    def _require(self, sid) -> _ServedSession:
+        s = self._sessions.get(sid)
+        if s is None:
+            raise KeyError(f"session {sid} is not open")
+        return s
+
+    def _check_fault(self) -> None:
+        """Re-raise a serving-loop death at the caller: producers and
+        waiters must fail fast, not hang on a server that will never
+        serve again (the original traceback was already printed)."""
+        if self._fault is not None:
+            raise RuntimeError(
+                "serving loop died mid-run") from self._fault
+
+    # -- ingest (any thread) -------------------------------------------------
+    def submit(self, sid, frame: FrameRequest) -> None:
+        """Enqueue one frame.  Validates + converts the mel HERE (on the
+        client's thread) so the serving thread never pays conversion;
+        raises ``QueueFullError`` when the session's class queue is at
+        capacity and ``KeyError`` once the session is closing."""
+        self._check_fault()
+        with self._lock:
+            s = self._require(sid)
+            if s.closing:
+                raise KeyError(f"session {sid} is closing")
+        mel = self.gateway.validate_mel(frame.mel)   # the one validation
+        if mel is not frame.mel:
+            frame = replace(frame, mel=mel)
+        # count the frame BEFORE it becomes visible in the queues (and
+        # roll back on refusal): _process_closes compares served ==
+        # submitted, so an enqueued-but-uncounted frame could let a
+        # racing close_session evict the row out from under it
+        with self._lock:
+            if s.closing:
+                raise KeyError(f"session {sid} is closing")
+            s.submitted += 1
+        now = self._clock()
+        try:
+            self.queues.submit(sid, frame, s.qos, now=now,
+                               deadline_s=now + self.cfg.deadline_s(s.qos))
+        except BaseException:
+            with self._lock:
+                s.submitted -= 1
+            raise
+
+    # -- the serving loop ----------------------------------------------------
+    def start(self) -> "StreamServer":
+        """Launch the background serving thread (idempotent)."""
+        if self._thread is not None and self._thread.is_alive():
+            return self
+        self._stopping = False
+        self._thread = threading.Thread(target=self._loop,
+                                        name="streamsplit-serve",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, *, drain: bool = True, timeout: float | None = 60.0):
+        """Stop serving.  ``drain=True`` (default) serves every queued
+        frame first; ``drain=False`` collects only the in-flight tick
+        and leaves the backlog measurable in ``stats().queue_depth``."""
+        self._drain_on_stop = drain
+        self._stopping = True
+        with self.queues.cond:
+            self.queues.cond.notify_all()
+        t = self._thread
+        if t is not None and t is not threading.current_thread():
+            t.join(timeout)
+            if t.is_alive():
+                raise TimeoutError("serving thread did not stop")
+        self._thread = None
+        if self._fault is not None:
+            # the loop died on an exception earlier (already printed
+            # with traceback): surface it loudly at stop time instead
+            # of letting the session end "cleanly"
+            fault, self._fault = self._fault, None
+            raise RuntimeError("serving loop died mid-run") from fault
+        return self
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop(drain=not any(exc))
+
+    def _loop(self):
+        try:
+            while True:
+                with self.queues.cond:
+                    work = (self.queues.pending_locked()
+                            or self.scheduler.staged
+                            or self._plan is not None
+                            or self._closes_pending())
+                    if self._stopping and (not work
+                                           or not self._drain_on_stop):
+                        break
+                    if not work:
+                        self.queues.cond.wait(timeout=0.05)
+                        continue
+                self.step()
+            # never leave a launched tick dangling
+            with self._step_lock:
+                if self._plan is not None:
+                    self._collect()
+                self._process_closes()
+        except BaseException as e:      # noqa: BLE001 — loop boundary
+            # an unhandled serving-loop exception must not vanish with
+            # the daemon thread: print it now, re-raise it at stop()
+            import traceback
+            traceback.print_exc()
+            self._fault = e
+
+    def step(self) -> int:
+        """One serving iteration — public so deterministic tests can
+        drive the exact thread loop synchronously.  Returns the number
+        of frames delivered.
+
+        Order of operations IS the pipeline:
+
+        1. ``admit`` the staged batch (backfill + BULK preemption),
+        2. launch it (``tick_launch``) — while the PREVIOUS tick's
+           chains are still in flight (unless a refine round is due or
+           ``pipeline=False``, in which case the previous tick collects
+           first: learning order always matches the sequential
+           gateway),
+        3. stage the next batch under the fresh chains,
+        4. collect the previous tick and deliver its results,
+        5. process session closes whose frames have fully drained.
+        """
+        with self._step_lock:   # close_session fallbacks may race here
+            return self._step_locked()
+
+    def _step_locked(self) -> int:
+        gw = self.gateway
+        with self.queues.cond:                 # Condition wraps an RLock
+            batch = self.scheduler.admit(self.queues, self._clock())
+            with self._lock:                   # queue -> in-flight, atomic
+                for qf in batch:
+                    self._inflight[qf.qos.value] += 1
+        new_plan = None
+        new_classes: list[str] = []
+        served = 0
+        if batch:
+            if self._plan is not None and (not self.pipeline
+                                           or gw.refine_due_next_tick()):
+                served += self._collect()
+            for qf in batch:
+                # already validated/converted at enqueue (validate_mel
+                # on the client's thread) — skip the re-check here
+                gw.submit_validated(qf.sid, qf.frame)
+                new_classes.append(qf.qos.value)
+            if self._plan is not None:
+                self._pipelined_ticks += 1
+            new_plan = gw.tick_launch()
+        self.scheduler.stage(self.queues)
+        if self._plan is not None:
+            served += self._collect()
+        self._plan, self._plan_classes = new_plan, new_classes
+        self._process_closes()
+        return served
+
+    def _collect(self) -> int:
+        plan, classes = self._plan, self._plan_classes
+        self._plan, self._plan_classes = None, []
+        results = self.gateway.tick_collect(plan)
+        self._ticks += 1
+        with self._lock:
+            self._schedule.append([(r.sid, r.t) for r in results])
+            for r, cls in zip(results, classes):
+                self._served[cls] += 1
+                self._inflight[cls] -= 1
+                s = self._sessions.get(r.sid)
+                if s is not None:
+                    s.served += 1
+            if self._on_result is None:
+                # buffer only when the caller drains: with a callback
+                # installed, delivery happens below and an always-on
+                # server must not accumulate every result forever
+                self._results.extend(results)
+        if self._on_result is not None:
+            for r in results:
+                try:
+                    self._on_result(r)
+                except Exception:       # user code must not kill serving
+                    import traceback
+                    traceback.print_exc()
+        return len(results)
+
+    def _closes_pending(self) -> bool:
+        return self._closing_n > 0            # bare-int read: hot loop
+
+    def _process_closes(self):
+        if not self._closing_n:
+            return
+        with self._lock:
+            done = [s for s in self._sessions.values()
+                    if s.closing and not s.closed.is_set()
+                    and s.served == s.submitted
+                    and not self._in_pipeline(s.sid)]
+            for s in done:
+                self.gateway.close_session(s.sid)
+                del self._sessions[s.sid]
+                self._closing_n -= 1
+                s.closed.set()
+
+    def _in_pipeline(self, sid) -> bool:
+        if self._plan is not None and any(
+                p[0] == sid for p in self._plan.pending):
+            return True
+        return any(qf.sid == sid for qf in self.scheduler.staged)
+
+    # -- results + observability ---------------------------------------------
+    @property
+    def served_total(self) -> int:
+        """Frames delivered so far — a bare counter, cheap enough to
+        poll from a hot loop (``stats()`` builds percentiles; don't spin
+        on it).  Raises if the serving loop died, so progress pollers
+        fail fast instead of spinning forever."""
+        self._check_fault()
+        return sum(self._served.values())
+
+    def drain_results(self) -> list:
+        """All ``FrameResult``s delivered since the last drain."""
+        self._check_fault()
+        with self._lock:
+            out, self._results = self._results, []
+        return out
+
+    def schedule(self) -> list[list[tuple]]:
+        """The admitted schedule (newest ``schedule_keep`` ticks): per
+        collected tick, the served ``(sid, t)`` pairs in submission
+        order.  Replaying it through a sequential gateway reproduces
+        every embedding bit-for-bit (``benchmarks/stream_serve.py``
+        asserts this)."""
+        with self._lock:       # _collect appends under the same lock
+            return [list(t) for t in self._schedule]
+
+    def stats(self) -> StreamStats:
+        # one consistent snapshot: queue/staged state and the
+        # served/in-flight counters are read under the same lock pair
+        # (cond -> _lock, the loop's nesting order) that every frame
+        # transition mutates them under, so the conservation invariant
+        # documented on StreamStats holds at EVERY snapshot
+        with self.queues.cond:
+            qc = self.queues.counters()
+            depth = self.queues.depths()
+            staged = self.scheduler.staged_depths()
+            # admission accounting (wait samples, deadline misses) is
+            # written while step() holds the cond — read it there too
+            misses = dict(self.scheduler.deadline_misses)
+            waits = self.scheduler.wait_percentiles()
+            with self._lock:
+                served = dict(self._served)
+                in_flight = dict(self._inflight)
+        t = self._thread
+        return StreamStats(
+            running=t is not None and t.is_alive(),
+            ticks=self._ticks,
+            pipelined_ticks=self._pipelined_ticks,
+            frames_submitted=qc["submitted"],
+            frames_served=served,
+            queue_depth={c: depth[c] + staged[c] for c in depth},
+            in_flight=in_flight,
+            rejected_full=qc["rejected"],
+            preempted=qc["preempted"],
+            requeued=qc["requeued"],
+            deadline_misses=misses,
+            queue_wait_ms=waits,
+            gateway=self.gateway.stats())

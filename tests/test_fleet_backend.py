@@ -305,17 +305,27 @@ def build(cls):
             head_apply=head_apply, lr=0.1, seed=0, n_components=6)
     rng = np.random.default_rng(0)
     sids = [b.admit() for _ in range(7)]   # uneven active count per shard
+    # drops/draws keyed by ADMISSION index, not row id: the sharded
+    # backend places least-loaded (session i lands on row i*shards mod
+    # ...), so the i-th admitted session must carry the same frames on
+    # both backends for the pairing below to be meaningful
     for t in range(15):
-        for sid in sids:
-            if (t + sid) % 5 == 2:
+        for i, sid in enumerate(sids):
+            if (t + i) % 5 == 2:
                 continue
             b.insert(sid, t, rng.normal(size=DIM).astype(np.float32),
                      label=t % NC)
     b.evict(sids[2])
-    return b
+    return b, sids
 
-host, shrd = build(HostFleetBackend), build(ShardedFleetBackend)
+(host, sids_h), (shrd, sids_s) = \\
+    build(HostFleetBackend), build(ShardedFleetBackend)
 assert shrd.shards == 4
+# least-loaded placement spread the 7 admissions 2/2/2/1 across shards
+assert sorted(shrd.shards_of(np.array(sids_s)).tolist()) == [0,0,1,1,2,2,3]
+pair = [i for i in range(7) if i != 2]      # admission i -> row sids_*[i]
+rows_h = np.array([sids_h[i] for i in pair])
+rows_s = np.array([sids_s[i] for i in pair])
 for i in range(3):
     key = jax.random.PRNGKey(i)
     loss_h, parts_h, per_h = host.refine(key)
@@ -324,7 +334,10 @@ for i in range(3):
     assert abs(loss_s - loss_h) < 1e-5, (i, loss_h, loss_s)
     for k in parts_h:
         assert abs(parts_s[k] - parts_h[k]) < 1e-5, (i, k)
-    np.testing.assert_allclose(per_s, per_h, atol=1e-5)
+    # per-session losses are row-local (fleet-shared CRN draws), so the
+    # i-th admitted session matches across backends whatever row the
+    # placement chose for it
+    np.testing.assert_allclose(per_s[rows_s], per_h[rows_h], atol=1e-5)
 # pmean'd gradients -> head parity
 for a, b in zip(jax.tree.leaves(host.refiner.state.params),
                 jax.tree.leaves(shrd.refiner.state.params)):
@@ -340,6 +353,41 @@ print("OK")
 
 def test_multi_shard_refine_matches_unsharded_estimator(subproc):
     out = subproc(_MULTI_SHARD_PARITY, devices=4)
+    assert "OK" in out
+
+
+_LEAST_LOADED_PLACEMENT = """
+import jax, numpy as np
+assert len(jax.devices()) == 4
+from repro.core.fleet import FleetFullError, ShardedFleetBackend
+
+b = ShardedFleetBackend(capacity=64, window=4, dim=4)
+assert b.shards == 4
+sids = [b.admit() for _ in range(32)]
+counts = np.bincount(b.shards_of(np.array(sids)), minlength=4)
+# least-loaded placement: 32 admissions land 8/8/8/8, NOT 16/16/0/0
+assert counts.tolist() == [8, 8, 8, 8], counts
+# drain one shard's sessions: the next admissions refill the hole first
+for sid in sids:
+    if b.shard_of(sid) == 2:
+        b.evict(sid)
+refill = [b.admit() for _ in range(8)]
+assert all(b.shard_of(s) == 2 for s in refill), refill
+# fill to capacity, then the typed full error
+for _ in range(64 - b.n_active):
+    b.admit()
+try:
+    b.admit()
+except FleetFullError:
+    print("OK")
+"""
+
+
+def test_least_loaded_shard_placement_on_admit(subproc):
+    """ROADMAP "per-shard load balancing of admissions": a 4-shard fleet
+    spreads admissions across the mesh instead of filling shard 0 first,
+    and refills the emptiest shard after a drain."""
+    out = subproc(_LEAST_LOADED_PLACEMENT, devices=4)
     assert "OK" in out
 
 

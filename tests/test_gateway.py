@@ -206,10 +206,86 @@ def test_async_tick_bit_matches_pr3_sync_path(params):
     assert sa.d2h_copies_per_tick == 1
     assert ss.device_syncs_per_tick == L + 1      # PR-3: one per bucket
     assert ss.d2h_copies_per_tick == L + 1
-    # the whole tick's frames staged as ONE h2d transfer, measured
-    assert sa.staged_h2d_bytes == 2 * n * CFG.frames * CFG.n_mels * 4
+    # the whole tick's frames staged as ONE h2d transfer (pow2-padded so
+    # arbitrary streaming tick sizes don't grow the gather compile
+    # cache), measured
+    from repro.core.fleet import pad_pow2
+    assert sa.staged_h2d_bytes == \
+        2 * pad_pow2(n) * CFG.frames * CFG.n_mels * 4
     assert ss.staged_h2d_bytes == 0               # PR-3 staged per bucket
     assert sa.frames == ss.frames == 2 * n
+
+
+def test_pipelined_phase_ticks_bit_match_sequential(params):
+    """``tick_launch``/``tick_collect`` interleaved across ticks (tick
+    t+1 launched while tick t's chains are in flight — the serving
+    runtime's cross-tick pipeline) serve bit-identical embeddings to the
+    plain ``tick()`` loop, and every collected tick still reports
+    exactly one device sync and one D2H copy."""
+    n = L + 1
+    def mk():
+        return StreamSplitGateway(CFG, params, policy=SpreadPolicy(L),
+                                  capacity=n, window=8, qos_reserve=0)
+
+    gw_p, gw_s = mk(), mk()
+    sids_p = [gw_p.open_session().sid for _ in range(n)]
+    sids_s = [gw_s.open_session().sid for _ in range(n)]
+    rng = np.random.default_rng(13)
+    mels = [[_mel(rng) for _ in range(n)] for _ in range(3)]
+
+    def submit(gw, sids, t):
+        for i, sid in enumerate(sids):
+            gw.submit(sid, FrameRequest(t=t, mel=mels[t][i]))
+
+    # pipelined: two plans in flight before the first collect
+    submit(gw_p, sids_p, 0)
+    plan0 = gw_p.tick_launch()
+    submit(gw_p, sids_p, 1)
+    plan1 = gw_p.tick_launch()
+    res_p = [gw_p.tick_collect(plan0), gw_p.tick_collect(plan1)]
+    assert gw_p.stats().device_syncs_per_tick == 1
+    assert gw_p.stats().d2h_copies_per_tick == 1
+    submit(gw_p, sids_p, 2)
+    res_p.append(gw_p.tick_collect(gw_p.tick_launch()))
+    # sequential reference
+    res_s = []
+    for t in range(3):
+        submit(gw_s, sids_s, t)
+        res_s.append(gw_s.tick())
+    for tick_p, tick_s in zip(res_p, res_s):
+        for rp, rs in zip(tick_p, tick_s):
+            np.testing.assert_array_equal(rp.z, rs.z)
+            assert rp.k == rs.k and rp.t == rs.t
+    sp, ss = gw_p.stats(), gw_s.stats()
+    assert sp.ticks == ss.ticks == 3 and sp.frames == ss.frames == 3 * n
+    assert sp.device_syncs_per_tick == 1 and sp.d2h_copies_per_tick == 1
+    # the fleet rings saw the same launch-order ingest
+    for a, b in zip(gw_p.backend.snapshot(), gw_s.backend.snapshot()):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_tick_launch_requires_overlapped_plane(params):
+    gw = StreamSplitGateway(CFG, params, policy=FixedKPolicy(L, 1),
+                            capacity=2, qos_reserve=0, overlap=False)
+    with pytest.raises(RuntimeError):
+        gw.tick_launch()
+
+
+def test_refine_due_next_tick_predicts_refine(params):
+    head_init, head_apply = _head()
+    gw = StreamSplitGateway(CFG, params, policy=FixedKPolicy(L, 2),
+                            capacity=2, window=8, qos_reserve=0,
+                            head_init=head_init, head_apply=head_apply,
+                            refine_every=2)
+    rng = np.random.default_rng(14)
+    sid = gw.open_session().sid
+    for t in range(4):
+        due = gw.refine_due_next_tick()
+        assert due == (t % 2 == 1)
+        gw.submit(sid, FrameRequest(t=t, mel=_mel(rng), label=0))
+        before = gw.stats().refine_rounds
+        gw.tick()
+        assert gw.stats().refine_rounds == before + (1 if due else 0)
 
 
 def test_profile_tick_restores_per_bucket_timing(params):

@@ -1,0 +1,633 @@
+"""Streaming serving runtime: bounded QoS queues, the deadline-aware
+preempting TickScheduler (pure-Python deterministic — every decision
+pinned with a fake clock), cross-tick pipelined StreamServer bit-parity
+against the sequential gateway, QoS behavior under synthetic overload,
+and a threaded ingest-vs-close stress test with a sequential-replay
+oracle."""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (FrameRequest, QoSClass, StreamSplitGateway,
+                       make_policy)
+from repro.serving import (QoSQueues, QueueFullError, SchedulerCfg,
+                           StreamServer, TickScheduler)
+from repro.models.audio_encoder import AudioEncCfg, init_audio_encoder
+
+# tiny deep-ish encoder: 2 split points -> up to 3 buckets per tick,
+# cheap enough that threaded tests stay fast
+CFG = AudioEncCfg(widths=(8, 8), strides=(1, 1), n_mels=8, frames=8,
+                  d_embed=16, groups=2)
+L = CFG.n_blocks
+I, S, B = QoSClass.INTERACTIVE, QoSClass.STANDARD, QoSClass.BULK
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_audio_encoder(CFG, jax.random.PRNGKey(0))
+
+
+class FakeClock:
+    """Manual clock: tests advance ``t`` explicitly, so every queue
+    wait, deadline decision and SyncEvent timestamp is exact."""
+
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+class QuantilePolicy:
+    """Deterministic frame-content policy: u quantile -> split index.
+    Position-independent, so a replayed schedule reproduces every k."""
+
+    def __init__(self, L):
+        self.L = L
+
+    def decide(self, obs_batch):
+        return np.clip((obs_batch[:, 0] * (self.L + 1)).astype(np.int64),
+                       0, self.L)
+
+
+def _mel(rng):
+    return rng.normal(size=(CFG.frames, CFG.n_mels)).astype(np.float32)
+
+
+def _req(rng, t, u=None):
+    return FrameRequest(t=t, mel=_mel(rng),
+                        u=float(rng.random() if u is None else u))
+
+
+def _gw(params, *, capacity=8, clock=None, policy=None, **kw):
+    return StreamSplitGateway(
+        CFG, params, policy=policy or QuantilePolicy(L), capacity=capacity,
+        window=8, qos_reserve=0,
+        **({"clock": clock} if clock is not None else {}), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Queues: bounded, typed backpressure, conservation counters
+# ---------------------------------------------------------------------------
+
+def test_queue_bounded_rejects_with_typed_error():
+    qs = QoSQueues(maxlen=2)
+    f = FrameRequest(t=0, mel=np.zeros((2, 2), np.float32))
+    qs.submit(0, f, B, now=0.0, deadline_s=1.0)
+    qs.submit(0, f, B, now=0.0, deadline_s=1.0)
+    with pytest.raises(QueueFullError) as ei:
+        qs.submit(0, f, B, now=0.0, deadline_s=1.0)
+    assert ei.value.qos is B and ei.value.maxlen == 2
+    # the refusal is counted; the accepted count is untouched
+    c = qs.counters()
+    assert c["rejected"]["bulk"] == 1 and c["submitted"]["bulk"] == 2
+    # other classes unaffected by a full bulk queue
+    qs.submit(0, f, I, now=0.0, deadline_s=1.0)
+    assert qs.depths() == {"interactive": 1, "standard": 0, "bulk": 2}
+
+
+def test_queue_per_class_maxlen_override():
+    qs = QoSQueues(maxlen=1, maxlens={B: 3})
+    f = FrameRequest(t=0, mel=np.zeros((2, 2), np.float32))
+    for _ in range(3):
+        qs.submit(0, f, B, now=0.0, deadline_s=1.0)
+    qs.submit(0, f, I, now=0.0, deadline_s=1.0)
+    with pytest.raises(QueueFullError):
+        qs.submit(0, f, I, now=0.0, deadline_s=1.0)
+
+
+def test_requeue_front_preserves_identity_and_counts():
+    qs = QoSQueues(maxlen=4)
+    f = FrameRequest(t=0, mel=np.zeros((2, 2), np.float32))
+    a = qs.submit(0, f, B, now=1.0, deadline_s=3.0)
+    qs.submit(1, f, B, now=2.0, deadline_s=4.0)
+    with qs.cond:
+        got = qs.pop_locked(B)
+        assert got is a                      # FIFO
+        qs.requeue_front_locked(got)
+        again = qs.pop_locked(B)
+    assert again is a and again.preemptions == 1
+    assert again.enq_s == 1.0 and again.deadline_s == 3.0   # untouched
+    c = qs.counters()
+    assert c["preempted"]["bulk"] == c["requeued"]["bulk"] == 1
+
+
+# ---------------------------------------------------------------------------
+# TickScheduler: priority, deadline monotonicity, preemption conservation
+# (pure-Python deterministic — seeded sweeps in the repo's property style)
+# ---------------------------------------------------------------------------
+
+def _rand_submits(qs, cfg, rng, now, n, p=None):
+    classes = [I, S, B]
+    out = []
+    for _ in range(n):
+        qos = classes[rng.choice(3, p=p)]
+        try:
+            out.append(qs.submit(int(rng.integers(8)),
+                                 FrameRequest(t=0, mel=np.zeros((1, 1),
+                                                               np.float32)),
+                                 qos, now=now,
+                                 deadline_s=now + cfg.deadline_s(qos)))
+        except QueueFullError:
+            pass
+    return out
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_scheduler_priority_and_deadline_monotonicity(seed):
+    """No admitted BULK frame while a higher-class frame still waits;
+    within a class, admission follows nondecreasing deadlines (EDF ==
+    FIFO under a per-class budget) both inside a batch and across
+    successive ticks."""
+    rng = np.random.default_rng(seed)
+    cfg = SchedulerCfg(max_batch=4)
+    qs, sched = QoSQueues(maxlen=64), TickScheduler(cfg)
+    now, last_deadline = 0.0, {q: -np.inf for q in QoSClass}
+    for _ in range(12):
+        _rand_submits(qs, cfg, rng, now, int(rng.integers(0, 9)))
+        if rng.random() < 0.5:              # sometimes stage early
+            sched.stage(qs)
+            now += 0.01
+            _rand_submits(qs, cfg, rng, now, int(rng.integers(0, 5)))
+        batch = sched.admit(qs, now)
+        assert len(batch) <= cfg.max_batch
+        if any(f.qos is B for f in batch):
+            # the preemption pass emptied every higher-class queue first
+            assert qs.depths()["interactive"] == 0
+            assert qs.depths()["standard"] == 0
+        seen = {q: -np.inf for q in QoSClass}
+        for f in batch:
+            assert f.deadline_s >= seen[f.qos], "EDF order inside a tick"
+            seen[f.qos] = f.deadline_s
+        for q in QoSClass:
+            if seen[q] > -np.inf:
+                assert seen[q] >= last_deadline[q], "EDF order across ticks"
+                last_deadline[q] = seen[q]
+        now += 0.02
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_scheduler_preemption_conserves_frames(seed):
+    """Under random overload every accepted frame is admitted exactly
+    once or still queued/staged: re-queued frames are re-served, never
+    dropped, and ``preempted == requeued`` throughout."""
+    rng = np.random.default_rng(100 + seed)
+    cfg = SchedulerCfg(max_batch=3)
+    qs, sched = QoSQueues(maxlen=64), TickScheduler(cfg)
+    admitted, accepted, now = [], 0, 0.0
+    for _ in range(20):
+        # arrivals before staging skew BULK; arrivals in the
+        # stage->admit window skew INTERACTIVE — the preempting mix
+        accepted += len(_rand_submits(qs, cfg, rng, now,
+                                      int(rng.integers(0, 7)),
+                                      p=[0.15, 0.15, 0.7]))
+        sched.stage(qs)
+        accepted += len(_rand_submits(qs, cfg, rng, now + 0.01,
+                                      int(rng.integers(0, 4)),
+                                      p=[0.7, 0.15, 0.15]))
+        admitted.extend(sched.admit(qs, now + 0.02))
+        c = qs.counters()
+        assert c["preempted"] == c["requeued"]
+        with qs.cond:
+            waiting = qs.pending_locked()
+        assert len(admitted) + waiting + len(sched.staged) == accepted
+        now += 0.05
+    # drain completely: conservation must close the books
+    for _ in range(64):
+        admitted.extend(sched.admit(qs, now))
+    assert len(admitted) == accepted
+    assert len({id(f) for f in admitted}) == accepted   # no double-serve
+    c = qs.counters()
+    assert sum(c["preempted"].values()) > 0, "overload must preempt"
+    assert all(v == 0 for v in c["preempted"].values()
+               if v != c["preempted"]["bulk"]), "only BULK is preemptible"
+
+
+def test_scheduler_preempts_staged_bulk_for_interactive():
+    """The pipelining window, explicitly: BULK frames staged under the
+    in-flight tick get bumped (to the FRONT of their queue, deadlines
+    intact) when INTERACTIVE frames arrive before launch."""
+    cfg = SchedulerCfg(max_batch=2)
+    qs, sched = QoSQueues(maxlen=8), TickScheduler(cfg)
+    f = FrameRequest(t=0, mel=np.zeros((1, 1), np.float32))
+    b1 = qs.submit(0, f, B, now=0.0, deadline_s=2.0)
+    b2 = qs.submit(1, f, B, now=0.0, deadline_s=2.0)
+    assert sched.stage(qs) == 2        # tick t in flight, both staged
+    i1 = qs.submit(2, f, I, now=0.1, deadline_s=0.15)
+    batch = sched.admit(qs, 0.2)
+    assert batch == [i1, b1]                # newest-staged BULK was bumped
+    assert b2.preemptions == 1
+    c = qs.counters()
+    assert c["preempted"]["bulk"] == 1 and c["requeued"]["bulk"] == 1
+    assert sched.admit(qs, 0.3) == [b2]     # ... and served next tick
+    misses = sched.deadline_misses
+    assert misses["interactive"] == 1       # 0.2 > 0.15: counted at admit
+    assert misses["bulk"] == 0
+
+
+def test_scheduler_no_preemption_when_disabled():
+    cfg = SchedulerCfg(max_batch=1, preempt_bulk=False)
+    qs, sched = QoSQueues(maxlen=8), TickScheduler(cfg)
+    f = FrameRequest(t=0, mel=np.zeros((1, 1), np.float32))
+    b = qs.submit(0, f, B, now=0.0, deadline_s=9.0)
+    sched.stage(qs)
+    qs.submit(1, f, I, now=0.0, deadline_s=1.0)
+    assert sched.admit(qs, 0.0) == [b]
+    assert qs.counters()["preempted"]["bulk"] == 0
+
+
+# ---------------------------------------------------------------------------
+# StreamServer (stepped, fake clock): parity, pipelining, QoS overload
+# ---------------------------------------------------------------------------
+
+def _server(params, *, capacity=8, max_batch=8, clock=None, refine=0,
+            deadline_ms=None, queue_maxlen=256, head=None, **gw_kw):
+    kw = dict(refine_every=refine, **gw_kw)
+    if head:
+        kw.update(head_init=head[0], head_apply=head[1])
+    gw = _gw(params, capacity=capacity, clock=clock, **kw)
+    cfg = SchedulerCfg(max_batch=max_batch,
+                       **({"deadline_ms": deadline_ms} if deadline_ms
+                          else {}))
+    return StreamServer(gw, cfg=cfg, queue_maxlen=queue_maxlen)
+
+
+def test_server_pipelined_serving_bit_matches_sequential_gateway(params):
+    """THE parity contract: replaying the server's admitted schedule
+    through a plain sequential ``submit``/``tick`` gateway reproduces
+    every embedding bit-for-bit — and the pipelined server really did
+    overlap ticks (``pipelined_ticks`` > 0, one device sync per tick)."""
+    rng = np.random.default_rng(0)
+    srv = _server(params, max_batch=6)
+    sids = [srv.open_session(qos=q).sid for q in (I, S, B, S)]
+    frames = {}
+    for t in range(5):
+        for sid in sids:
+            frames[(sid, t)] = _req(rng, t)
+            srv.submit(sid, frames[(sid, t)])
+        srv.step()
+    while srv.stats().frames_served != srv.stats().frames_submitted:
+        srv.step()
+    results = {(r.sid, r.t): r for r in srv.drain_results()}
+    st = srv.stats()
+    assert st.ticks >= 5 and st.pipelined_ticks > 0
+    assert st.gateway.device_syncs_per_tick == 1
+    assert st.gateway.d2h_copies_per_tick == 1
+    # replay the EXACT admitted schedule sequentially
+    gw = _gw(params)
+    replay_sids = [gw.open_session(qos=q).sid for q in (I, S, B, S)]
+    assert replay_sids == sids
+    for tick in srv.schedule():
+        for sid, t in tick:
+            gw.submit(sid, frames[(sid, t)])
+        for r in gw.tick():
+            ref = results[(r.sid, r.t)]
+            np.testing.assert_array_equal(r.z, ref.z)
+            assert r.k == ref.k and r.wire_bytes == ref.wire_bytes
+
+
+def test_server_refine_order_matches_sequential_gateway(params):
+    """Pipelining must not reorder learning: with ``refine_every`` set
+    the server drains its pipeline before a refine tick, so refine
+    rounds and losses are bitwise those of the sequential gateway."""
+    def head_init(key):
+        return {"w": 0.01 * jax.random.normal(key, (CFG.d_embed, 4))}
+
+    def head_apply(p, z):
+        return z @ p["w"]
+
+    rng = np.random.default_rng(1)
+    srv = _server(params, capacity=2, max_batch=4, refine=2,
+                  head=(head_init, head_apply))
+    gw = _gw(params, capacity=2, refine_every=2, head_init=head_init,
+             head_apply=head_apply)
+    ssid = srv.open_session(qos=S).sid
+    gsid = gw.open_session(qos=S).sid
+    assert ssid == gsid
+    for t in range(6):
+        f = _req(rng, t)
+        f = FrameRequest(t=t, mel=f.mel, u=f.u, label=t % 4)
+        srv.submit(ssid, f)
+        srv.step()
+        gw.submit(gsid, f)
+        gw.tick()
+    while srv.stats().ticks < 6:
+        srv.step()
+    ss, gs = srv.stats().gateway, gw.stats()
+    assert ss.refine_rounds == gs.refine_rounds == 3
+    assert ss.last_refine_loss == gs.last_refine_loss   # bitwise
+
+
+def test_server_overload_qos_isolation_and_conservation(params):
+    """Synthetic 2x overload under a fake clock: INTERACTIVE p95 queue
+    wait stays below BULK p50, BULK frames get preempted but conserved
+    (requeued == preempted; submitted == served + depth at quiescence),
+    and BULK deadline misses are counted while INTERACTIVE never
+    misses."""
+    clock = FakeClock()
+    rng = np.random.default_rng(2)
+    srv = _server(params, capacity=8, max_batch=4, clock=clock,
+                  deadline_ms={I: 500.0, S: 500.0, B: 150.0})
+    sids = {I: [srv.open_session(qos=I).sid],
+            S: [srv.open_session(qos=S).sid],
+            B: [srv.open_session(qos=B).sid for _ in range(6)]}
+    # offered load 8 frames/round vs capacity 4/tick = 2x
+    for t in range(10):
+        srv.submit(sids[I][0], _req(rng, t))
+        srv.submit(sids[S][0], _req(rng, t))
+        for sid in sids[B]:
+            srv.submit(sid, _req(rng, t))
+        clock.t += 0.1
+        srv.step()
+    st = srv.stats()
+    assert sum(st.preempted.values()) == st.preempted["bulk"] > 0
+    assert st.requeued == st.preempted
+    # backlog is all BULK: the latency classes never queued up
+    assert st.queue_depth["interactive"] == st.queue_depth["standard"] == 0
+    assert st.queue_depth["bulk"] > 0
+    assert st.deadline_misses["bulk"] > 0
+    assert st.deadline_misses["interactive"] == 0
+    w = st.queue_wait_ms
+    assert w["interactive"]["p95"] < w["bulk"]["p50"]
+    # drain: conservation closes the books per class
+    while True:
+        st = srv.stats()
+        if st.frames_served == st.frames_submitted:
+            break
+        clock.t += 0.1
+        srv.step()
+    assert all(st.queue_depth[c] == 0 for c in st.queue_depth)
+    assert st.frames_served["bulk"] == st.frames_submitted["bulk"] == 60
+
+
+def test_server_bounded_queue_backpressure(params):
+    srv = _server(params, capacity=2, max_batch=2, queue_maxlen=3)
+    sid = srv.open_session(qos=B).sid
+    rng = np.random.default_rng(3)
+    for t in range(3):
+        srv.submit(sid, _req(rng, t))
+    with pytest.raises(QueueFullError):
+        srv.submit(sid, _req(rng, 3))
+    st = srv.stats()
+    assert st.rejected_full["bulk"] == 1
+    assert st.frames_submitted["bulk"] == 3   # the rejected frame never counted
+    while srv.stats().frames_served["bulk"] < 3:
+        srv.step()
+
+
+def test_server_close_session_drains_then_evicts(params):
+    srv = _server(params, capacity=4, max_batch=2)
+    rng = np.random.default_rng(4)
+    a = srv.open_session(qos=S).sid
+    b = srv.open_session(qos=S).sid
+    for t in range(3):
+        srv.submit(a, _req(rng, t))
+    srv.submit(b, _req(rng, 0))
+    srv.close_session(a)                    # stepped mode: drains inline
+    with pytest.raises(KeyError):
+        srv.submit(a, _req(rng, 9))
+    st = srv.stats()
+    assert st.frames_served["standard"] >= 3   # a's frames all served
+    assert srv.gateway.stats().sessions_closed == 1
+    # b still serves
+    srv.submit(b, _req(rng, 1))
+    while srv.stats().frames_served["standard"] < 5:
+        srv.step()
+
+
+def test_server_requires_overlapped_gateway(params):
+    with pytest.raises(ValueError):
+        StreamServer(_gw(params, overlap=False))
+
+
+def test_server_pipeline_false_is_sequential_baseline(params):
+    """``pipeline=False`` collects tick t before launching t+1: same
+    results, zero pipelined ticks — the measured baseline knob."""
+    rng = np.random.default_rng(6)
+    srv = StreamServer(_gw(params, capacity=2),
+                       cfg=SchedulerCfg(max_batch=2), pipeline=False)
+    sid = srv.open_session(qos=S).sid
+    for t in range(4):
+        srv.submit(sid, _req(rng, t))
+        srv.step()
+    while srv.served_total < 4:
+        srv.step()
+    st = srv.stats()
+    assert st.pipelined_ticks == 0 and st.ticks >= 4
+    assert st.gateway.device_syncs_per_tick == 1
+
+
+def test_server_step_counts_refine_drain_frames(params):
+    """step()'s return includes frames delivered by a refine-forced
+    pipeline drain, not just the trailing collect."""
+    def head_init(key):
+        return {"w": 0.01 * jax.random.normal(key, (CFG.d_embed, 4))}
+
+    def head_apply(p, z):
+        return z @ p["w"]
+
+    rng = np.random.default_rng(7)
+    srv = _server(params, capacity=2, max_batch=2, refine=2,
+                  head=(head_init, head_apply))
+    sid = srv.open_session(qos=S).sid
+    delivered = 0
+    for t in range(6):
+        srv.submit(sid, FrameRequest(t=t, mel=_mel(rng), label=0))
+        delivered += srv.step()
+    while srv.stats().ticks < 6:
+        delivered += srv.step()
+    assert delivered == 6 == srv.served_total
+
+
+def test_serving_loop_fault_fails_fast_at_callers(params):
+    """If the serving loop dies on an internal error, producers and
+    progress pollers raise the stored fault instead of hanging."""
+    import time as _time
+    srv = _server(params, capacity=2, max_batch=2)
+    sid = srv.open_session(qos=S).sid
+    boom = RuntimeError("injected tick failure")
+
+    def bad_launch(*a, **k):
+        raise boom
+
+    srv.gateway.tick_launch = bad_launch
+    rng = np.random.default_rng(10)
+    with pytest.raises(RuntimeError):
+        with srv:
+            srv.submit(sid, _req(rng, 0))
+            deadline = _time.time() + 30
+            while True:
+                assert _time.time() < deadline, "fault never surfaced"
+                try:
+                    srv.served_total
+                except RuntimeError as e:
+                    assert e.__cause__ is boom
+                    break
+                _time.sleep(0.01)
+            with pytest.raises(RuntimeError):
+                srv.submit(sid, _req(rng, 1))
+        # __exit__ -> stop() re-raises the fault (the outer pytest.raises)
+
+
+def test_gateway_rejects_out_of_order_collect(params):
+    gw = _gw(params, capacity=2)
+    sid = gw.open_session().sid
+    rng = np.random.default_rng(11)
+    gw.submit(sid, _req(rng, 0))
+    p0 = gw.tick_launch()
+    gw.submit(sid, _req(rng, 1))
+    p1 = gw.tick_launch()
+    with pytest.raises(RuntimeError):
+        gw.tick_collect(p1)                  # out of launch order
+    gw.tick_collect(p0)
+    gw.tick_collect(p1)                      # in order: fine
+    with pytest.raises(RuntimeError):
+        gw.tick_collect(p1)                  # double collect
+
+
+def test_on_result_exception_does_not_kill_serving(params):
+    """A raising user callback is isolated: serving continues, every
+    frame is still delivered to the (faulty) callback."""
+    seen = []
+
+    def bad_cb(r):
+        seen.append(r.t)
+        raise RuntimeError("user bug")
+
+    srv = StreamServer(_gw(params, capacity=2),
+                       cfg=SchedulerCfg(max_batch=2), on_result=bad_cb)
+    rng = np.random.default_rng(9)
+    sid = srv.open_session(qos=S).sid
+    for t in range(3):
+        srv.submit(sid, _req(rng, t))
+        srv.step()
+    while srv.served_total < 3:
+        srv.step()
+    assert sorted(seen) == [0, 1, 2]
+    assert srv.drain_results() == []    # callback mode: no buffering
+
+
+def test_close_session_from_on_result_callback_does_not_deadlock(params):
+    """close_session on the serving thread (e.g. closing a session from
+    its own result callback) must defer to _process_closes instead of
+    waiting on an event only that thread can set."""
+    holder = {}
+
+    def on_result(r):
+        holder["srv"].close_session(r.sid)   # runs ON the serving thread
+
+    gw = _gw(params, capacity=2)
+    srv = StreamServer(gw, cfg=SchedulerCfg(max_batch=2),
+                       on_result=on_result)
+    holder["srv"] = srv
+    rng = np.random.default_rng(8)
+    sid = srv.open_session(qos=S).sid
+    with srv:
+        srv.submit(sid, _req(rng, 0))
+        deadline = __import__("time").time() + 30
+        while srv.gateway.stats().sessions_closed < 1:
+            assert __import__("time").time() < deadline, "close never ran"
+            __import__("time").sleep(0.01)
+    assert srv.served_total == 1
+
+
+def test_server_fake_clock_queue_waits_are_exact(params):
+    """The whole stack on one fake clock: queue waits and SyncEvent
+    timestamps come out exact, covering the async tick path (the clock
+    threading satellite)."""
+    clock = FakeClock()
+    srv = _server(params, capacity=2, max_batch=2, clock=clock)
+    rng = np.random.default_rng(5)
+    sid = srv.open_session(qos=S).sid
+    # charging -> the lazy-sync weights push fires on frame 0
+    srv.submit(sid, FrameRequest(t=0, mel=_mel(rng), charging=True))
+    clock.t = 0.25
+    srv.step()                              # admitted + launched at t=0.25
+    srv.step()
+    w = srv.stats().queue_wait_ms["standard"]
+    assert w["p50"] == w["max"] == 250.0
+    assert srv.stats().gateway.last_tick_ms == 0.0   # no clock advance in tick
+    # the async tick stamped the SyncEvent off the injected clock
+    events = srv.gateway._sessions[sid].sync.events
+    assert [e.kind for e in events] == ["weights"]
+    assert events[0].at_s == 0.25
+
+
+# ---------------------------------------------------------------------------
+# Threaded: ingest racing close_session, oracle = sequential replay
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_threaded_ingest_races_close_without_losing_frames(params, seed):
+    """Producers hammer the queues from their own threads while sessions
+    close and reopen mid-stream.  No frame is lost or double-served:
+    per-session served == accepted, and replaying the recorded schedule
+    through a sequential gateway reproduces every embedding bitwise."""
+    srv = _server(params, capacity=8, max_batch=8, queue_maxlen=64)
+    frames, flock = {}, threading.Lock()
+    accepted = {"n": 0}
+
+    def producer(worker):
+        rng = np.random.default_rng(1000 + 10 * seed + worker)
+        for round_ in range(3):             # churn: open -> stream -> close
+            sid = srv.open_session(qos=[I, S, B][worker % 3]).sid
+            # frame indices globally unique per (worker, round): rows are
+            # reused across close/reopen, so (sid, t) must still key one
+            # frame for the replay oracle below
+            base = (worker * 3 + round_) * 100
+            for i in range(12):
+                t = base + i
+                f = _req(rng, t)
+                with flock:
+                    frames[(sid, t)] = f
+                while True:
+                    try:
+                        srv.submit(sid, f)
+                        break
+                    except QueueFullError:  # backpressure: retry
+                        pass
+                with flock:
+                    accepted["n"] += 1
+            srv.close_session(sid, timeout=60.0)
+
+    with srv:
+        threads = [threading.Thread(target=producer, args=(w,))
+                   for w in range(3)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+    st = srv.stats()
+    assert sum(st.frames_served.values()) == accepted["n"] == 3 * 3 * 12
+    assert sum(st.queue_depth.values()) == 0
+    assert st.gateway.sessions_closed == 9
+    results = srv.drain_results()
+    assert len(results) == accepted["n"]    # no loss ...
+    by_key = {(r.sid, r.t): r for r in results}
+    assert len(by_key) == accepted["n"]     # ... and no double-serve
+    # sequential replay oracle: same admitted schedule, same embeddings.
+    # Rows are reused across close/reopen, so the replay gateway opens
+    # rows on demand (its free-list hands out ascending rows) and keys
+    # every comparison purely by the globally unique (sid, t)
+    gw = _gw(params, capacity=8)
+    open_rows = set()
+    served = 0
+    for tick in srv.schedule():
+        for sid, t in tick:
+            if sid not in open_rows:
+                # force-admit the specific row the server used
+                while True:
+                    got = gw.open_session().sid
+                    open_rows.add(got)
+                    if got == sid:
+                        break
+            gw.submit(sid, frames[(sid, t)])
+        for r in gw.tick():
+            ref = by_key[(r.sid, r.t)]
+            np.testing.assert_array_equal(
+                r.z, ref.z, err_msg=f"{(r.sid, r.t)} diverged from replay")
+            assert r.k == ref.k
+            served += 1
+    assert served == accepted["n"]
