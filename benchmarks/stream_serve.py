@@ -28,9 +28,18 @@ blocking round-trip the baselines pay is a real stall).
 **Lane 2 — synthetic overload.**  Offered load 2x tick capacity across
 the three QoS classes with bounded queues (producer paced by
 backpressure).  Hard asserts: conservation (accepted == served +
-backlog; ``preempted == requeued`` > 0 and only BULK), INTERACTIVE p95
-queue wait < BULK p50, INTERACTIVE misses no deadlines.  Reports
-per-class p50/p95 queue waits, deadline-miss rates and shed counts.
+backlog + shed; ``preempted == requeued`` > 0 and only BULK),
+INTERACTIVE p95 queue wait < BULK p50, INTERACTIVE misses no deadlines.
+Reports per-class p50/p95 queue waits, deadline-miss rates and shed
+counts.
+
+**Lane 3 — sustained overload, deterministic.**  ~2x capacity for the
+WHOLE run on a stepped fake clock: mixed tenants (weighted STANDARD,
+a rate-limited chatty tenant, BULK beyond the aging quota).  Hard
+asserts: no BULK starvation with the terminal wait bounded by
+``deadline + shed_horizon + 2 ticks``, weighted DRR honors 2:1, real
+sheds are visible in ``shed_expired``, and two independent runs are
+bit-identical — a fairness regression fails loudly, never flakes.
 
     PYTHONPATH=src python -m benchmarks.stream_serve [--quick|--smoke]
 """
@@ -272,12 +281,14 @@ def bench_overload(*, rounds=160, capacity=16, max_batch=8):
     serve_s = time.perf_counter() - t_serve0
     st = srv.stats()
 
-    # conservation: every accepted frame is served or still queued
+    # conservation: every accepted frame is served, still queued, or
+    # (with a shed horizon configured — not in this lane) visibly shed
     assert sum(st.frames_submitted.values()) == accepted
     for c in st.frames_submitted:
         assert st.frames_submitted[c] == (st.frames_served[c]
                                           + st.queue_depth[c]
-                                          + st.in_flight[c]), c
+                                          + st.in_flight[c]
+                                          + st.shed_expired[c]), c
     assert st.preempted == st.requeued
     assert st.preempted["bulk"] > 0, "2x overload must preempt BULK"
     assert st.preempted["interactive"] == st.preempted["standard"] == 0
@@ -301,13 +312,198 @@ def bench_overload(*, rounds=160, capacity=16, max_batch=8):
         "accepted": accepted,
         "served": st.frames_served,
         "backlog": st.queue_depth,
-        "shed_rejected": st.rejected_full,
+        "rejected_full": st.rejected_full,
+        "shed_expired": st.shed_expired,
         "preempted": st.preempted,
         "deadline_ms": {q.value: v for q, v in deadline_ms.items()},
         "deadline_miss_rate": {c: st.deadline_misses[c] / served[c]
                                for c in served},
         "queue_wait_ms": w,
         "frames_per_s": sum(st.frames_served.values()) / max(serve_s, 1e-9),
+    }
+
+
+def bench_sustained(*, rounds=240, max_batch=8):
+    """-> lane-3 result dict: SUSTAINED overload (~2x capacity for the
+    whole run, not a burst), mixed tenants, every scheduling decision on
+    a stepped fake clock — the lane is bit-reproducible, so a fairness
+    regression fails loudly instead of flaking.
+
+    Tenants: one INTERACTIVE (3 frames/tick, tight deadline), three
+    STANDARD — two equal-weight plus one double-weight — and a "chatty"
+    STANDARD tenant offering 3x its token-bucket budget, and one BULK
+    tenant offering more than the aging lane can promote (so real sheds
+    happen deterministically).
+
+    Hard asserts: no starvation (BULK keeps being served via aged
+    promotion while STANDARD backlog never clears), BULK terminal wait
+    bounded by ``deadline + shed_horizon + 2 ticks``, INTERACTIVE
+    misses zero deadlines, DRR honors the 2:1 weight, the chatty tenant
+    is capped at its token-bucket rate without hurting its peers, the
+    extended conservation invariant holds at every sampled snapshot,
+    and TWO independent runs produce identical schedules, sheds and
+    counters."""
+    from repro.api import FrameRequest, QoSClass, StreamSplitGateway
+    from repro.api.policies import FixedKPolicy
+    from repro.serving import (QueueFullError, RateLimitError,
+                               SchedulerCfg, StreamServer)
+    from repro.models.audio_encoder import AudioEncCfg, init_audio_encoder
+    I, S, B = QoSClass.INTERACTIVE, QoSClass.STANDARD, QoSClass.BULK
+    cfg = AudioEncCfg(**DEEP_KW)
+    params = init_audio_encoder(cfg, jax.random.PRNGKey(0))
+    DT = 0.05                              # one tick per 50 ms of fake time
+    deadline_ms = {I: 200.0, S: 2000.0, B: 1000.0}
+    shed_horizon_ms = 400.0
+    max_wait_ms = {B: 600.0}
+
+    class _FakeClock:
+        def __init__(self):
+            self.t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    def run_once():
+        clock = _FakeClock()
+        gw = StreamSplitGateway(cfg, params,
+                                policy=FixedKPolicy(cfg.n_blocks, 4),
+                                capacity=8, window=16, qos_reserve=0,
+                                clock=clock)
+        # queues sized so SERVING (not queue-full) is the bottleneck for
+        # S/B: the shed horizon bounds the backlog instead — a full
+        # shared class queue would ration acceptance by submit order
+        # and mask the scheduler's fairness (lane 2 owns that regime)
+        srv = StreamServer(gw, cfg=SchedulerCfg(
+            max_batch=max_batch, deadline_ms=deadline_ms,
+            max_wait_ms=max_wait_ms, promote_quota=0.25,
+            shed_horizon_ms=shed_horizon_ms), queue_maxlen=64,
+            queue_maxlens={S: 4096, B: 512})
+        inter = srv.open_session(qos=I).sid
+        # 40 tokens/s at DT=0.05 -> 2 accepted/tick; the tenant offers 6
+        chatty = srv.open_session(qos=S, rate_limit=(40.0, 4)).sid
+        std_w1 = srv.open_session(qos=S).sid
+        std_w2 = srv.open_session(qos=S, weight=2.0).sid
+        bulk = srv.open_session(qos=B).sid
+        rng = np.random.default_rng(7)
+        mels = [rng.normal(size=(cfg.frames, cfg.n_mels)).astype(np.float32)
+                for _ in range(32)]
+        served_by = {sid: 0 for sid in (inter, chatty, std_w1, std_w2,
+                                        bulk)}
+        accepted = 0
+        tick_of = {}
+
+        def offer(sid, k):
+            nonlocal accepted
+            for _ in range(k):
+                t = tick_of[sid] = tick_of.get(sid, -1) + 1
+                try:
+                    srv.submit(sid, FrameRequest(t=t, mel=mels[t % 32]))
+                    accepted += 1
+                except (QueueFullError, RateLimitError):
+                    pass                   # typed refusal: counted, visible
+
+        def pump():
+            srv.step()
+            for res in srv.drain_results():
+                served_by[res.sid] += 1
+            clock.t += DT
+
+        def check_conservation():
+            st = srv.stats()
+            for c in st.frames_submitted:
+                assert st.frames_submitted[c] == (
+                    st.frames_served[c] + st.queue_depth[c]
+                    + st.in_flight[c] + st.shed_expired[c]), (c, st)
+            assert st.preempted == st.requeued
+            return st
+
+        # stepped, not threaded: the serving thread only ever runs
+        # step(), so this IS the serving loop — minus nondeterminism
+        for r_ in range(rounds):
+            offer(inter, 3)
+            offer(chatty, 6)
+            offer(std_w1, 2)
+            offer(std_w2, 2)
+            offer(bulk, 3)                 # > the 2/tick promote quota
+            pump()
+            if r_ % 8 == 0:
+                check_conservation()
+        st_mid = check_conservation()
+        assert st_mid.queue_depth["standard"] > 0, \
+            "sustained lane must keep STANDARD saturated"
+        served_mid = dict(served_by)       # fair-share ratio is measured
+        #                                    over the SUSTAINED phase —
+        #                                    the drain below serves every
+        #                                    backlog and dilutes it
+        while sum(srv.stats().queue_depth.values()) \
+                + sum(srv.stats().in_flight.values()):
+            pump()                         # drain: clock keeps ticking
+        st = check_conservation()
+        return {"st": st, "served_by": served_by, "served_mid": served_mid,
+                "accepted": accepted,
+                "sids": dict(inter=inter, chatty=chatty, std_w1=std_w1,
+                             std_w2=std_w2, bulk=bulk),
+                "schedule": srv.schedule()}
+
+    a, b = run_once(), run_once()
+    # bit-reproducibility: same admitted schedule, same sheds, same
+    # promotions, same refusals, same wait percentiles — twice
+    assert a["schedule"] == b["schedule"], "sustained lane nondeterministic"
+    for field in ("frames_submitted", "frames_served", "shed_expired",
+                  "promoted", "rejected_full", "rejected_rate_limited",
+                  "deadline_misses", "queue_wait_ms"):
+        assert getattr(a["st"], field) == getattr(b["st"], field), field
+    assert a["served_by"] == b["served_by"]
+
+    st, ids = a["st"], a["sids"]
+    w = st.queue_wait_ms
+    # no starvation: BULK is served continuously through the aging lane
+    # even though plain priority fill never reaches it (STANDARD stayed
+    # saturated all run), and EVERY terminal wait — served OR shed — is
+    # bounded by deadline + horizon + 2 tick windows, per class
+    assert st.promoted["bulk"] > rounds // 2
+    assert a["served_by"][ids["bulk"]] > rounds
+    bulk_bound_ms = deadline_ms[B] + shed_horizon_ms + 2 * DT * 1e3
+    assert w["bulk"]["max"] <= bulk_bound_ms, (w["bulk"], bulk_bound_ms)
+    assert w["standard"]["max"] <= (deadline_ms[S] + shed_horizon_ms
+                                    + 2 * DT * 1e3), w["standard"]
+    # real load-shedding: offered BULK exceeds the promote quota (and
+    # offered STANDARD exceeds its slots), so the excess expires past
+    # the horizon and is dropped VISIBLY — never silently
+    assert st.shed_expired["bulk"] > 0
+    assert st.shed_expired["interactive"] == 0
+    # INTERACTIVE rides priority fill: zero deadline misses, exact
+    assert st.deadline_misses["interactive"] == 0
+    assert w["interactive"]["max"] <= deadline_ms[I]
+    # DRR over the sustained phase: the double-weight tenant gets ~2x
+    # its equal-offered peer, and the chatty tenant is rate-capped to
+    # parity with its peers despite offering 3x its budget
+    mid = a["served_mid"]
+    r21 = mid[ids["std_w2"]] / max(mid[ids["std_w1"]], 1)
+    assert 1.6 <= r21 <= 2.4, f"weighted DRR share off 2:1: {r21:.2f}"
+    assert st.rejected_rate_limited["standard"] > rounds
+    assert mid[ids["chatty"]] <= 1.2 * mid[ids["std_w1"]]
+    return {
+        "rounds": rounds,
+        "max_batch": max_batch,
+        "tick_ms": DT * 1e3,
+        "offered_per_tick": 16,
+        "accepted": a["accepted"],
+        "served": st.frames_served,
+        "served_by_tenant": {name: a["served_by"][sid]
+                             for name, sid in ids.items()},
+        "served_by_tenant_sustained": {name: mid[sid]
+                                       for name, sid in ids.items()},
+        "standard_weight_ratio": r21,
+        "promoted": st.promoted,
+        "shed_expired": st.shed_expired,
+        "rejected_full": st.rejected_full,
+        "rejected_rate_limited": st.rejected_rate_limited,
+        "deadline_misses": st.deadline_misses,
+        "queue_wait_ms": w,
+        "bulk_wait_bound_ms": bulk_bound_ms,
+        "deadline_ms": {q.value: v for q, v in deadline_ms.items()},
+        "reproducible": True,
     }
 
 
@@ -339,6 +535,15 @@ def run_all(*, quick=False, smoke=False):
         f"ms*1e3; BULK p50 {o['queue_wait_ms']['bulk']['p50']:.1f}ms, "
         f"{o['preempted']['bulk']} preempted (conserved), "
         f"bulk miss rate {o['deadline_miss_rate']['bulk']:.2f}")
+    u = bench_sustained(rounds=80 if smoke else 240)
+    result["sustained"] = u
+    row("stream.sustained.bulk_max_wait",
+        u["queue_wait_ms"]["bulk"]["max"] * 1e3,
+        f"ms*1e3 (bound {u['bulk_wait_bound_ms']:.0f}ms); "
+        f"{u['promoted']['bulk']} promoted, "
+        f"{u['shed_expired']['bulk']} shed visibly, "
+        f"DRR 2:1 ratio {u['standard_weight_ratio']:.2f}, "
+        "bit-reproducible")
     print("BENCH " + json.dumps({"bench": "stream_serve", **result}))
     return result
 

@@ -160,12 +160,15 @@ class StreamStats:
     (``"interactive"``/``"standard"``/``"bulk"``) so the whole snapshot
     is JSON-serializable as-is (``benchmarks/stream_serve.py`` writes
     it).  Conservation is an invariant, not a hope: per class,
-    ``frames_submitted == frames_served + queue_depth + in_flight`` at
-    every snapshot, and ``preempted == requeued`` always — a preempted
-    frame goes back to the front of its queue, it is never dropped
-    silently.  Frames refused at submit (bounded queue full) raise the
-    typed ``serving.QueueFullError`` and count in ``rejected_full``
-    WITHOUT entering ``frames_submitted``.
+    ``frames_submitted == frames_served + queue_depth + in_flight
+    + shed_expired`` at every snapshot, and ``preempted == requeued``
+    always — a preempted frame goes back to the front of its queue; a
+    frame only ever leaves the system as a served ``FrameResult`` or as
+    a *counted* shed (deadline expired past the configured horizon),
+    never silently.  Frames refused at submit raise a typed error and
+    count WITHOUT entering ``frames_submitted``: ``QueueFullError`` →
+    ``rejected_full`` (bounded queue) and ``RateLimitError`` →
+    ``rejected_rate_limited`` (per-session token bucket).
     """
 
     running: bool              # serving thread alive right now
@@ -177,9 +180,17 @@ class StreamStats:
     queue_depth: dict          # class -> frames waiting (queued + staged)
     in_flight: dict            # class -> frames launched, not yet collected
     rejected_full: dict        # class -> bounded-queue refusals at submit
+    rejected_rate_limited: dict  # class -> token-bucket refusals at submit
     preempted: dict            # class -> frames bumped from a staged tick
     requeued: dict             # class -> preempted frames put back (== preempted)
+    shed_expired: dict         # class -> frames dropped visibly: deadline
+    #                            expired past SchedulerCfg.shed_horizon_ms
+    promoted: dict             # class -> frames staged via the aging lane
+    #                            (waited past SchedulerCfg.max_wait_ms)
     deadline_misses: dict      # class -> frames admitted past their deadline
+    #                            PLUS shed frames (starved-in-queue misses
+    #                            are counted at shed time, not hidden)
     queue_wait_ms: dict        # class -> {"p50","p95","mean","max"} wait
-    #                            between submit and tick admission
+    #                            between submit and tick admission (shed
+    #                            frames sample their terminal wait too)
     gateway: GatewayStats      # the dispatch-plane scoreboard underneath

@@ -16,15 +16,18 @@ pipelines tick t+1's staging under tick t's in-flight device chains via
 the gateway's ``tick_launch``/``tick_collect`` seam.
 """
 from repro.api.types import StreamStats
-from repro.serving.queues import ClassQueue, QoSQueues, QueuedFrame, \
-    QueueFullError
-from repro.serving.scheduler import (DEADLINE_MS, PRIORITY, SchedulerCfg,
-                                     TickScheduler)
+from repro.serving.queues import (ClassQueue, QoSQueues, QueuedFrame,
+                                  QueueFullError, RateLimitError,
+                                  TokenBucket)
+from repro.serving.scheduler import (DEADLINE_MS, MAX_WAIT_MS, PRIORITY,
+                                     SchedulerCfg, TickScheduler)
 from repro.serving.server import StreamServer
 
 __all__ = [
     "StreamServer",
-    "TickScheduler", "SchedulerCfg", "DEADLINE_MS", "PRIORITY",
+    "TickScheduler", "SchedulerCfg", "DEADLINE_MS", "MAX_WAIT_MS",
+    "PRIORITY",
     "QoSQueues", "ClassQueue", "QueuedFrame", "QueueFullError",
+    "RateLimitError", "TokenBucket",
     "StreamStats",
 ]

@@ -8,12 +8,14 @@ thread drains them tick by tick through the ``TickScheduler``
 - **Bounded, never silently lossy.**  A full class queue refuses the
   frame with the typed ``QueueFullError`` (backpressure to the caller)
   and counts the refusal; an accepted frame can only leave the system
-  as a served ``FrameResult``.  Preempted frames re-enter at the FRONT
-  of their queue with their original deadline.
+  as a served ``FrameResult`` or as a *visible* shed
+  (``shed_expired_locked`` — deadline long expired, dropped and
+  counted, see the scheduler's shed pass).  Preempted frames re-enter
+  at the FRONT of their queue with their original deadline.
 - **Deterministic.**  No internal clock: every timestamp
   (``QueuedFrame.enq_s`` / ``deadline_s``) comes from the caller, so a
-  fake clock reproduces every queue-wait and deadline decision exactly
-  (``tests/test_serving.py``).
+  fake clock reproduces every queue-wait, deadline and shed decision
+  exactly (``tests/test_serving.py``).
 - **One lock for all three queues.**  ``QoSQueues.cond`` is a single
   condition variable shared by every class, so the serving thread can
   sleep on "any frame arrived" and ``submit`` wakes it with one notify.
@@ -41,6 +43,69 @@ class QueueFullError(RuntimeError):
             f"{qos.value} queue full: {depth}/{maxlen} frames waiting")
 
 
+class RateLimitError(RuntimeError):
+    """Typed admission-control signal of ``StreamServer.submit``: the
+    session's token bucket is empty.  The frame was NOT enqueued — the
+    refusal is counted (``StreamStats.rejected_rate_limited``), never
+    silent, and ``retry_after_s`` tells the caller when one token will
+    have refilled (exact under the injected clock)."""
+
+    def __init__(self, sid: int, qos: QoSClass, retry_after_s: float):
+        self.sid = sid
+        self.qos = qos
+        self.retry_after_s = retry_after_s
+        super().__init__(
+            f"session {sid} ({qos.value}) rate-limited: next token in "
+            f"{retry_after_s:.3f}s")
+
+
+@dataclass
+class TokenBucket:
+    """Deterministic token bucket: ``rate_per_s`` tokens/s up to
+    ``burst``.  No internal clock — every ``try_take(now)`` refills from
+    the caller's timestamp, so admission-control decisions are exact
+    under a fake clock.  Not thread-safe on its own; the owner
+    (``StreamServer``) serializes access."""
+
+    rate_per_s: float
+    burst: float
+    now: float = 0.0           # clock at construction (refill anchor)
+
+    def __post_init__(self):
+        if self.rate_per_s <= 0 or self.burst < 1:
+            raise ValueError("token bucket needs rate_per_s > 0 and "
+                             "burst >= 1")
+        self.tokens = float(self.burst)
+        self._last = float(self.now)
+
+    def _refill(self, now: float) -> None:
+        if now > self._last:
+            self.tokens = min(float(self.burst),
+                              self.tokens + (now - self._last)
+                              * self.rate_per_s)
+        self._last = max(self._last, now)
+
+    def try_take(self, now: float) -> bool:
+        """Consume one token if available; never blocks."""
+        self._refill(now)
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            return True
+        return False
+
+    def give_back(self) -> None:
+        """Refund the token of a frame the queue then refused — a
+        rejected frame must not also burn rate budget."""
+        self.tokens = min(float(self.burst), self.tokens + 1.0)
+
+    def retry_after_s(self, now: float) -> float:
+        """Seconds until one full token exists (0 if one does now)."""
+        self._refill(now)
+        if self.tokens >= 1.0:
+            return 0.0
+        return (1.0 - self.tokens) / self.rate_per_s
+
+
 @dataclass
 class QueuedFrame:
     """One frame waiting for (or staged toward) admission into a tick."""
@@ -52,6 +117,8 @@ class QueuedFrame:
     enq_s: float               # caller clock at submit
     deadline_s: float          # enq_s + the class deadline budget
     preemptions: int = 0       # times bumped out of a staged tick
+    weight: float = 1.0        # fair-share weight of the session (DRR)
+    promoted: bool = False     # staged via the aging lane (max_wait_ms)
 
 
 @dataclass
@@ -66,6 +133,7 @@ class ClassQueue:
     rejected: int = 0          # QueueFullError refusals
     preempted: int = 0         # frames bumped from a staged tick ...
     requeued: int = 0          # ... and put back (always == preempted)
+    shed_expired: int = 0      # frames dropped with deadline long past
 
 
 class QoSQueues:
@@ -75,6 +143,14 @@ class QoSQueues:
     ``maxlens={QoSClass.BULK: 512, ...}``).  All mutation goes through
     methods that take ``self.cond``; ``cond`` is also the sleep/wake
     channel between client threads and the serving thread.
+
+    Removal order invariant: frames enqueue in nondecreasing ``enq_s``
+    (and, per class, nondecreasing ``deadline_s`` — one budget per
+    class), preempted frames re-enter at the FRONT with their original
+    deadline, and mid-queue removals (``pop_sid_locked``) preserve
+    relative order — so the front of each class queue is always its
+    oldest frame AND its earliest deadline.  The scheduler's shed and
+    aging passes both lean on this.
     """
 
     def __init__(self, *, maxlen: int = 256, maxlens=None):
@@ -86,7 +162,7 @@ class QoSQueues:
 
     # -- producer side (any thread) ------------------------------------------
     def submit(self, sid, frame: FrameRequest, qos: QoSClass, *, now: float,
-               deadline_s: float) -> QueuedFrame:
+               deadline_s: float, weight: float = 1.0) -> QueuedFrame:
         """Enqueue one frame; raises ``QueueFullError`` at capacity."""
         with self.cond:
             cq = self.by_class[qos]
@@ -94,7 +170,8 @@ class QoSQueues:
                 cq.rejected += 1
                 raise QueueFullError(qos, len(cq.q), cq.maxlen)
             qf = QueuedFrame(sid=sid, frame=frame, qos=qos, seq=self._seq,
-                             enq_s=now, deadline_s=deadline_s)
+                             enq_s=now, deadline_s=deadline_s,
+                             weight=weight)
             self._seq += 1
             cq.q.append(qf)
             cq.submitted += 1
@@ -107,6 +184,56 @@ class QoSQueues:
         of a class carries the same deadline budget), or None."""
         cq = self.by_class[qos].q
         return cq.popleft() if cq else None
+
+    def peek_locked(self, qos: QoSClass) -> QueuedFrame | None:
+        """The class's oldest waiting frame without removing it."""
+        cq = self.by_class[qos].q
+        return cq[0] if cq else None
+
+    def sids_locked(self, qos: QoSClass) -> list:
+        """Sessions with waiting frames of the class, ordered by their
+        oldest frame (the DRR ring order of the scheduler's STANDARD
+        fill)."""
+        seen, out = set(), []
+        for qf in self.by_class[qos].q:
+            if qf.sid not in seen:
+                seen.add(qf.sid)
+                out.append(qf.sid)
+        return out
+
+    def peek_sid_locked(self, qos: QoSClass, sid) -> QueuedFrame | None:
+        """The session's oldest waiting frame of the class, in place."""
+        for qf in self.by_class[qos].q:
+            if qf.sid == sid:
+                return qf
+        return None
+
+    def pop_sid_locked(self, qos: QoSClass, sid) -> QueuedFrame | None:
+        """Remove and return the session's oldest waiting frame of the
+        class (relative order of the remaining frames is preserved)."""
+        cq = self.by_class[qos].q
+        for i, qf in enumerate(cq):
+            if qf.sid == sid:
+                del cq[i]
+                return qf
+        return None
+
+    def shed_expired_locked(self, qos: QoSClass, now: float,
+                            horizon_s: float) -> list:
+        """Drop (and count) every waiting frame of the class whose
+        deadline expired more than ``horizon_s`` ago.  The front of the
+        queue is always the earliest deadline (class invariant), so the
+        sweep stops at the first survivor.  Returns the shed frames —
+        the caller owns miss accounting and per-session bookkeeping;
+        the drop itself is counted here (``shed_expired``) so the
+        conservation snapshot (depth + shed counter, both under
+        ``cond``) is atomic."""
+        cq = self.by_class[qos]
+        out = []
+        while cq.q and now > cq.q[0].deadline_s + horizon_s:
+            out.append(cq.q.popleft())
+            cq.shed_expired += 1
+        return out
 
     def requeue_front_locked(self, qf: QueuedFrame) -> None:
         """Return a preempted frame to the FRONT of its class queue with
@@ -131,10 +258,10 @@ class QoSQueues:
             return {q.value: len(c.q) for q, c in self.by_class.items()}
 
     def counters(self) -> dict:
-        """{"submitted"/"rejected"/"preempted"/"requeued":
+        """{"submitted"/"rejected"/"preempted"/"requeued"/"shed_expired":
         {class: count}} — one consistent snapshot."""
         with self.cond:
             return {name: {q.value: getattr(c, name)
                            for q, c in self.by_class.items()}
                     for name in ("submitted", "rejected", "preempted",
-                                 "requeued")}
+                                 "requeued", "shed_expired")}

@@ -36,20 +36,28 @@ from dataclasses import replace
 
 from repro.api.types import (FrameRequest, QoSClass, SessionInfo,
                              StreamStats)
-from repro.serving.queues import QoSQueues, QueuedFrame  # noqa: F401
-from repro.serving.scheduler import SchedulerCfg, TickScheduler
+from repro.serving.queues import (QoSQueues, QueuedFrame,  # noqa: F401
+                                  RateLimitError, TokenBucket)
+from repro.serving.scheduler import (SchedulerCfg, TickScheduler,
+                                     clamp_weight)
+
+_UNSET = object()          # open_session(rate_limit=...) sentinel
 
 
 class _ServedSession:
     """Server-side session record (the gateway keeps its own)."""
 
-    __slots__ = ("sid", "qos", "submitted", "served", "closing", "closed")
+    __slots__ = ("sid", "qos", "submitted", "served", "shed", "weight",
+                 "bucket", "closing", "closed")
 
-    def __init__(self, sid, qos):
+    def __init__(self, sid, qos, *, weight=1.0, bucket=None):
         self.sid = sid
         self.qos = qos
         self.submitted = 0       # frames accepted into the queues
         self.served = 0          # frames delivered as FrameResults
+        self.shed = 0            # frames visibly dropped past the horizon
+        self.weight = weight     # STANDARD fair-share weight (DRR)
+        self.bucket = bucket     # per-session TokenBucket (or None)
         self.closing = False     # no new submits; drain then evict
         self.closed = threading.Event()
 
@@ -75,7 +83,13 @@ class StreamServer:
         grow with uptime; without one they accumulate until
         ``drain_results()``, which the caller is expected to poll.
     clock : timing source; defaults to the gateway's injected clock so
-        one fake clock drives queue waits, deadlines and tick latency.
+        one fake clock drives queue waits, deadlines, rate limits and
+        tick latency.
+    rate_limit : optional ``(rate_per_s, burst)`` default token-bucket
+        admission control applied to every session (override or disable
+        per session at ``open_session``).  An exhausted bucket refuses
+        the frame with the typed ``RateLimitError``, counted in
+        ``StreamStats.rejected_rate_limited`` — never silent.
     schedule_keep : how many recent ticks of the admitted schedule to
         retain for ``schedule()`` replay/debugging (bounded for the
         same always-on reason).
@@ -84,6 +98,7 @@ class StreamServer:
     def __init__(self, gateway, *, cfg: SchedulerCfg | None = None,
                  queue_maxlen: int = 256, queue_maxlens=None,
                  pipeline: bool = True, on_result=None, clock=None,
+                 rate_limit: tuple | None = None,
                  schedule_keep: int = 4096):
         if not gateway.overlap:
             raise ValueError(
@@ -96,8 +111,13 @@ class StreamServer:
         self.scheduler = TickScheduler(cfg)
         self._clock = clock if clock is not None else gateway.clock
         self._on_result = on_result
+        self._rate_limit = rate_limit
         self._sessions: dict[int, _ServedSession] = {}
         self._lock = threading.RLock()        # session table + gateway admin
+        # serializes start()/stop() against each other: without it two
+        # threads can both observe a dead _thread and spawn two serving
+        # loops (check-then-act race)
+        self._life = threading.Lock()
         # serializes step(): normally only the serving thread runs it,
         # but close_session's caller-driven fallback (no live thread)
         # may be entered from several client threads at once
@@ -116,6 +136,10 @@ class StreamServer:
         # updated under _lock inside the admit/collect transitions so
         # the StreamStats conservation invariant holds at every snapshot
         self._inflight = {q.value: 0 for q in QoSClass}
+        # token-bucket refusals per class — admission control happens
+        # before a frame touches the queues, so the counter lives here
+        # (mutated and snapshotted under _lock)
+        self._rate_limited = {q.value: 0 for q in QoSClass}
         self._thread: threading.Thread | None = None
         self._stopping = False
         self._drain_on_stop = True
@@ -124,20 +148,34 @@ class StreamServer:
 
     # -- session lifecycle (any thread) --------------------------------------
     def open_session(self, platform="pi4",
-                     qos: QoSClass = QoSClass.STANDARD) -> SessionInfo:
+                     qos: QoSClass = QoSClass.STANDARD, *,
+                     weight: float = 1.0,
+                     rate_limit=_UNSET) -> SessionInfo:
         """Admit a session (delegates to the gateway, which may raise
-        the typed ``AdmissionError``)."""
+        the typed ``AdmissionError``).
+
+        ``weight`` is the session's STANDARD fair-share weight (DRR;
+        clamped, only meaningful for ``QoSClass.STANDARD``).
+        ``rate_limit`` is a per-session ``(rate_per_s, burst)`` token
+        bucket; leave unset to inherit the server default, pass ``None``
+        to disable for this session."""
+        limit = self._rate_limit if rate_limit is _UNSET else rate_limit
+        bucket = (TokenBucket(limit[0], limit[1], now=self._clock())
+                  if limit is not None else None)
         with self._lock:
             info = self.gateway.open_session(platform=platform, qos=qos)
-            self._sessions[info.sid] = _ServedSession(info.sid, qos)
+            self._sessions[info.sid] = _ServedSession(
+                info.sid, qos, weight=clamp_weight(weight), bucket=bucket)
             return info
 
     def close_session(self, sid, *, timeout: float | None = 30.0) -> None:
         """Graceful close: no new submits are accepted, every frame
-        already accepted for the session is still served, then the
-        gateway evicts the row.  Blocks until drained when the serving
-        thread runs (raises ``TimeoutError`` past ``timeout``);
-        otherwise the caller drives ``step()`` to completion."""
+        already accepted for the session is still served (or, with a
+        shed horizon configured, visibly shed once its deadline is long
+        past — never silently dropped), then the gateway evicts the
+        row.  Blocks until drained when the serving thread runs (raises
+        ``TimeoutError`` past ``timeout``); otherwise the caller drives
+        ``step()`` to completion."""
         with self._lock:
             s = self._require(sid)
             if not s.closing:       # concurrent closers all wait below
@@ -179,8 +217,9 @@ class StreamServer:
     def submit(self, sid, frame: FrameRequest) -> None:
         """Enqueue one frame.  Validates + converts the mel HERE (on the
         client's thread) so the serving thread never pays conversion;
-        raises ``QueueFullError`` when the session's class queue is at
-        capacity and ``KeyError`` once the session is closing."""
+        raises ``RateLimitError`` when the session's token bucket is
+        empty, ``QueueFullError`` when the session's class queue is at
+        capacity, and ``KeyError`` once the session is closing."""
         self._check_fault()
         with self._lock:
             s = self._require(sid)
@@ -189,55 +228,69 @@ class StreamServer:
         mel = self.gateway.validate_mel(frame.mel)   # the one validation
         if mel is not frame.mel:
             frame = replace(frame, mel=mel)
+        now = self._clock()
         # count the frame BEFORE it becomes visible in the queues (and
-        # roll back on refusal): _process_closes compares served ==
-        # submitted, so an enqueued-but-uncounted frame could let a
+        # roll back on refusal): _process_closes compares served + shed
+        # == submitted, so an enqueued-but-uncounted frame could let a
         # racing close_session evict the row out from under it
         with self._lock:
             if s.closing:
                 raise KeyError(f"session {sid} is closing")
+            if s.bucket is not None and not s.bucket.try_take(now):
+                self._rate_limited[s.qos.value] += 1
+                raise RateLimitError(sid, s.qos,
+                                     s.bucket.retry_after_s(now))
             s.submitted += 1
-        now = self._clock()
         try:
             self.queues.submit(sid, frame, s.qos, now=now,
-                               deadline_s=now + self.cfg.deadline_s(s.qos))
+                               deadline_s=now + self.cfg.deadline_s(s.qos),
+                               weight=s.weight)
         except BaseException:
             with self._lock:
                 s.submitted -= 1
+                if s.bucket is not None:
+                    s.bucket.give_back()    # a refused frame costs no budget
             raise
 
     # -- the serving loop ----------------------------------------------------
     def start(self) -> "StreamServer":
-        """Launch the background serving thread (idempotent)."""
-        if self._thread is not None and self._thread.is_alive():
-            return self
-        self._stopping = False
-        self._thread = threading.Thread(target=self._loop,
-                                        name="streamsplit-serve",
-                                        daemon=True)
-        self._thread.start()
+        """Launch the background serving thread (idempotent, and safe
+        to race: the check-and-spawn is serialized under ``_life`` so
+        two callers can never start two serving loops)."""
+        with self._life:
+            if self._thread is not None and self._thread.is_alive():
+                return self
+            self._stopping = False
+            self._thread = threading.Thread(target=self._loop,
+                                            name="streamsplit-serve",
+                                            daemon=True)
+            self._thread.start()
         return self
 
     def stop(self, *, drain: bool = True, timeout: float | None = 60.0):
         """Stop serving.  ``drain=True`` (default) serves every queued
         frame first; ``drain=False`` collects only the in-flight tick
-        and leaves the backlog measurable in ``stats().queue_depth``."""
-        self._drain_on_stop = drain
-        self._stopping = True
-        with self.queues.cond:
-            self.queues.cond.notify_all()
-        t = self._thread
-        if t is not None and t is not threading.current_thread():
-            t.join(timeout)
-            if t.is_alive():
-                raise TimeoutError("serving thread did not stop")
-        self._thread = None
-        if self._fault is not None:
-            # the loop died on an exception earlier (already printed
-            # with traceback): surface it loudly at stop time instead
-            # of letting the session end "cleanly"
-            fault, self._fault = self._fault, None
-            raise RuntimeError("serving loop died mid-run") from fault
+        and leaves the backlog measurable in ``stats().queue_depth``.
+        Serialized against ``start()`` (and concurrent ``stop()``s)
+        under ``_life`` — the serving thread itself never takes that
+        lock, so joining under it cannot deadlock."""
+        with self._life:
+            self._drain_on_stop = drain
+            self._stopping = True
+            with self.queues.cond:
+                self.queues.cond.notify_all()
+            t = self._thread
+            if t is not None and t is not threading.current_thread():
+                t.join(timeout)
+                if t.is_alive():
+                    raise TimeoutError("serving thread did not stop")
+            self._thread = None
+            if self._fault is not None:
+                # the loop died on an exception earlier (already printed
+                # with traceback): surface it loudly at stop time instead
+                # of letting the session end "cleanly"
+                fault, self._fault = self._fault, None
+                raise RuntimeError("serving loop died mid-run") from fault
         return self
 
     def __enter__(self):
@@ -297,9 +350,16 @@ class StreamServer:
         gw = self.gateway
         with self.queues.cond:                 # Condition wraps an RLock
             batch = self.scheduler.admit(self.queues, self._clock())
+            shed = self.scheduler.pop_shed()
             with self._lock:                   # queue -> in-flight, atomic
                 for qf in batch:
                     self._inflight[qf.qos.value] += 1
+                # shed frames leave the system here: fold them into the
+                # per-session books so a draining close still completes
+                for qf in shed:
+                    s = self._sessions.get(qf.sid)
+                    if s is not None:
+                        s.shed += 1
         new_plan = None
         new_classes: list[str] = []
         served = 0
@@ -313,9 +373,10 @@ class StreamServer:
                 gw.submit_validated(qf.sid, qf.frame)
                 new_classes.append(qf.qos.value)
             if self._plan is not None:
-                self._pipelined_ticks += 1
+                with self._lock:               # stats() reads under _lock
+                    self._pipelined_ticks += 1
             new_plan = gw.tick_launch()
-        self.scheduler.stage(self.queues)
+        self.scheduler.stage(self.queues, self._clock())
         if self._plan is not None:
             served += self._collect()
         self._plan, self._plan_classes = new_plan, new_classes
@@ -326,8 +387,8 @@ class StreamServer:
         plan, classes = self._plan, self._plan_classes
         self._plan, self._plan_classes = None, []
         results = self.gateway.tick_collect(plan)
-        self._ticks += 1
         with self._lock:
+            self._ticks += 1
             self._schedule.append([(r.sid, r.t) for r in results])
             for r, cls in zip(results, classes):
                 self._served[cls] += 1
@@ -356,9 +417,11 @@ class StreamServer:
         if not self._closing_n:
             return
         with self._lock:
+            # every accepted frame is accounted: served as a result or
+            # shed visibly past the horizon — only then may the row go
             done = [s for s in self._sessions.values()
                     if s.closing and not s.closed.is_set()
-                    and s.served == s.submitted
+                    and s.served + s.shed == s.submitted
                     and not self._in_pipeline(s.sid)]
             for s in done:
                 self.gateway.close_session(s.sid)
@@ -400,33 +463,41 @@ class StreamServer:
 
     def stats(self) -> StreamStats:
         # one consistent snapshot: queue/staged state and the
-        # served/in-flight counters are read under the same lock pair
-        # (cond -> _lock, the loop's nesting order) that every frame
-        # transition mutates them under, so the conservation invariant
-        # documented on StreamStats holds at EVERY snapshot
+        # served/in-flight/shed counters are read under the same lock
+        # pair (cond -> _lock, the loop's nesting order) that every
+        # frame transition mutates them under, so the conservation
+        # invariant documented on StreamStats holds at EVERY snapshot
         with self.queues.cond:
             qc = self.queues.counters()
             depth = self.queues.depths()
             staged = self.scheduler.staged_depths()
-            # admission accounting (wait samples, deadline misses) is
-            # written while step() holds the cond — read it there too
+            # admission accounting (wait samples, deadline misses,
+            # aged promotions) is written while step() holds the cond —
+            # read it there too
             misses = dict(self.scheduler.deadline_misses)
+            promoted = dict(self.scheduler.promoted)
             waits = self.scheduler.wait_percentiles()
             with self._lock:
                 served = dict(self._served)
                 in_flight = dict(self._inflight)
+                rate_limited = dict(self._rate_limited)
+                ticks = self._ticks
+                pipelined = self._pipelined_ticks
         t = self._thread
         return StreamStats(
             running=t is not None and t.is_alive(),
-            ticks=self._ticks,
-            pipelined_ticks=self._pipelined_ticks,
+            ticks=ticks,
+            pipelined_ticks=pipelined,
             frames_submitted=qc["submitted"],
             frames_served=served,
             queue_depth={c: depth[c] + staged[c] for c in depth},
             in_flight=in_flight,
             rejected_full=qc["rejected"],
+            rejected_rate_limited=rate_limited,
             preempted=qc["preempted"],
             requeued=qc["requeued"],
+            shed_expired=qc["shed_expired"],
+            promoted=promoted,
             deadline_misses=misses,
             queue_wait_ms=waits,
             gateway=self.gateway.stats())

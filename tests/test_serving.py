@@ -5,6 +5,7 @@ against the sequential gateway, QoS behavior under synthetic overload,
 and a threaded ingest-vs-close stress test with a sequential-replay
 oracle."""
 import threading
+import time
 
 import jax
 import numpy as np
@@ -12,8 +13,9 @@ import pytest
 
 from repro.api import (FrameRequest, QoSClass, StreamSplitGateway,
                        make_policy)
-from repro.serving import (QoSQueues, QueueFullError, SchedulerCfg,
-                           StreamServer, TickScheduler)
+from repro.serving import (DEADLINE_MS, MAX_WAIT_MS, QoSQueues,
+                           QueueFullError, RateLimitError, SchedulerCfg,
+                           StreamServer, TickScheduler, TokenBucket)
 from repro.models.audio_encoder import AudioEncCfg, init_audio_encoder
 
 # tiny deep-ish encoder: 2 split points -> up to 3 buckets per tick,
@@ -137,14 +139,19 @@ def _rand_submits(qs, cfg, rng, now, n, p=None):
 
 @pytest.mark.parametrize("seed", range(6))
 def test_scheduler_priority_and_deadline_monotonicity(seed):
-    """No admitted BULK frame while a higher-class frame still waits;
-    within a class, admission follows nondecreasing deadlines (EDF ==
-    FIFO under a per-class budget) both inside a batch and across
-    successive ticks."""
+    """No admitted BULK frame while a higher-class frame still waits
+    (absent aging — waits here never reach ``max_wait_ms``); within a
+    class, admission follows nondecreasing deadlines inside a batch
+    (the final sort is by arrival), and EDF holds across ticks globally
+    for INTERACTIVE/BULK (plain FIFO) but per *session* for STANDARD —
+    DRR may serve tenant B's older frame after tenant A's newer one,
+    that is exactly the fairness trade."""
     rng = np.random.default_rng(seed)
     cfg = SchedulerCfg(max_batch=4)
     qs, sched = QoSQueues(maxlen=64), TickScheduler(cfg)
-    now, last_deadline = 0.0, {q: -np.inf for q in QoSClass}
+    now = 0.0
+    last_deadline = {I: -np.inf, B: -np.inf}
+    last_std = {}                            # sid -> last deadline
     for _ in range(12):
         _rand_submits(qs, cfg, rng, now, int(rng.integers(0, 9)))
         if rng.random() < 0.5:              # sometimes stage early
@@ -153,6 +160,7 @@ def test_scheduler_priority_and_deadline_monotonicity(seed):
             _rand_submits(qs, cfg, rng, now, int(rng.integers(0, 5)))
         batch = sched.admit(qs, now)
         assert len(batch) <= cfg.max_batch
+        assert not any(f.promoted for f in batch), "no aging at these waits"
         if any(f.qos is B for f in batch):
             # the preemption pass emptied every higher-class queue first
             assert qs.depths()["interactive"] == 0
@@ -161,7 +169,11 @@ def test_scheduler_priority_and_deadline_monotonicity(seed):
         for f in batch:
             assert f.deadline_s >= seen[f.qos], "EDF order inside a tick"
             seen[f.qos] = f.deadline_s
-        for q in QoSClass:
+            if f.qos is S:
+                assert f.deadline_s >= last_std.get(f.sid, -np.inf), \
+                    "per-session EDF order across ticks (STANDARD)"
+                last_std[f.sid] = f.deadline_s
+        for q in (I, B):
             if seen[q] > -np.inf:
                 assert seen[q] >= last_deadline[q], "EDF order across ticks"
                 last_deadline[q] = seen[q]
@@ -239,19 +251,233 @@ def test_scheduler_no_preemption_when_disabled():
 
 
 # ---------------------------------------------------------------------------
+# SchedulerCfg: partial overrides merge with defaults (regression)
+# ---------------------------------------------------------------------------
+
+def test_scheduler_cfg_partial_override_merges_defaults():
+    """``SchedulerCfg(deadline_ms={BULK: ...})`` used to lose the other
+    classes' budgets and KeyError on their first submit."""
+    cfg = SchedulerCfg(deadline_ms={B: 5000.0})
+    assert cfg.deadline_s(B) == 5.0
+    assert cfg.deadline_s(I) == DEADLINE_MS[I] * 1e-3   # no KeyError
+    assert cfg.deadline_s(S) == DEADLINE_MS[S] * 1e-3
+    cfg2 = SchedulerCfg(max_wait_ms={B: 100.0})
+    assert cfg2.max_wait_s(B) == 0.1
+    assert cfg2.max_wait_s(S) == MAX_WAIT_MS[S] * 1e-3
+    assert cfg2.max_wait_s(I) is None                   # default: no aging
+    # merged dicts are per-instance: mutations must not leak across cfgs
+    cfg.deadline_ms[I] = 1.0
+    assert SchedulerCfg().deadline_ms[I] == DEADLINE_MS[I]
+    with pytest.raises(ValueError):
+        SchedulerCfg(promote_quota=0.0)
+    with pytest.raises(ValueError):
+        SchedulerCfg(drr_quantum=0.0)
+
+
+def test_server_partial_deadline_override_serves_other_classes(params):
+    """End-to-end regression: a server configured with only a BULK
+    deadline budget must still accept INTERACTIVE/STANDARD submits."""
+    srv = _server(params, max_batch=2, deadline_ms={B: 5000.0})
+    rng = np.random.default_rng(20)
+    sid_i = srv.open_session(qos=I).sid
+    sid_b = srv.open_session(qos=B).sid
+    srv.submit(sid_i, _req(rng, 0))          # KeyError before the fix
+    srv.submit(sid_b, _req(rng, 0))
+    while srv.served_total < 2:
+        srv.step()
+
+
+# ---------------------------------------------------------------------------
+# Aging/promotion: bounded BULK wait under sustained higher-class load
+# ---------------------------------------------------------------------------
+
+def _zf():
+    return FrameRequest(t=0, mel=np.zeros((1, 1), np.float32))
+
+
+def test_scheduler_bulk_aging_bounds_max_wait_under_flood():
+    """Sustained INTERACTIVE load saturates every tick; without aging
+    the BULK frame starves forever, with aging it is admitted within
+    ``max_wait_ms`` + one tick period, promotion-immune to preemption."""
+    # (a) aging ON: bounded
+    cfg = SchedulerCfg(max_batch=2, max_wait_ms={B: 500.0})
+    qs, sched = QoSQueues(maxlen=64), TickScheduler(cfg)
+    bulk = qs.submit(0, _zf(), B, now=0.0, deadline_s=2.0)
+    now, admitted_at = 0.0, None
+    for _ in range(20):
+        for _ in range(2):                   # flood: 2 fresh I per tick
+            qs.submit(1, _zf(), I, now=now, deadline_s=now + 0.05)
+        if bulk in sched.admit(qs, now):
+            admitted_at = now
+            break
+        now += 0.1
+    assert admitted_at is not None, "BULK starved despite aging"
+    assert admitted_at <= 0.5 + 0.1 + 1e-9, "bound: max_wait + 1 tick"
+    assert bulk.promoted and sched.promoted["bulk"] == 1
+    assert qs.counters()["preempted"]["bulk"] == 0  # promotion stuck
+    # (b) aging OFF (the old scheduler): starved outright
+    cfg = SchedulerCfg(max_batch=2, max_wait_ms={B: None})
+    qs, sched = QoSQueues(maxlen=64), TickScheduler(cfg)
+    bulk = qs.submit(0, _zf(), B, now=0.0, deadline_s=2.0)
+    now = 0.0
+    for _ in range(20):
+        for _ in range(2):
+            qs.submit(1, _zf(), I, now=now, deadline_s=now + 0.05)
+        assert bulk not in sched.admit(qs, now)
+        now += 0.1
+    assert sched.promoted["bulk"] == 0
+
+
+def test_scheduler_promotion_quota_caps_aged_share():
+    """The aging lane cannot invert the starvation: promoted frames
+    take at most ``promote_quota`` of a batch, fresh INTERACTIVE
+    traffic keeps the rest."""
+    cfg = SchedulerCfg(max_batch=4, max_wait_ms={B: 100.0},
+                       promote_quota=0.5)
+    qs, sched = QoSQueues(maxlen=64), TickScheduler(cfg)
+    for i in range(8):                       # deep, long-aged BULK backlog
+        qs.submit(i, _zf(), B, now=0.0, deadline_s=10.0)
+    for _ in range(4):                       # fresh INTERACTIVE burst
+        qs.submit(9, _zf(), I, now=1.0, deadline_s=1.05)
+    batch = sched.admit(qs, 1.0)
+    assert len(batch) == 4
+    assert sum(1 for x in batch if x.promoted) == 2   # quota = 0.5 * 4
+    assert sum(1 for x in batch if x.qos is I) == 2
+    # the promoted frames are the OLDEST aged ones (FIFO drain -> bound)
+    assert sorted(x.seq for x in batch if x.promoted) == [0, 1]
+
+
+def test_scheduler_promote_slots_is_at_least_one():
+    assert SchedulerCfg(max_batch=1, promote_quota=0.5).promote_slots == 1
+    assert SchedulerCfg(max_batch=8, promote_quota=0.5).promote_slots == 4
+
+
+# ---------------------------------------------------------------------------
+# DRR: weighted fair sharing between STANDARD tenants
+# ---------------------------------------------------------------------------
+
+def test_scheduler_drr_fair_share_between_standard_tenants():
+    """A chatty tenant's deep backlog (submitted FIRST — plain FIFO
+    would drain it before touching anyone else) cannot monopolize the
+    STANDARD slots: while every tenant stays backlogged, service is
+    near-equal."""
+    cfg = SchedulerCfg(max_batch=4)
+    qs, sched = QoSQueues(maxlen=128), TickScheduler(cfg)
+    for _ in range(40):                      # chatty tenant 0 floods first
+        qs.submit(0, _zf(), S, now=0.0, deadline_s=0.25)
+    for _ in range(10):
+        qs.submit(1, _zf(), S, now=0.0, deadline_s=0.25)
+        qs.submit(2, _zf(), S, now=0.0, deadline_s=0.25)
+    served = {0: 0, 1: 0, 2: 0}
+    for _ in range(5):                       # 20 slots, all 3 backlogged
+        for qf in sched.admit(qs, 0.1):
+            served[qf.sid] += 1
+    assert sum(served.values()) == 20
+    assert served[1] >= 6 and served[2] >= 6, served
+    assert served[0] <= 8, f"chatty tenant monopolized: {served}"
+    # once the modest tenants drain, the chatty backlog gets every slot
+    for _ in range(20):
+        for qf in sched.admit(qs, 0.2):
+            served[qf.sid] += 1
+    assert served == {0: 40, 1: 10, 2: 10}   # conservation: all served
+
+
+def test_scheduler_drr_weight_biases_share_2_to_1():
+    """``QueuedFrame.weight`` is a real weight: a weight-2 tenant gets
+    exactly twice the slots of a weight-1 tenant while both are
+    backlogged (quantum accounting, not probabilistic)."""
+    cfg = SchedulerCfg(max_batch=3)
+    qs, sched = QoSQueues(maxlen=128), TickScheduler(cfg)
+    for _ in range(30):
+        qs.submit(0, _zf(), S, now=0.0, deadline_s=0.25, weight=2.0)
+        qs.submit(1, _zf(), S, now=0.0, deadline_s=0.25, weight=1.0)
+    served = {0: 0, 1: 0}
+    for _ in range(6):                       # 18 slots, both backlogged
+        for qf in sched.admit(qs, 0.1):
+            served[qf.sid] += 1
+    assert served[0] == 2 * served[1], served
+
+
+# ---------------------------------------------------------------------------
+# Shedding: expired frames dropped visibly, bit-reproducibly
+# ---------------------------------------------------------------------------
+
+def test_scheduler_shed_expired_visible_and_deterministic():
+    """Frames whose deadline expired past the horizon are dropped AND
+    counted (shed counter, deadline miss, terminal wait sample); the
+    whole decision replayed under the same fake clock is identical."""
+    cfg = SchedulerCfg(max_batch=2, deadline_ms={B: 100.0},
+                       shed_horizon_ms=200.0)
+    runs = []
+    for _ in range(2):
+        qs, sched = QoSQueues(maxlen=64), TickScheduler(cfg)
+        for i in range(6):
+            t = i * 0.05
+            qs.submit(i, _zf(), B, now=t, deadline_s=t + 0.1)
+        batch = sched.admit(qs, 0.45)
+        shed = sched.pop_shed()
+        runs.append(([f.seq for f in batch], [f.seq for f in shed],
+                     dict(sched.deadline_misses), qs.counters(),
+                     sched.wait_percentiles()))
+    assert runs[0] == runs[1], "shed decisions must be bit-reproducible"
+    batch_seqs, shed_seqs, misses, counters, _ = runs[0]
+    # deadlines .10/.15/.20/.25/.30/.35; shed iff now > deadline + .2
+    assert shed_seqs == [0, 1, 2]
+    assert batch_seqs == [3, 4]              # admitted (late: misses)
+    assert counters["shed_expired"]["bulk"] == 3
+    assert misses["bulk"] == 5               # 3 starved-in-queue + 2 late
+    assert sched.pop_shed() == []            # consumed
+    # conservation: 6 submitted == 2 admitted + 3 shed + 1 still queued
+    assert qs.depths()["bulk"] == 1
+
+
+def test_scheduler_no_shed_when_horizon_none():
+    cfg = SchedulerCfg(max_batch=1, deadline_ms={B: 100.0})
+    qs, sched = QoSQueues(maxlen=8), TickScheduler(cfg)
+    qs.submit(0, _zf(), B, now=0.0, deadline_s=0.1)
+    batch = sched.admit(qs, 1e9)             # absurdly late: still served
+    assert len(batch) == 1 and sched.pop_shed() == []
+    assert qs.counters()["shed_expired"]["bulk"] == 0
+
+
+# ---------------------------------------------------------------------------
+# TokenBucket: deterministic admission control
+# ---------------------------------------------------------------------------
+
+def test_token_bucket_deterministic_refill():
+    tb = TokenBucket(10.0, 2, now=0.0)       # 10 tokens/s, burst 2
+    assert tb.try_take(0.0) and tb.try_take(0.0)
+    assert not tb.try_take(0.0)
+    assert tb.retry_after_s(0.0) == pytest.approx(0.1)
+    assert tb.try_take(0.1)                  # exactly one token refilled
+    assert not tb.try_take(0.1)
+    tb.give_back()                           # refund (queue refused it)
+    assert tb.try_take(0.1)
+    assert tb.try_take(10.0) and tb.try_take(10.0)   # capped at burst
+    assert not tb.try_take(10.0)
+    with pytest.raises(ValueError):
+        TokenBucket(0.0, 2)
+    with pytest.raises(ValueError):
+        TokenBucket(1.0, 0)
+
+
+# ---------------------------------------------------------------------------
 # StreamServer (stepped, fake clock): parity, pipelining, QoS overload
 # ---------------------------------------------------------------------------
 
 def _server(params, *, capacity=8, max_batch=8, clock=None, refine=0,
-            deadline_ms=None, queue_maxlen=256, head=None, **gw_kw):
+            deadline_ms=None, queue_maxlen=256, queue_maxlens=None,
+            head=None, rate_limit=None, sched_kw=None, **gw_kw):
     kw = dict(refine_every=refine, **gw_kw)
     if head:
         kw.update(head_init=head[0], head_apply=head[1])
     gw = _gw(params, capacity=capacity, clock=clock, **kw)
     cfg = SchedulerCfg(max_batch=max_batch,
                        **({"deadline_ms": deadline_ms} if deadline_ms
-                          else {}))
-    return StreamServer(gw, cfg=cfg, queue_maxlen=queue_maxlen)
+                          else {}),
+                       **(sched_kw or {}))
+    return StreamServer(gw, cfg=cfg, queue_maxlen=queue_maxlen,
+                        queue_maxlens=queue_maxlens, rate_limit=rate_limit)
 
 
 def test_server_pipelined_serving_bit_matches_sequential_gateway(params):
@@ -553,6 +779,227 @@ def test_server_fake_clock_queue_waits_are_exact(params):
     events = srv.gateway._sessions[sid].sync.events
     assert [e.kind for e in events] == ["weights"]
     assert events[0].at_s == 0.25
+
+
+# ---------------------------------------------------------------------------
+# Server: aging bound, shedding, rate limits (all on the fake clock)
+# ---------------------------------------------------------------------------
+
+def _conservation(st):
+    """The extended invariant, per class, at THIS snapshot."""
+    for c in st.frames_submitted:
+        assert st.frames_submitted[c] == (
+            st.frames_served[c] + st.queue_depth[c]
+            + st.in_flight[c] + st.shed_expired[c]), (c, st)
+    assert st.preempted == st.requeued
+
+
+def test_server_bulk_bounded_wait_under_sustained_flood(params):
+    """The whole starvation fix end-to-end: sustained INTERACTIVE load
+    saturates every tick, yet the BULK frame is served with its queue
+    wait exactly ``max_wait_ms`` on the fake clock."""
+    clock = FakeClock()
+    srv = _server(params, capacity=4, max_batch=2, clock=clock,
+                  deadline_ms={B: 10_000.0},
+                  sched_kw={"max_wait_ms": {B: 300.0}})
+    rng = np.random.default_rng(21)
+    sid_i = srv.open_session(qos=I).sid
+    sid_b = srv.open_session(qos=B).sid
+    srv.submit(sid_b, _req(rng, 0))
+    for t in range(8):
+        srv.submit(sid_i, _req(rng, 2 * t))
+        srv.submit(sid_i, _req(rng, 2 * t + 1))
+        srv.step()
+        clock.t += 0.1
+        _conservation(srv.stats())
+    st = srv.stats()
+    assert st.frames_served["bulk"] == 1, "BULK starved despite aging"
+    assert st.promoted["bulk"] == 1
+    # promoted at the first stage() after aging past 300 ms (t=0.3),
+    # admitted at the next tick (t=0.4): the documented bound is
+    # max_wait + one stage->admit window, and on the fake clock it is
+    # EXACT — preempted on ticks 1-3, promotion-immune afterwards
+    assert st.queue_wait_ms["bulk"]["max"] == 400.0
+    assert st.preempted["bulk"] == st.requeued["bulk"] == 3
+
+
+def test_server_shed_visible_conservation_and_close(params):
+    """Expired frames are dropped VISIBLY: counted in ``shed_expired``
+    and ``deadline_misses`` (starved-in-queue misses used to be
+    invisible), the extended conservation invariant holds at every
+    snapshot, and a draining close completes once every accepted frame
+    is served or shed."""
+    clock = FakeClock()
+    srv = _server(params, capacity=2, max_batch=2, clock=clock,
+                  deadline_ms={B: 100.0},
+                  sched_kw={"shed_horizon_ms": 200.0,
+                            "max_wait_ms": {B: None}})
+    rng = np.random.default_rng(22)
+    sid = srv.open_session(qos=B).sid
+    for t in range(6):
+        srv.submit(sid, _req(rng, t))
+    srv.step()                # admits 2, stages 2, 2 still queued
+    _conservation(srv.stats())
+    clock.t = 10.0            # everything queued is long past deadline
+    srv.step()                # shed pass drops the 2 QUEUED frames
+    _conservation(srv.stats())
+    while srv.stats().in_flight != {c: 0 for c in ("interactive",
+                                                   "standard", "bulk")}:
+        srv.step()
+    st = srv.stats()
+    assert st.shed_expired["bulk"] == 2
+    assert st.frames_served["bulk"] == 4      # 2 early + 2 staged (late)
+    assert st.deadline_misses["bulk"] >= 4    # 2 shed + 2 admitted late
+    _conservation(st)
+    srv.close_session(sid)                    # completes: served + shed
+    assert srv.gateway.stats().sessions_closed == 1
+
+
+def test_server_rate_limit_token_bucket(params):
+    """Per-session admission control on the fake clock: refusals are
+    typed, counted per class, never enter ``frames_submitted``, and a
+    queue-refused frame refunds its token."""
+    clock = FakeClock()
+    srv = _server(params, capacity=4, max_batch=2, clock=clock,
+                  queue_maxlen=2)
+    rng = np.random.default_rng(23)
+    sid = srv.open_session(qos=S, rate_limit=(10.0, 2)).sid
+    free = srv.open_session(qos=S).sid       # inherits server default: none
+    srv.submit(sid, _req(rng, 0))
+    srv.submit(sid, _req(rng, 1))            # burst of 2 OK
+    with pytest.raises(RateLimitError) as ei:
+        srv.submit(sid, _req(rng, 2))
+    assert ei.value.retry_after_s == pytest.approx(0.1)
+    st = srv.stats()
+    assert st.rejected_rate_limited["standard"] == 1
+    assert st.frames_submitted["standard"] == 2
+    _conservation(st)
+    for t in range(5):                       # unlimited session unaffected
+        try:
+            srv.submit(free, _req(rng, t))
+        except QueueFullError:
+            break
+    clock.t = 0.1                            # exactly one token refills
+    # the bounded queue is FULL (maxlen 2): the refusal must refund the
+    # token so the retry after serving succeeds without waiting again
+    with pytest.raises(QueueFullError):
+        srv.submit(sid, _req(rng, 2))
+    while srv.stats().queue_depth["standard"] > 0 or \
+            sum(srv.stats().in_flight.values()):
+        srv.step()
+    srv.submit(sid, _req(rng, 2))            # refunded token spends here
+    with pytest.raises(RateLimitError):
+        srv.submit(sid, _req(rng, 3))
+    st = srv.stats()
+    assert st.rejected_rate_limited["standard"] == 2
+    assert st.rejected_full["standard"] == 2   # free's probe + the refund
+    _conservation(st)
+
+
+def test_server_rate_limit_default_applies_to_all_sessions(params):
+    clock = FakeClock()
+    srv = _server(params, capacity=2, max_batch=2, clock=clock,
+                  rate_limit=(1.0, 1))
+    rng = np.random.default_rng(24)
+    sid = srv.open_session(qos=S).sid        # inherits (1.0, 1)
+    off = srv.open_session(qos=S, rate_limit=None).sid   # opted out
+    srv.submit(sid, _req(rng, 0))
+    with pytest.raises(RateLimitError):
+        srv.submit(sid, _req(rng, 1))
+    for t in range(3):
+        srv.submit(off, _req(rng, t))        # no bucket, no refusal
+    assert srv.stats().rejected_rate_limited["standard"] == 1
+    while srv.served_total < 4:
+        srv.step()
+
+
+def test_server_start_stop_race_single_serving_thread(params):
+    """start() used to be check-then-act: two racing callers could both
+    see a dead thread and spawn two serving loops."""
+    srv = _server(params, capacity=2, max_batch=2)
+    n = 8
+    barrier = threading.Barrier(n)
+
+    def go():
+        barrier.wait()
+        srv.start()
+
+    threads = [threading.Thread(target=go) for _ in range(n)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    alive = [t for t in threading.enumerate()
+             if t.name == "streamsplit-serve" and t.is_alive()]
+    assert len(alive) == 1, f"{len(alive)} serving loops spawned"
+    srv.stop()
+    assert not any(t.is_alive() for t in alive)
+
+
+# ---------------------------------------------------------------------------
+# Property-style stress: extended conservation across concurrent snapshots
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_stats_conservation_under_concurrent_stress(params, seed):
+    """Producers, the serving thread, a closing/reopening tenant and a
+    stats() poller all race, with shedding, rate limits, preemption and
+    tight deadlines live.  The extended invariant (``submitted ==
+    served + queue_depth + in_flight + shed_expired`` per class,
+    ``preempted == requeued``) must hold at EVERY concurrent snapshot,
+    and the books must close exactly at quiescence."""
+    srv = _server(params, capacity=8, max_batch=4, queue_maxlen=16,
+                  deadline_ms={I: 50.0, S: 50.0, B: 20.0},
+                  sched_kw={"shed_horizon_ms": 30.0,
+                            "max_wait_ms": {B: 40.0}},
+                  rate_limit=(2000.0, 8))
+    errors: list = []
+    stop_polling = threading.Event()
+
+    def poller():
+        while not stop_polling.is_set():
+            try:
+                _conservation(srv.stats())
+            except BaseException as e:       # surface in the main thread
+                errors.append(e)
+                return
+
+    def producer(worker):
+        rng = np.random.default_rng(3000 + 10 * seed + worker)
+        for round_ in range(2):              # churn: open -> stream -> close
+            sid = srv.open_session(qos=[I, S, B][worker % 3]).sid
+            for t in range(40):
+                try:
+                    srv.submit(sid, _req(rng, round_ * 100 + t))
+                except (QueueFullError, RateLimitError):
+                    pass                     # typed refusals: fine, counted
+                if rng.random() < 0.2:
+                    time.sleep(1e-3)
+            srv.close_session(sid, timeout=60.0)
+
+    with srv:
+        threads = [threading.Thread(target=producer, args=(w,))
+                   for w in range(3)]
+        poll = threading.Thread(target=poller)
+        poll.start()
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        stop_polling.set()
+        poll.join()
+    if errors:
+        raise errors[0]
+    st = srv.stats()
+    _conservation(st)
+    # quiescence: the books close exactly — nothing queued or in flight,
+    # every accepted frame either served or visibly shed
+    assert sum(st.queue_depth.values()) == 0
+    assert sum(st.in_flight.values()) == 0
+    for c in st.frames_submitted:
+        assert st.frames_submitted[c] == (st.frames_served[c]
+                                          + st.shed_expired[c]), (c, st)
+    assert srv.gateway.stats().sessions_closed == 6
 
 
 # ---------------------------------------------------------------------------
