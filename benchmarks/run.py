@@ -5,10 +5,12 @@ KB, ms, mJ, %, correlation r, ... — the derived column carries the paper's
 number for side-by-side comparison), and writes the machine-readable
 serving-perf trajectories CI uploads as artifacts so performance is
 tracked across PRs: ``BENCH_gateway.json`` (frames/s, syncs/tick, staged
-H2D bytes, p50/p95 tick latency at N ∈ {32, 64}; docs/PERF.md) and
+H2D bytes, p50/p95 tick latency at N ∈ {32, 64}; docs/PERF.md),
 ``BENCH_stream.json`` (sustained streaming frames/s, per-class p95 queue
 waits, deadline-miss rates, preemption counts, syncs/tick;
-docs/STREAMING.md).
+docs/STREAMING.md), and ``BENCH_cluster.json`` (federation drain lane:
+migration pause p50/p95 ms, frames/s before/during/after a live drain,
+migrated volume; docs/FEDERATION.md).
 
     PYTHONPATH=src python -m benchmarks.run [--quick|--smoke] [--only PREFIX]
 
@@ -34,8 +36,9 @@ def main() -> None:
     args = ap.parse_args()
     quick = args.quick or args.smoke
 
-    from benchmarks import (fleet_serve, gateway_serve, kernels_bench,
-                            quality_tables, stream_serve, system_tables)
+    from benchmarks import (cluster_serve, fleet_serve, gateway_serve,
+                            kernels_bench, quality_tables, stream_serve,
+                            system_tables)
     print("name,us_per_call,derived")
     t0 = time.time()
 
@@ -49,11 +52,17 @@ def main() -> None:
         path = stream_serve.write_bench_json(out)
         print(f"# wrote {path}", file=sys.stderr)
 
+    def cluster():
+        out = cluster_serve.run_all(quick=quick, smoke=args.smoke)
+        path = cluster_serve.write_bench_json(out)
+        print(f"# wrote {path}", file=sys.stderr)
+
     suites = [("system", system_tables.run_all),
               ("kernels", kernels_bench.run_all),
               ("fleet", lambda: fleet_serve.run_all(quick=quick)),
               ("gateway", gateway),
-              ("stream", stream)]
+              ("stream", stream),
+              ("cluster", cluster)]
     if not quick:
         suites.insert(1, ("quality", quality_tables.run_all))
     for name, fn in suites:

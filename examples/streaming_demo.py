@@ -13,6 +13,11 @@ Three client tiers share one fleet here: a couple of latency-critical
 INTERACTIVE microphones, a few STANDARD monitors, and a crowd of BULK
 backfill uploaders that soak up whatever capacity is left.
 
+One server is one gateway; to scale past a single gateway — and drain
+one live for a rolling restart without dropping a stream — see
+``examples/cluster_demo.py`` (the ``GatewayCluster`` federation,
+docs/FEDERATION.md).
+
     PYTHONPATH=src python examples/streaming_demo.py
 """
 import threading

@@ -11,9 +11,10 @@ from repro.core.fleet_backend import (FleetBackend, HostFleetBackend,
 from repro.api.policies import (EntropyThresholdPolicy, FixedKPolicy,
                                 RLPolicy, RulePolicy, SplitPolicy,
                                 make_policy)
-from repro.api.types import (AdmissionError, FrameRequest, FrameResult,
-                             GatewayStats, QoSClass, SessionInfo,
-                             StreamStats)
+from repro.api.types import (AdmissionError, ClusterStats, FrameRequest,
+                             FrameResult, GatewayStats, QoSClass,
+                             ServerSessionSnapshot, SessionInfo,
+                             SessionSnapshot, StreamStats)
 
 __all__ = [
     "StreamSplitGateway",
@@ -23,4 +24,5 @@ __all__ = [
     "EntropyThresholdPolicy",
     "FrameRequest", "FrameResult", "SessionInfo", "GatewayStats",
     "QoSClass", "AdmissionError", "StreamStats",
+    "SessionSnapshot", "ServerSessionSnapshot", "ClusterStats",
 ]

@@ -56,7 +56,8 @@ import numpy as np
 
 from repro.api.policies import SplitPolicy
 from repro.api.types import (AdmissionError, FrameRequest, FrameResult,
-                             GatewayStats, QoSClass, SessionInfo)
+                             GatewayStats, QoSClass, SessionInfo,
+                             SessionSnapshot)
 from repro.core.env import EdgeCloudEnv
 from repro.core.fleet import FleetFullError, HostFleetBackend, pad_pow2
 from repro.core.splitter import SplitEngine
@@ -178,6 +179,8 @@ class StreamSplitGateway:
         self._frames = 0
         self._opened = 0
         self._closed = 0
+        self._exported = 0      # sessions migrated out (repro.cluster)
+        self._imported = 0      # sessions migrated in
         self._refusals = 0
         self._dispatches = 0
         self._wire_bytes = 0
@@ -201,10 +204,10 @@ class StreamSplitGateway:
         self._collect_seq = 0
 
     # -- session lifecycle ---------------------------------------------------
-    def open_session(self, platform="pi4",
-                     qos: QoSClass = QoSClass.STANDARD) -> SessionInfo:
-        """Admit a session into the fleet; raises ``AdmissionError`` (a
-        ``FleetFullError``) when its QoS class finds no headroom."""
+    def _admit_row(self, qos: QoSClass) -> int:
+        """QoS-headroom-checked fleet-row admission shared by
+        ``open_session`` and ``import_session`` — a migrating session
+        obeys the same reserve policy as a fresh one."""
         free = self.backend.capacity - self.backend.n_active
         need = {QoSClass.INTERACTIVE: 1,
                 QoSClass.STANDARD: 1 + self.qos_reserve,
@@ -214,11 +217,17 @@ class StreamSplitGateway:
             raise AdmissionError(qos, self.backend.n_active,
                                  self.backend.capacity)
         try:
-            sid = self.backend.admit()
+            return self.backend.admit()
         except FleetFullError:
             self._refusals += 1
             raise AdmissionError(qos, self.backend.n_active,
                                  self.backend.capacity) from None
+
+    def open_session(self, platform="pi4",
+                     qos: QoSClass = QoSClass.STANDARD) -> SessionInfo:
+        """Admit a session into the fleet; raises ``AdmissionError`` (a
+        ``FleetFullError``) when its QoS class finds no headroom."""
+        sid = self._admit_row(qos)
         self._sessions[sid] = _Session(sid, platform, qos, self.sync_cfg)
         self._opened += 1
         return self.session(sid)
@@ -245,6 +254,69 @@ class StreamSplitGateway:
         if sid not in self._sessions:
             raise KeyError(f"session {sid} is not open")
         return self._sessions[sid]
+
+    # -- live migration seams (repro.cluster; docs/FEDERATION.md) ------------
+    def export_session(self, sid, *, remove: bool = True) -> SessionSnapshot:
+        """Freeze everything this session *is* into a ``SessionSnapshot``:
+        per-session books, lazy-sync protocol state, and the fleet ring
+        row (host representation — implants into any backend kind).
+
+        ``remove=True`` (the migration move) also evicts the row —
+        counted in ``sessions_exported``, NOT ``sessions_closed``: the
+        stream continues elsewhere.  ``remove=False`` is the
+        non-destructive copy the cluster's failure-recovery checkpoints
+        use.  Pending (submitted-but-unticked) frames are NOT part of a
+        gateway snapshot — tick or discard them first; exporting under
+        them raises instead of silently dropping frames."""
+        s = self._require(sid)
+        if any(p[0] == sid for p in self._pending):
+            raise RuntimeError(
+                f"session {sid} has pending frames awaiting tick(): a "
+                "snapshot taken now would silently drop them — tick "
+                "first (the streaming runtime quiesces its pipeline "
+                "before exporting)")
+        ring_z, ring_t, ring_label, newest = self.backend.export_row(sid)
+        snap = SessionSnapshot(
+            platform=s.platform, qos=s.qos, frames=s.frames,
+            wire_bytes=s.wire_bytes, transitions=s.transitions,
+            last_k=s.last_k,
+            sync_cfg=s.sync.cfg, sync_last_gmm=s.sync.last_gmm,
+            sync_last_weights=s.sync.last_weights,
+            sync_total_bytes=s.sync.total_bytes,
+            sync_total_energy_j=s.sync.total_energy_j,
+            sync_events=tuple(s.sync.events),
+            ring_z=ring_z, ring_t=ring_t, ring_label=ring_label,
+            ring_newest=newest)
+        if remove:
+            self.backend.evict(sid)
+            del self._sessions[sid]
+            self._exported += 1
+        return snap
+
+    def import_session(self, snap: SessionSnapshot) -> SessionInfo:
+        """Restore an exported session into THIS gateway: admit a fleet
+        row under the same QoS headroom policy as ``open_session``
+        (raises ``AdmissionError`` when the class finds no room),
+        implant the ring row, and resume the per-session books and
+        lazy-sync cadence exactly where the source left them.  The
+        session gets a fresh local ``sid`` — cross-gateway identity is
+        the cluster's job (``repro.cluster``), not the row index's."""
+        sid = self._admit_row(snap.qos)
+        s = _Session(sid, snap.platform, snap.qos, snap.sync_cfg)
+        s.frames = snap.frames
+        s.wire_bytes = snap.wire_bytes
+        s.transitions = snap.transitions
+        s.last_k = snap.last_k
+        s.sync.last_gmm = snap.sync_last_gmm
+        s.sync.last_weights = snap.sync_last_weights
+        s.sync.total_bytes = snap.sync_total_bytes
+        s.sync.total_energy_j = snap.sync_total_energy_j
+        s.sync.events = list(snap.sync_events)
+        self.backend.import_row(sid, snap.ring_z, snap.ring_t,
+                                snap.ring_label, snap.ring_newest)
+        self._sessions[sid] = s
+        self._imported += 1
+        return self.session(sid)
 
     # -- ingest --------------------------------------------------------------
     def validate_mel(self, mel) -> np.ndarray:
@@ -627,4 +699,6 @@ class StreamSplitGateway:
             d2h_copies_per_tick=self._tick_d2h,
             staged_h2d_bytes=self._staged_h2d,
             uptime_s=self._clock() - self._t_start,
-            last_tick_ms=self._last_tick_ms)
+            last_tick_ms=self._last_tick_ms,
+            sessions_exported=self._exported,
+            sessions_imported=self._imported)

@@ -9,12 +9,14 @@ mutable state.
 """
 from __future__ import annotations
 
+import pickle
 from dataclasses import dataclass
 from enum import Enum
 
 import numpy as np
 
 from repro.core.fleet import FleetFullError
+from repro.core.sync import SyncCfg, SyncEvent
 
 
 class QoSClass(Enum):
@@ -106,6 +108,96 @@ class SessionInfo:
 
 
 @dataclass(frozen=True)
+class QueuedFrameSnapshot:
+    """One queued-but-unserved frame inside a ``SessionSnapshot`` —
+    enough to re-enqueue it on another gateway with its ORIGINAL arrival
+    time and deadline (migration must not grant waiting frames a fresh
+    deadline budget, nor steal the wait they already paid)."""
+
+    frame: FrameRequest
+    enq_s: float               # original submit time (caller clock)
+    deadline_s: float          # original deadline — survives migration
+    preemptions: int = 0
+    promoted: bool = False
+    weight: float = 1.0
+
+
+@dataclass(frozen=True)
+class ServerSessionSnapshot:
+    """The streaming-runtime half of a ``SessionSnapshot``: per-session
+    conservation books, fair-share weight, token-bucket level, and every
+    frame still waiting in the QoS queues (oldest first)."""
+
+    submitted: int             # frames accepted into the queues
+    served: int                # frames delivered as FrameResults
+    shed: int                  # frames visibly shed past the horizon
+    weight: float              # STANDARD DRR fair-share weight
+    # (rate_per_s, burst, tokens, last_refill_s) or None — the bucket
+    # level migrates so a rate-limited tenant cannot reset its budget by
+    # riding a rebalance
+    bucket: tuple | None = None
+    queued: tuple = ()         # QueuedFrameSnapshot, oldest first
+
+
+@dataclass(frozen=True)
+class SessionSnapshot:
+    """Everything one session *is*, frozen and serializable — the unit
+    of live migration between gateways (``repro.cluster``;
+    docs/FEDERATION.md).
+
+    Three layers: the gateway's per-session books (frames, wire bytes,
+    split transitions, last k), the lazy-sync protocol counters
+    (``core/sync.py`` — cadence state plus emitted events, so the
+    downlink timeline continues instead of restarting), and the fleet
+    ring row (``(W, d)`` embeddings + timestamps + labels + newest, in
+    the host representation so a row exported from any ``FleetBackend``
+    implants into any other).  ``server`` carries the streaming
+    runtime's half when the session was exported from a ``StreamServer``
+    (None from a bare gateway).  Restoring a snapshot onto a fresh
+    gateway and replaying the same admitted schedule reproduces every
+    embedding and refine loss bit-for-bit (``tests/test_cluster.py``'s
+    sequential-replay oracle)."""
+
+    platform: str
+    qos: QoSClass
+    # gateway per-session books
+    frames: int
+    wire_bytes: int
+    transitions: int
+    last_k: int
+    # lazy-sync protocol state (core/sync.py)
+    sync_cfg: SyncCfg
+    sync_last_gmm: int
+    sync_last_weights: int
+    sync_total_bytes: int
+    sync_total_energy_j: float
+    sync_events: tuple         # emitted SyncEvents, oldest first
+    # fleet ring row (host representation; see FleetBackend.export_row)
+    ring_z: np.ndarray         # (W, d) float32
+    ring_t: np.ndarray         # (W,) int64, T_SENTINEL marks empty slots
+    ring_label: np.ndarray     # (W,) int64
+    ring_newest: int
+    server: ServerSessionSnapshot | None = None
+    version: int = 1
+
+    def to_bytes(self) -> bytes:
+        """Wire form of the migration transfer (also what the cluster
+        meters as ``ClusterStats.migrated_bytes``)."""
+        return pickle.dumps(self, protocol=pickle.HIGHEST_PROTOCOL)
+
+    @staticmethod
+    def from_bytes(payload: bytes) -> "SessionSnapshot":
+        snap = pickle.loads(payload)
+        if not isinstance(snap, SessionSnapshot):
+            raise TypeError("payload is not a SessionSnapshot")
+        return snap
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.to_bytes())
+
+
+@dataclass(frozen=True)
 class GatewayStats:
     """Aggregate serving-plane counters (one pipeline, one scoreboard)."""
 
@@ -143,6 +235,11 @@ class GatewayStats:
     # INCLUDES the next tick's interleaved staging/launch — it is the
     # tick's in-flight lifetime, not its exclusive compute cost.
     last_tick_ms: float = 0.0
+    # live-migration seams (repro.cluster): sessions that left/arrived
+    # via export_session/import_session — distinct from opened/closed, a
+    # migration is neither an admission decision nor a client departure
+    sessions_exported: int = 0
+    sessions_imported: int = 0
 
     @property
     def frames_per_dispatch(self) -> float:
@@ -194,3 +291,53 @@ class StreamStats:
     #                            between submit and tick admission (shed
     #                            frames sample their terminal wait too)
     gateway: GatewayStats      # the dispatch-plane scoreboard underneath
+
+
+@dataclass(frozen=True)
+class ClusterStats:
+    """Cluster-wide scoreboard of a ``GatewayCluster``
+    (``repro.cluster``; docs/FEDERATION.md).
+
+    Per-class dicts are keyed by ``QoSClass.value`` strings, like
+    ``StreamStats``.  The cluster keeps its OWN conservation books at
+    the federation boundary — ``submitted`` counts accepted
+    ``GatewayCluster.submit`` calls, ``served``/``shed_expired`` count
+    delivery/shed callbacks — so the invariant survives member death
+    (a dead member's counters are unreadable; the frames it held are
+    never silently forgotten, they land in ``lost_in_flight``):
+
+        submitted == served + queue_depth + in_flight
+                     + shed_expired + lost_in_flight      (per class)
+
+    at every snapshot, where ``queue_depth``/``in_flight`` sum over the
+    LIVE members.  ``conserved`` checks it.
+    """
+
+    members: tuple             # live member names, routing order
+    sessions_open: int
+    submitted: dict            # class -> frames accepted by the cluster
+    served: dict               # class -> FrameResults delivered
+    queue_depth: dict          # class -> waiting frames over live members
+    in_flight: dict            # class -> launched-not-collected frames
+    shed_expired: dict         # class -> visible sheds (cluster-tracked)
+    lost_in_flight: dict       # class -> frames lost to member failure —
+    #                            explicitly counted, never silent
+    rejected_full: dict        # class -> bounded-queue refusals
+    rejected_rate_limited: dict  # class -> token-bucket refusals
+    migrations: int            # sessions moved between members
+    migrated_frames: int       # queued frames replayed on a new owner
+    migrated_bytes: int        # serialized SessionSnapshot payload bytes
+    migration_pause_ms: dict   # {"p50","p95","max"} per-session pause
+    drains: int                # completed drain() calls
+    failures: int              # members lost and recovered from
+    ring_share: dict           # member -> owned fraction of hash space
+    member_stats: dict         # member -> StreamStats (live members)
+
+    @property
+    def conserved(self) -> bool:
+        """The cluster-wide per-class conservation identity."""
+        return all(
+            self.submitted[c] == self.served[c] + self.queue_depth[c]
+            + self.in_flight[c] + self.shed_expired[c]
+            + self.lost_in_flight[c]
+            for c in (q.value for q in QoSClass))

@@ -1,0 +1,25 @@
+"""Multi-gateway federation: consistent-hash routing, live session
+migration, and chaos-tested drain/rebalance (docs/FEDERATION.md).
+
+Public surface::
+
+    from repro.cluster import GatewayCluster, HashRing, SessionSnapshot
+    from repro.cluster import FailureInjector, StragglerMonitor
+"""
+from repro.api.types import (ClusterStats, ServerSessionSnapshot,
+                             SessionSnapshot)
+from repro.cluster.cluster import GatewayCluster
+from repro.cluster.hashing import HashRing
+from repro.runtime.fault import (FailureInjector, StragglerEvent,
+                                 StragglerMonitor)
+
+__all__ = [
+    "ClusterStats",
+    "FailureInjector",
+    "GatewayCluster",
+    "HashRing",
+    "ServerSessionSnapshot",
+    "SessionSnapshot",
+    "StragglerEvent",
+    "StragglerMonitor",
+]

@@ -1,0 +1,589 @@
+"""``GatewayCluster`` — multi-gateway federation over ``StreamServer``s.
+
+One gateway serves one accelerator's fleet; a deployment has several.
+This module federates N member servers behind a single session API:
+
+- **Routing**: every cluster session gets a stable global sid (gsid)
+  and is placed on the member that owns it on a seeded consistent-hash
+  ring (``cluster/hashing.py``).  Placement walks the ring's preference
+  order past full members, so admission only fails when the whole
+  cluster is out of headroom.
+- **Live migration**: ``drain(member)`` (rolling restarts) and
+  ``add_member`` / member failure (rebalance) move sessions between
+  gateways via the ``SessionSnapshot`` seam — ring row, sync books,
+  scheduler books, token-bucket level, and every waiting frame with its
+  ORIGINAL deadline travel together, so a migrated stream is
+  indistinguishable from one that never moved (the bit-parity oracle in
+  ``tests/test_cluster.py`` pins this).
+- **Fault tolerance**: a member that dies mid-step (detected by the
+  exception, injected in tests via ``runtime/fault.FailureInjector``)
+  is removed from the ring; its sessions resume on survivors from the
+  last periodic checkpoint (``snapshot_every``).  Frames that were
+  queued or in flight on the dead member are counted — never silently
+  dropped — in ``ClusterStats.lost_in_flight``, which is exactly the
+  term that keeps the cluster-wide conservation identity
+
+      submitted == served + queue_depth + in_flight
+                   + shed_expired + lost_in_flight
+
+  true at every ``stats()`` snapshot, including across failures.
+  ``StragglerMonitor`` feeds a slow-member signal that shrinks the
+  member's hash-space share (placement bias; nothing is evicted).
+
+**The cluster owns its members.**  Member servers must be constructed
+WITHOUT their own serving thread running; the cluster drives them
+through the public ``step()`` seam — one ``cluster.step()`` steps every
+live member once, deterministically, which is also why every chaos test
+runs on a fake clock.  All client traffic (open/submit/close) must flow
+through the cluster: a frame submitted directly to a member is invisible
+to the federation books and breaks the conservation identity.
+
+The cluster keeps its OWN books at the federation boundary (counted at
+``submit`` / ``on_result`` / ``on_shed``) instead of summing member
+counters: a dead member's counters vanish with it, and a migrated
+session's would double-count — cluster-level accounting is the only
+representation that survives both.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import replace
+
+import numpy as np
+
+from repro.api.types import AdmissionError, ClusterStats, QoSClass
+from repro.cluster.hashing import HashRing
+from repro.serving.queues import QueueFullError, RateLimitError
+from repro.serving.server import _UNSET
+
+__all__ = ["GatewayCluster"]
+
+
+class _ClusterSession:
+    """Federation-side session record: where the session lives now,
+    plus the cluster's own conservation books for it (these survive
+    migration and member death — member counters do not)."""
+
+    __slots__ = ("gsid", "member", "lsid", "qos", "platform",
+                 "submitted", "served", "shed", "lost")
+
+    def __init__(self, gsid, member, lsid, qos, platform):
+        self.gsid = gsid
+        self.member = member       # current owner's name
+        self.lsid = lsid           # sid on that member (fresh per move)
+        self.qos = qos
+        self.platform = platform
+        self.submitted = 0
+        self.served = 0
+        self.shed = 0
+        self.lost = 0              # counted at member death, cumulative
+
+
+class GatewayCluster:
+    """Federates N ``StreamServer`` members behind one session API.
+
+    Parameters
+    ----------
+    members : ``{name: StreamServer}``.  Servers must not have their
+        serving thread running — the cluster steps them.
+    seed / vnodes : consistent-hash ring determinism knobs
+        (``cluster/hashing.py``).
+    snapshot_every : take a failure-recovery checkpoint of every
+        session each N cluster steps (0 disables; then a member failure
+        loses its sessions entirely — still counted, never silent).
+    on_result : like ``StreamServer``'s — invoked with each
+        ``FrameResult`` re-addressed to the global sid; without it
+        results buffer until ``drain_results()``.
+    injectors : ``{name: FailureInjector}`` — chaos hook; the injector
+        fires at the top of that member's turn in ``step()``.
+    straggler_factory : zero-arg callable returning a fresh
+        ``StragglerMonitor`` per member (None disables detection).
+    straggler_weight : ring weight applied to a flagged member
+        (fraction of a healthy member's hash-space share).
+    timer : step-duration source for the straggler monitors and
+        migration-pause stats (injectable for deterministic tests;
+        defaults to ``time.perf_counter``).
+    """
+
+    def __init__(self, members: dict, *, seed: int = 0, vnodes: int = 64,
+                 snapshot_every: int = 0, on_result=None,
+                 injectors: dict | None = None,
+                 straggler_factory=None, straggler_weight: float = 0.25,
+                 timer=time.perf_counter):
+        if not members:
+            raise ValueError("a cluster needs at least one member")
+        if not 0.0 < straggler_weight <= 1.0:
+            raise ValueError("straggler_weight must be in (0, 1]")
+        self._members: dict = {}
+        self._ring = HashRing(seed=seed, vnodes=vnodes)
+        self._on_result = on_result
+        self._snapshot_every = int(snapshot_every)
+        self._injectors = dict(injectors or {})
+        self._straggler_factory = straggler_factory
+        self._straggler_weight = float(straggler_weight)
+        self._timer = timer
+        self._lock = threading.RLock()
+        # federation books (cumulative; survive migration + death)
+        self._submitted = {q.value: 0 for q in QoSClass}
+        self._served = {q.value: 0 for q in QoSClass}
+        self._shed = {q.value: 0 for q in QoSClass}
+        self._lost = {q.value: 0 for q in QoSClass}
+        self._rejected_full = {q.value: 0 for q in QoSClass}
+        self._rejected_rl = {q.value: 0 for q in QoSClass}
+        self._sessions: dict = {}          # gsid -> _ClusterSession
+        self._local: dict = {}             # (member, lsid) -> gsid
+        self._orig_cb: dict = {}           # name -> pre-interpose hooks
+        self._snaps: dict = {}             # gsid -> last checkpoint
+        self._stragglers: dict = {}        # name -> StragglerMonitor
+        self._results: list = []
+        self._next_gsid = 0
+        self._steps = 0
+        self._migrations = 0
+        self._migrated_frames = 0
+        self._migrated_bytes = 0
+        self._pause_ms: list = []
+        self._drains = 0
+        self._failures = 0
+        self._drained: dict = {}           # name -> server, out of rotation
+        self._dead: dict = {}              # name -> server, postmortem
+        self._lost_sessions: list = []     # gsids dropped at member death
+        self._thread = None
+        self._stopping = False
+        for name, srv in sorted(members.items()):
+            self._admit_member(name, srv)
+
+    # -- membership ----------------------------------------------------------
+    def _admit_member(self, name, srv) -> None:
+        if name in self._members:
+            raise ValueError(f"member {name!r} already in the cluster")
+        if srv.stats().running:
+            raise ValueError(
+                f"member {name!r} has its own serving thread — the "
+                "cluster owns stepping; construct members unstarted")
+        # interpose on the member's delivery callbacks: the federation
+        # books count at exactly the instants the member's do, under
+        # the cluster lock (step() holds it; the RLock re-enters).  The
+        # originals are kept so leaving the cluster (drain, death)
+        # un-wraps — a drained member that rejoins via add_member must
+        # not end up double-wrapped (every frame counted twice)
+        prev_r, prev_s = srv._on_result, srv._on_shed
+        self._orig_cb[name] = (prev_r, prev_s)
+        def on_result(r, _n=name, _p=prev_r):
+            self._count_result(_n, r)
+            if _p is not None:
+                _p(r)
+        def on_shed(qf, _n=name, _p=prev_s):
+            self._count_shed(_n, qf)
+            if _p is not None:
+                _p(qf)
+        srv._on_result = on_result
+        srv._on_shed = on_shed
+        self._members[name] = srv
+        self._ring.add(name)
+        if self._straggler_factory is not None:
+            self._stragglers[name] = self._straggler_factory()
+
+    def add_member(self, name, srv) -> int:
+        """Join a member and rebalance: ONLY sessions whose ring
+        ownership moved to the newcomer migrate (the consistent-hash
+        property).  Returns how many moved."""
+        with self._lock:
+            self._admit_member(name, srv)
+            return self._rebalance()
+
+    def drain(self, name) -> int:
+        """Rolling-restart move: stop admission to the member (it
+        leaves the ring), quiesce its in-flight tick, then migrate
+        every one of its sessions — books, ring row, token bucket and
+        queued frames with their original deadlines — to ring-chosen
+        survivors.  No stream is dropped; the member's server object is
+        parked in case it returns via ``add_member``.  Returns sessions
+        migrated."""
+        with self._lock:
+            srv = self._members.get(name)
+            if srv is None:
+                raise KeyError(f"member {name!r} not in the cluster")
+            homed = [g for g, cs in self._sessions.items()
+                     if cs.member == name]
+            if homed and len(self._members) < 2:
+                raise RuntimeError(
+                    "cannot drain the only member while it serves "
+                    "sessions — add_member() a target first")
+            if self._ring.has(name):
+                self._ring.remove(name)
+            srv.quiesce()
+            for gsid in homed:
+                self._migrate(gsid)
+            self._drains += 1
+            self._drained[name] = self._members.pop(name)
+            srv._on_result, srv._on_shed = self._orig_cb.pop(name)
+            self._stragglers.pop(name, None)
+            return len(homed)
+
+    # -- session API (any thread) --------------------------------------------
+    def open_session(self, platform="pi4",
+                     qos: QoSClass = QoSClass.STANDARD, *,
+                     weight: float = 1.0, rate_limit=_UNSET):
+        """Admit a session cluster-wide: place it on its ring owner,
+        walking the preference order past members without headroom.
+        Returns ``SessionInfo`` whose ``sid`` is the GLOBAL session id
+        — valid at ``submit``/``close_session`` on this cluster only."""
+        with self._lock:
+            gsid = self._next_gsid
+            self._next_gsid += 1
+            kw = {} if rate_limit is _UNSET else {"rate_limit": rate_limit}
+            last = None
+            for name in self._ring.preference(gsid):
+                srv = self._members.get(name)
+                if srv is None:
+                    continue
+                try:
+                    info = srv.open_session(platform=platform, qos=qos,
+                                            weight=weight, **kw)
+                except AdmissionError as e:
+                    last = e
+                    continue
+                cs = _ClusterSession(gsid, name, info.sid, qos, platform)
+                self._sessions[gsid] = cs
+                self._local[(name, info.sid)] = gsid
+                return replace(info, sid=gsid)
+            if last is not None:
+                raise last
+            raise RuntimeError("no live members in the cluster")
+
+    def submit(self, gsid, frame) -> None:
+        """Route one frame to the session's current owner.  The same
+        typed refusals as ``StreamServer.submit`` (``RateLimitError``,
+        ``QueueFullError``), counted at the federation boundary; an
+        accepted frame enters the cluster books here."""
+        with self._lock:
+            cs = self._require(gsid)
+            srv = self._members[cs.member]
+            try:
+                srv.submit(cs.lsid, frame)
+            except RateLimitError:
+                self._rejected_rl[cs.qos.value] += 1
+                raise
+            except QueueFullError:
+                self._rejected_full[cs.qos.value] += 1
+                raise
+            cs.submitted += 1
+            self._submitted[cs.qos.value] += 1
+
+    def close_session(self, gsid) -> None:
+        """Graceful cluster-wide close: the owner drains every accepted
+        frame (serve or visible shed), then evicts the row.  With no
+        serving thread on the member, the close is driven to completion
+        here via the member's caller-driven ``step()`` fallback."""
+        with self._lock:
+            cs = self._require(gsid)
+            self._members[cs.member].close_session(cs.lsid)
+            del self._local[(cs.member, cs.lsid)]
+            del self._sessions[gsid]
+            self._snaps.pop(gsid, None)
+
+    def session_member(self, gsid):
+        """The member currently serving the session (observability —
+        tests assert who owns what across migrations)."""
+        with self._lock:
+            return self._require(gsid).member
+
+    def _require(self, gsid) -> _ClusterSession:
+        cs = self._sessions.get(gsid)
+        if cs is None:
+            raise KeyError(f"cluster session {gsid} is not open")
+        return cs
+
+    # -- federation books (member callbacks) ---------------------------------
+    def _count_result(self, name, r) -> None:
+        with self._lock:
+            gsid = self._local.get((name, r.sid))
+            if gsid is None:       # not cluster-routed (shouldn't happen)
+                return
+            cs = self._sessions[gsid]
+            cs.served += 1
+            self._served[cs.qos.value] += 1
+            out = replace(r, sid=gsid)
+            if self._on_result is None:
+                self._results.append(out)
+                return
+        try:
+            self._on_result(out)
+        except Exception:          # user code must not kill stepping
+            import traceback
+            traceback.print_exc()
+
+    def _count_shed(self, name, qf) -> None:
+        with self._lock:
+            gsid = self._local.get((name, qf.sid))
+            if gsid is None:
+                return
+            cs = self._sessions[gsid]
+            cs.shed += 1
+            self._shed[cs.qos.value] += 1
+
+    def drain_results(self) -> list:
+        """All ``FrameResult``s (global sids) since the last drain —
+        only populated when no ``on_result`` callback is installed."""
+        with self._lock:
+            out, self._results = self._results, []
+        return out
+
+    # -- the stepping loop ---------------------------------------------------
+    def step(self) -> int:
+        """One cluster iteration: step every live member once (sorted
+        name order — deterministic), with the chaos hooks around each
+        turn: the member's ``FailureInjector`` may kill it (handled as
+        a real death), its step duration feeds the ``StragglerMonitor``
+        (a flagged member's ring share shrinks), and every
+        ``snapshot_every`` steps each session is checkpointed for
+        failure recovery.  Returns frames delivered cluster-wide."""
+        served = 0
+        with self._lock:
+            self._steps += 1
+            for name in sorted(self._members):
+                srv = self._members[name]
+                t0 = self._timer()
+                try:
+                    inj = self._injectors.get(name)
+                    if inj is not None:
+                        inj.maybe_fail(self._steps)
+                    served += srv.step()
+                except Exception as e:      # noqa: BLE001 — death seam
+                    self._member_failed(name, e)
+                    continue
+                mon = self._stragglers.get(name)
+                if mon is not None and mon.record(self._steps,
+                                                  self._timer() - t0):
+                    if (self._ring.has(name) and self._ring.weight(name)
+                            != self._straggler_weight):
+                        self._ring.set_weight(name,
+                                              self._straggler_weight)
+            if (self._snapshot_every
+                    and self._steps % self._snapshot_every == 0):
+                self._checkpoint_all()
+        return served
+
+    def pump(self, max_steps: int = 100_000) -> int:
+        """Step until no member holds queued, staged, or in-flight work
+        — the stepped-mode drain.  Returns frames delivered."""
+        served = 0
+        for _ in range(max_steps):
+            with self._lock:
+                if not any(s.busy() for s in self._members.values()):
+                    return served
+            served += self.step()
+        raise RuntimeError(f"cluster did not drain in {max_steps} steps")
+
+    def start(self) -> "GatewayCluster":
+        """Background stepping thread (optional — tests and benchmarks
+        drive ``step()``/``pump()`` directly for determinism)."""
+        with self._lock:
+            if self._thread is not None and self._thread.is_alive():
+                return self
+            self._stopping = False
+            self._thread = threading.Thread(target=self._loop,
+                                            name="streamsplit-cluster",
+                                            daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, *, drain: bool = True, timeout: float = 60.0):
+        self._stopping = True
+        t = self._thread
+        if t is not None and t is not threading.current_thread():
+            t.join(timeout)
+            if t.is_alive():
+                raise TimeoutError("cluster stepping thread did not stop")
+        self._thread = None
+        if drain:
+            self.pump()
+        return self
+
+    def _loop(self):
+        while not self._stopping:
+            if self.step() == 0:
+                with self._lock:
+                    idle = not any(s.busy()
+                                   for s in self._members.values())
+                if idle:
+                    time.sleep(0.001)
+
+    # -- migration -----------------------------------------------------------
+    def _owner_live(self, gsid):
+        for name in self._ring.preference(gsid):
+            if name in self._members:
+                return name
+        return None
+
+    def _rebalance(self) -> int:
+        """Move ONLY sessions whose ring ownership changed (membership
+        or weight change) — the consistent-hash contract."""
+        moved = 0
+        for gsid, cs in list(self._sessions.items()):
+            want = self._owner_live(gsid)
+            if want is not None and want != cs.member:
+                self._migrate(gsid)
+                moved += 1
+        return moved
+
+    def _migrate(self, gsid) -> None:
+        """Move one session to its ring-preferred live member: quiesce
+        the source, export (books + row + queued frames leave with
+        their ledger), import at the first member with headroom.  If NO
+        member can take it, the session is restored onto the source and
+        the admission error propagates — a failed migration never loses
+        a stream."""
+        cs = self._sessions[gsid]
+        src_name, src = cs.member, self._members[cs.member]
+        t0 = self._timer()
+        src.quiesce()
+        snap = src.export_session(cs.lsid)
+        del self._local[(src_name, cs.lsid)]
+        last = None
+        for tname in self._ring.preference(gsid):
+            tsrv = self._members.get(tname)
+            if tsrv is None or tname == src_name:
+                continue
+            try:
+                info = tsrv.import_session(snap)
+            except AdmissionError as e:
+                last = e
+                continue
+            cs.member, cs.lsid = tname, info.sid
+            self._local[(tname, info.sid)] = gsid
+            self._migrations += 1
+            self._migrated_frames += (len(snap.server.queued)
+                                      if snap.server else 0)
+            self._migrated_bytes += snap.nbytes
+            self._pause_ms.append((self._timer() - t0) * 1e3)
+            # the old checkpoint predates the move and a destructive
+            # snapshot must never double as one (its queued frames
+            # would double-count against lost_in_flight at a later
+            # failure) — recovery re-checkpoints on the new owner
+            self._snaps.pop(gsid, None)
+            return
+        # nobody could take it: put it back where it came from
+        info = src.import_session(snap)
+        cs.lsid = info.sid
+        self._local[(src_name, info.sid)] = gsid
+        if last is not None:
+            raise last
+        raise RuntimeError(f"no migration target for session {gsid}")
+
+    # -- failure recovery ----------------------------------------------------
+    def _checkpoint_all(self) -> None:
+        quiesced = set()
+        for gsid, cs in list(self._sessions.items()):
+            srv = self._members.get(cs.member)
+            if srv is None:
+                continue
+            if cs.member not in quiesced:   # checkpoint needs no plan
+                srv.quiesce()               # in flight (migration-safe)
+                quiesced.add(cs.member)
+            try:
+                self._snaps[gsid] = srv.checkpoint_session(cs.lsid)
+            except KeyError:
+                pass                        # closing under us
+
+    def _member_failed(self, name, exc) -> None:
+        """A member died mid-step.  Its queued + in-flight frames are
+        gone — counted per session into ``lost_in_flight`` (the books
+        are cluster-side, so the dead member's counters aren't needed)
+        — and every session resumes on a survivor from its last
+        checkpoint.  Sessions without a checkpoint are dropped, visibly
+        (``lost_sessions``)."""
+        self._failures += 1
+        srv = self._members.pop(name)
+        self._dead[name] = srv
+        srv._on_result, srv._on_shed = self._orig_cb.pop(name)
+        self._injectors.pop(name, None)
+        self._stragglers.pop(name, None)
+        if self._ring.has(name):
+            self._ring.remove(name)
+        for gsid, cs in list(self._sessions.items()):
+            if cs.member != name:
+                continue
+            outstanding = cs.submitted - cs.served - cs.shed - cs.lost
+            cs.lost += outstanding
+            self._lost[cs.qos.value] += outstanding
+            del self._local[(name, cs.lsid)]
+            snap = self._snaps.get(gsid)
+            restored = False
+            if snap is not None:
+                for tname in self._ring.preference(gsid):
+                    tsrv = self._members.get(tname)
+                    if tsrv is None:
+                        continue
+                    try:
+                        info = tsrv.import_session(snap)
+                    except AdmissionError:
+                        continue
+                    cs.member, cs.lsid = tname, info.sid
+                    self._local[(tname, info.sid)] = gsid
+                    restored = True
+                    break
+            if not restored:
+                del self._sessions[gsid]
+                self._snaps.pop(gsid, None)
+                self._lost_sessions.append(gsid)
+
+    @property
+    def migration_pauses_ms(self) -> tuple:
+        """Every migration pause so far, in move order (ms) — the
+        percentile summary is in ``stats()``; benchmarks slice this to
+        separate cold (first move to a fresh receiver, compile-heavy)
+        from warm steady-state pauses."""
+        with self._lock:
+            return tuple(self._pause_ms)
+
+    @property
+    def lost_sessions(self) -> list:
+        """Global sids dropped at member death with no checkpoint to
+        restore from — explicit, like every other loss here."""
+        with self._lock:
+            return list(self._lost_sessions)
+
+    # -- observability -------------------------------------------------------
+    def stats(self) -> ClusterStats:
+        """One consistent federation snapshot — taken under the cluster
+        lock, which every frame transition (submit, member step with
+        its callbacks, migration, death) also holds, so the
+        ``ClusterStats.conserved`` identity holds at EVERY snapshot."""
+        with self._lock:
+            member_stats = {n: self._members[n].stats()
+                            for n in sorted(self._members)}
+            depth = {q.value: 0 for q in QoSClass}
+            infl = {q.value: 0 for q in QoSClass}
+            for st in member_stats.values():
+                for c, v in st.queue_depth.items():
+                    depth[c] += v
+                for c, v in st.in_flight.items():
+                    infl[c] += v
+            if self._pause_ms:
+                a = np.asarray(self._pause_ms, np.float64)
+                pause = {"p50": float(np.percentile(a, 50)),
+                         "p95": float(np.percentile(a, 95)),
+                         "max": float(a.max())}
+            else:
+                pause = {"p50": 0.0, "p95": 0.0, "max": 0.0}
+            return ClusterStats(
+                members=tuple(sorted(self._members)),
+                sessions_open=len(self._sessions),
+                submitted=dict(self._submitted),
+                served=dict(self._served),
+                queue_depth=depth,
+                in_flight=infl,
+                shed_expired=dict(self._shed),
+                lost_in_flight=dict(self._lost),
+                rejected_full=dict(self._rejected_full),
+                rejected_rate_limited=dict(self._rejected_rl),
+                migrations=self._migrations,
+                migrated_frames=self._migrated_frames,
+                migrated_bytes=self._migrated_bytes,
+                migration_pause_ms=pause,
+                drains=self._drains,
+                failures=self._failures,
+                ring_share=self._ring.share(),
+                member_stats=member_stats)

@@ -53,8 +53,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import gmm
-from repro.core.fleet_buffer import (FleetBuffer, FleetFullError, as_host,
-                                     pad_pow2)
+from repro.core.fleet_buffer import (T_SENTINEL, FleetBuffer, FleetFullError,
+                                     as_host, pad_pow2)
 from repro.core.fleet_refiner import FleetRefiner, make_fleet_loss
 from repro.core.hybrid import HybridCfg
 from repro.distributed.grad_sync import pmean_grads
@@ -118,6 +118,20 @@ class FleetBackend(abc.ABC):
 
     @abc.abstractmethod
     def fill_fraction(self, sid) -> float: ...
+
+    # -- row migration (cluster federation; docs/FEDERATION.md) --------------
+    @abc.abstractmethod
+    def export_row(self, sid):
+        """Copy one session's ring row out of the fleet:
+        ``(z (W, d) f32, t (W,) i64, label (W,) i64, newest int)`` in the
+        HOST representation (``fleet_buffer.T_SENTINEL`` marks empty
+        slots) regardless of backend — so a row exported from any
+        backend implants into any other."""
+
+    @abc.abstractmethod
+    def import_row(self, sid, z, t, label, newest) -> None:
+        """Implant an exported row into an admitted session slot (the
+        inverse of ``export_row``; host-representation inputs)."""
 
     # -- refinement ----------------------------------------------------------
     @property
@@ -206,6 +220,14 @@ class HostFleetBackend(FleetBackend):
     def fill_fraction(self, sid):
         with self._lock:
             return self.buffer.fill_fraction(sid)
+
+    def export_row(self, sid):
+        with self._lock:
+            return self.buffer.export_row(sid)
+
+    def import_row(self, sid, z, t, label, newest):
+        with self._lock:
+            self.buffer.import_row(sid, z, t, label, newest)
 
     def snapshot(self):
         with self._lock:
@@ -328,6 +350,14 @@ class ShardedFleetBackend(FleetBackend):
                     newest.at[sid].set(-1),
                     active.at[sid].set(1.0))
 
+        def _implant(z, t, label, newest, sid, zr, tr, lr, nw):
+            # whole-row set: the migration import seam (export_row's
+            # inverse) — one executable regardless of which row
+            return (z.at[sid].set(zr),
+                    t.at[sid].set(tr),
+                    label.at[sid].set(lr),
+                    newest.at[sid].set(nw))
+
         # out_shardings pinned: XLA's scatter sharding propagation would
         # otherwise return replicated rings, silently resharding (and
         # recompiling) the next refine step
@@ -336,6 +366,8 @@ class ShardedFleetBackend(FleetBackend):
                                   out_shardings=(shd,) * 4)
         self._wipe_fn = jax.jit(_wipe_admit, donate_argnums=(0, 1, 2, 3, 4),
                                 out_shardings=(shd,) * 5)
+        self._implant_fn = jax.jit(_implant, donate_argnums=(0, 1, 2, 3),
+                                   out_shardings=(shd,) * 4)
         self._set_active_fn = jax.jit(
             lambda active, sid, v: active.at[sid].set(v),
             donate_argnums=(0,), out_shardings=shd)
@@ -519,6 +551,44 @@ class ShardedFleetBackend(FleetBackend):
         self.z, self.t, self.label, self.newest = self._insert_fn(
             self.z, self.t, self.label, self.newest, sids32, slots32,
             ts32, jnp.asarray(zs, jnp.float32), labels32, ts_newest)
+
+    def export_row(self, sid):
+        """Device row -> host representation (one D2H per array): int64
+        timestamps with the host ``T_SENTINEL`` marking empty slots, so
+        the snapshot implants into either backend kind."""
+        with self._lock:
+            if not self._active[sid]:
+                raise KeyError(f"session {sid} is not active")
+            z = np.asarray(self.z[sid])
+            t32 = np.asarray(self.t[sid])
+            t = t32.astype(np.int64)
+            t[t32 == T_SENTINEL_DEV] = T_SENTINEL
+            label = np.asarray(self.label[sid]).astype(np.int64)
+            return z, t, label, int(self.newest[sid])
+
+    def import_row(self, sid, z, t, label, newest):
+        with self._lock:
+            if not self._active[sid]:
+                raise KeyError(f"session {sid} is not active")
+            z = as_host(z, np.float32)
+            if z.shape != (self.window, self.dim):
+                raise ValueError(
+                    f"row shape {z.shape} != ({self.window}, {self.dim}) "
+                    "— migrating between fleets with different window/dim "
+                    "is not supported")
+            t = as_host(t, np.int64)
+            live = t != T_SENTINEL
+            if live.any() and int(t[live].max()) > np.iinfo(np.int32).max:
+                raise ValueError("frame index exceeds the device ring's "
+                                 "int32 range; re-key session time or use "
+                                 "HostFleetBackend")
+            t32 = np.where(live, t, T_SENTINEL_DEV).astype(np.int32)
+            (self.z, self.t, self.label, self.newest) = self._implant_fn(
+                self.z, self.t, self.label, self.newest, jnp.int32(sid),
+                jnp.asarray(z), jnp.asarray(t32),
+                jnp.asarray(as_host(label, np.int64).astype(np.int32)),
+                jnp.int32(newest))
+            self.ingest_h2d_bytes += z.nbytes + t32.nbytes
 
     def fill_fraction(self, sid):
         with self._lock:

@@ -129,6 +129,35 @@ class FleetBuffer:
             self.label[sids, slots] = as_host(labels, np.int64)
         np.maximum.at(self.newest, sids, ts)
 
+    # -- row migration (cluster federation) ----------------------------------
+    def export_row(self, sid):
+        """Copy one session row out of the dense rings:
+        ``(z (W, d), t (W,), label (W,), newest)`` — everything the fleet
+        knows about the session, self-contained (the migration payload of
+        ``cluster/snapshot.py``).  Arrays are copies: the snapshot stays
+        frozen while the row keeps serving."""
+        if not self.active[sid]:
+            raise KeyError(f"session {sid} is not active")
+        return (self.z[sid].copy(), self.t[sid].copy(),
+                self.label[sid].copy(), int(self.newest[sid]))
+
+    def import_row(self, sid, z, t, label, newest):
+        """Implant an exported row into an (already admitted) session
+        slot — the inverse of ``export_row``, bit-exact: a snapshot
+        round-trip reproduces the row's refine contribution and
+        ``fill_fraction`` identically."""
+        if not self.active[sid]:
+            raise KeyError(f"session {sid} is not active")
+        if z.shape != (self.window, self.dim):
+            raise ValueError(
+                f"row shape {z.shape} != ({self.window}, {self.dim}) — "
+                "migrating between fleets with different window/dim is "
+                "not supported")
+        self.z[sid] = as_host(z, np.float32)
+        self.t[sid] = as_host(t, np.int64)
+        self.label[sid] = as_host(label, np.int64)
+        self.newest[sid] = int(newest)
+
     # -- snapshot ------------------------------------------------------------
     def snapshot(self):
         """-> (z (N, W, d), mask (N, W), labels (N, W)) in temporal order.

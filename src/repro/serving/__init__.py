@@ -16,6 +16,8 @@ pipelines tick t+1's staging under tick t's in-flight device chains via
 the gateway's ``tick_launch``/``tick_collect`` seam.
 """
 from repro.api.types import StreamStats
+from repro.runtime.fault import (FailureInjector, StragglerEvent,
+                                 StragglerMonitor)
 from repro.serving.queues import (ClassQueue, QoSQueues, QueuedFrame,
                                   QueueFullError, RateLimitError,
                                   TokenBucket)
@@ -30,4 +32,5 @@ __all__ = [
     "QoSQueues", "ClassQueue", "QueuedFrame", "QueueFullError",
     "RateLimitError", "TokenBucket",
     "StreamStats",
+    "FailureInjector", "StragglerEvent", "StragglerMonitor",
 ]

@@ -218,6 +218,64 @@ class QoSQueues:
                 return qf
         return None
 
+    # -- live migration (repro.cluster; docs/FEDERATION.md) ------------------
+    def extract_session_locked(self, qos: QoSClass, sid) -> list:
+        """Remove and return EVERY waiting frame of the session (oldest
+        first, relative order preserved) — the migration move.  The
+        frames' ledger leaves with them: ``submitted`` is decremented,
+        because migration relocates accounting, it neither serves nor
+        sheds (the target's ``implant_frames_locked`` re-counts them, so
+        per-member conservation holds on both sides)."""
+        cq = self.by_class[qos]
+        out = [qf for qf in cq.q if qf.sid == sid]
+        if out:
+            cq.q = deque(qf for qf in cq.q if qf.sid != sid)
+            cq.submitted -= len(out)
+        return out
+
+    def uncount_locked(self, qos: QoSClass, n: int) -> None:
+        """Move ``n`` frames' submit ledger out of this queue set — for
+        frames extracted from the scheduler's STAGED list during a
+        migration (they were counted here at submit but no longer sit in
+        the deque)."""
+        self.by_class[qos].submitted -= n
+
+    def implant_frames_locked(self, sid, snaps, qos: QoSClass) -> list:
+        """Re-enqueue migrated frames with their ORIGINAL arrival times
+        and deadlines (``QueuedFrameSnapshot``s, oldest first).  Each
+        frame is inserted at its ``enq_s``-sorted position so the
+        front==oldest==earliest-deadline invariant survives a merge with
+        frames the target already holds, and gets a ``seq`` strictly
+        between its new neighbours' (fractional when squeezed between
+        two live frames) so every seq comparison — aging-lane oldest
+        pick, batch sort, preemption LIFO — agrees with queue order.
+        Exempt from the ``maxlen`` bound, like ``requeue_front_locked``:
+        the frames already held queue slots at the source.  Counted into
+        ``submitted`` (the ledger arrives with the frames)."""
+        cq = self.by_class[qos]
+        out = []
+        for snap in snaps:
+            q = cq.q
+            i = len(q)
+            while i > 0 and q[i - 1].enq_s > snap.enq_s:
+                i -= 1
+            if i == len(q):
+                seq = self._seq
+                self._seq += 1
+            else:
+                prev_seq = q[i - 1].seq if i else q[i].seq - 2.0
+                seq = (prev_seq + q[i].seq) / 2.0
+            qf = QueuedFrame(sid=sid, frame=snap.frame, qos=qos, seq=seq,
+                             enq_s=snap.enq_s, deadline_s=snap.deadline_s,
+                             preemptions=snap.preemptions,
+                             weight=snap.weight, promoted=snap.promoted)
+            q.insert(i, qf)
+            cq.submitted += 1
+            out.append(qf)
+        if out:
+            self.cond.notify_all()
+        return out
+
     def shed_expired_locked(self, qos: QoSClass, now: float,
                             horizon_s: float) -> list:
         """Drop (and count) every waiting frame of the class whose

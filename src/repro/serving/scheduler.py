@@ -377,6 +377,18 @@ class TickScheduler:
                 queues.requeue_front_locked(self.staged.pop(bulk_at))
                 self.staged.append(queues.pop_locked(qos))
 
+    # -- live migration (repro.cluster) --------------------------------------
+    def extract_session_locked(self, sid) -> list[QueuedFrame]:
+        """Remove and return the session's staged (reserved-but-
+        unlaunched) frames — the migration path.  Caller holds
+        ``queues.cond`` and moves the frames' submit ledger with them
+        (``queues.uncount_locked``); admission counters are untouched
+        because these frames were never admitted."""
+        out = [qf for qf in self.staged if qf.sid == sid]
+        if out:
+            self.staged = [qf for qf in self.staged if qf.sid != sid]
+        return out
+
     # -- observability -------------------------------------------------------
     def staged_depths(self) -> dict:
         """Staged (reserved-but-unlaunched) frames per class — counted

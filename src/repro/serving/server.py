@@ -34,8 +34,9 @@ import threading
 from collections import deque
 from dataclasses import replace
 
-from repro.api.types import (FrameRequest, QoSClass, SessionInfo,
-                             StreamStats)
+from repro.api.types import (FrameRequest, QoSClass,
+                             QueuedFrameSnapshot, ServerSessionSnapshot,
+                             SessionInfo, SessionSnapshot, StreamStats)
 from repro.serving.queues import (QoSQueues, QueuedFrame,  # noqa: F401
                                   RateLimitError, TokenBucket)
 from repro.serving.scheduler import (SchedulerCfg, TickScheduler,
@@ -82,6 +83,12 @@ class StreamServer:
         results are NOT also buffered — an always-on server must not
         grow with uptime; without one they accumulate until
         ``drain_results()``, which the caller is expected to poll.
+    on_shed : optional callable invoked with each shed ``QueuedFrame``
+        on the serving thread, right after the shed pass folds it into
+        the per-session books — the federation layer
+        (``repro.cluster``) counts cluster-wide sheds here.  Same
+        contract as ``on_result``: keep it cheap, exceptions are
+        printed and swallowed.
     clock : timing source; defaults to the gateway's injected clock so
         one fake clock drives queue waits, deadlines, rate limits and
         tick latency.
@@ -97,7 +104,8 @@ class StreamServer:
 
     def __init__(self, gateway, *, cfg: SchedulerCfg | None = None,
                  queue_maxlen: int = 256, queue_maxlens=None,
-                 pipeline: bool = True, on_result=None, clock=None,
+                 pipeline: bool = True, on_result=None, on_shed=None,
+                 clock=None,
                  rate_limit: tuple | None = None,
                  schedule_keep: int = 4096):
         if not gateway.overlap:
@@ -111,6 +119,7 @@ class StreamServer:
         self.scheduler = TickScheduler(cfg)
         self._clock = clock if clock is not None else gateway.clock
         self._on_result = on_result
+        self._on_shed = on_shed
         self._rate_limit = rate_limit
         self._sessions: dict[int, _ServedSession] = {}
         self._lock = threading.RLock()        # session table + gateway admin
@@ -204,6 +213,129 @@ class StreamServer:
         if s is None:
             raise KeyError(f"session {sid} is not open")
         return s
+
+    # -- live migration (repro.cluster; docs/FEDERATION.md) ------------------
+    def quiesce(self) -> int:
+        """Collect the in-flight tick, if any, and deliver its results —
+        the migration barrier: after ``quiesce()`` no frame is between
+        ``tick_launch`` and ``tick_collect``, so ``export_session`` can
+        take a complete snapshot.  Returns frames delivered.  Intended
+        for stepped (thread-less) operation; with the serving thread
+        running, ``stop(drain=False)`` first."""
+        with self._step_lock:
+            return self._collect() if self._plan is not None else 0
+
+    def export_session(self, sid) -> SessionSnapshot:
+        """Freeze one session — gateway state (ring row, sync books,
+        counters) PLUS the serving-side books: submitted/served/shed,
+        DRR weight, token-bucket level, and every waiting frame (queued
+        or staged) with its ORIGINAL arrival time and deadline.  The
+        session leaves this server: its frames leave the queues with
+        their ledger (per-member conservation holds on both sides of a
+        migration), and the row is evicted.  Raises ``RuntimeError`` if
+        an in-flight tick still holds the session's frames
+        (``quiesce()`` first) and ``KeyError`` for unknown or closing
+        sessions."""
+        with self._step_lock:
+            if self._plan is not None and any(
+                    p[0] == sid for p in self._plan.pending):
+                raise RuntimeError(
+                    f"session {sid} has frames in the in-flight tick — "
+                    "quiesce() before export_session()")
+            with self.queues.cond:
+                with self._lock:
+                    s = self._require(sid)
+                    if s.closing:
+                        raise KeyError(f"session {sid} is closing")
+                    staged = self.scheduler.extract_session_locked(sid)
+                    if staged:
+                        self.queues.uncount_locked(s.qos, len(staged))
+                    queued = self.queues.extract_session_locked(s.qos, sid)
+                    frames = sorted(staged + queued, key=lambda qf: qf.seq)
+                    snap = self.gateway.export_session(sid)
+                    del self._sessions[sid]
+                    bucket = (None if s.bucket is None else
+                              (s.bucket.rate_per_s, s.bucket.burst,
+                               s.bucket.tokens, s.bucket._last))
+                    server = ServerSessionSnapshot(
+                        submitted=s.submitted, served=s.served,
+                        shed=s.shed, weight=s.weight, bucket=bucket,
+                        queued=tuple(
+                            QueuedFrameSnapshot(
+                                frame=qf.frame, enq_s=qf.enq_s,
+                                deadline_s=qf.deadline_s,
+                                preemptions=qf.preemptions,
+                                promoted=qf.promoted, weight=qf.weight)
+                            for qf in frames))
+                    return replace(snap, server=server)
+
+    def checkpoint_session(self, sid) -> SessionSnapshot:
+        """Non-destructive copy of one session — the cluster's
+        failure-recovery checkpoint.  Unlike ``export_session`` the
+        session KEEPS serving here, and waiting frames are NOT captured
+        (a checkpoint restore resumes from the last served frame; it
+        cannot resurrect a dead member's queues — the cluster counts
+        those frames in ``lost_in_flight`` instead).  The snapshot's
+        books are therefore SETTLED — ``submitted == served + shed``,
+        ``queued=()`` — so a restored session can always drain to
+        close.  Same quiesce precondition as ``export_session``."""
+        with self._step_lock:
+            if self._plan is not None and any(
+                    p[0] == sid for p in self._plan.pending):
+                raise RuntimeError(
+                    f"session {sid} has frames in the in-flight tick — "
+                    "quiesce() before checkpoint_session()")
+            with self.queues.cond:
+                with self._lock:
+                    s = self._require(sid)
+                    if s.closing:
+                        raise KeyError(f"session {sid} is closing")
+                    snap = self.gateway.export_session(sid, remove=False)
+                    bucket = (None if s.bucket is None else
+                              (s.bucket.rate_per_s, s.bucket.burst,
+                               s.bucket.tokens, s.bucket._last))
+                    server = ServerSessionSnapshot(
+                        submitted=s.served + s.shed, served=s.served,
+                        shed=s.shed, weight=s.weight, bucket=bucket,
+                        queued=())
+                    return replace(snap, server=server)
+
+    def import_session(self, snap: SessionSnapshot) -> SessionInfo:
+        """Resume an exported session here — the other half of a
+        migration.  The gateway re-admits the row (same ``AdmissionError``
+        surface as ``open_session``; the sid is fresh), the serving
+        books and token-bucket level are restored, and the snapshot's
+        waiting frames re-enter the queues at their ``enq_s``-sorted
+        positions with their ORIGINAL deadlines — no re-validation, no
+        rate-limit charge, no submit-count: their ledger arrived with
+        them.  Returns the new ``SessionInfo``."""
+        with self._step_lock:
+            with self.queues.cond:
+                with self._lock:
+                    info = self.gateway.import_session(snap)
+                    sv = snap.server
+                    if sv is None:          # bare gateway-level snapshot
+                        sv = ServerSessionSnapshot(
+                            submitted=0, served=0, shed=0, weight=1.0)
+                    if sv.bucket is not None:
+                        rate, burst, tokens, last = sv.bucket
+                        bucket = TokenBucket(rate, burst, now=last)
+                        bucket.tokens = tokens
+                    elif snap.server is None and self._rate_limit:
+                        bucket = TokenBucket(self._rate_limit[0],
+                                             self._rate_limit[1],
+                                             now=self._clock())
+                    else:
+                        bucket = None
+                    s = _ServedSession(info.sid, snap.qos,
+                                       weight=clamp_weight(sv.weight),
+                                       bucket=bucket)
+                    s.submitted, s.served, s.shed = (
+                        sv.submitted, sv.served, sv.shed)
+                    self._sessions[info.sid] = s
+                    self.queues.implant_frames_locked(
+                        info.sid, sv.queued, snap.qos)
+                    return info
 
     def _check_fault(self) -> None:
         """Re-raise a serving-loop death at the caller: producers and
@@ -360,6 +492,13 @@ class StreamServer:
                     s = self._sessions.get(qf.sid)
                     if s is not None:
                         s.shed += 1
+        if shed and self._on_shed is not None:
+            for qf in shed:        # outside the locks, like on_result
+                try:
+                    self._on_shed(qf)
+                except Exception:   # user code must not kill serving
+                    import traceback
+                    traceback.print_exc()
         new_plan = None
         new_classes: list[str] = []
         served = 0
@@ -436,6 +575,16 @@ class StreamServer:
         return any(qf.sid == sid for qf in self.scheduler.staged)
 
     # -- results + observability ---------------------------------------------
+    def busy(self) -> bool:
+        """Queued, staged, in-flight, or closing work exists right now
+        — what the serving loop's own work check sees.  Stepped drivers
+        (``repro.cluster``, benchmarks) loop ``step()`` on this."""
+        with self.queues.cond:
+            return bool(self.queues.pending_locked()
+                        or self.scheduler.staged
+                        or self._plan is not None
+                        or self._closes_pending())
+
     @property
     def served_total(self) -> int:
         """Frames delivered so far — a bare counter, cheap enough to

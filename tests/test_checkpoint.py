@@ -62,6 +62,80 @@ def test_restore_latest_none(tmp_path):
     assert restored is None and step == -1
 
 
+def test_largest_feasible_mesh_infeasible_counts():
+    """Degraded device counts that nothing divides -> None, never an
+    exception — the caller decides whether to wait for capacity or give
+    up.  Dummy device lists are fine here: a Mesh is only constructed
+    on the feasible path."""
+    from repro.checkpoint.elastic import largest_feasible_mesh
+    # 7 survivors, model must divide 2 or 4: infeasible
+    assert largest_feasible_mesh(list(range(7)),
+                                 model_divisors={2, 4}) is None
+    assert largest_feasible_mesh(list(range(5)),
+                                 model_divisors={2}) is None
+    # no divisors at all, and no devices at all
+    assert largest_feasible_mesh(list(range(4)),
+                                 model_divisors=set()) is None
+    assert largest_feasible_mesh([], model_divisors={1}) is None
+
+
+def test_largest_feasible_mesh_prefer_model_edge_cases(subproc):
+    """``prefer_model`` outside the divisor set is ignored (largest
+    divisor wins); inside the set but not dividing the device count, it
+    falls back rather than failing."""
+    subproc("""
+import jax
+from repro.checkpoint.elastic import largest_feasible_mesh
+
+devs = jax.devices()
+assert len(devs) == 8
+
+# preference honored when feasible
+m = largest_feasible_mesh(devs, model_divisors={1, 2, 4}, prefer_model=2)
+assert dict(m.shape) == {'data': 4, 'model': 2}
+
+# prefer_model not in the divisor set: ignored, largest divisor wins
+m = largest_feasible_mesh(devs, model_divisors={1, 2, 4}, prefer_model=3)
+assert dict(m.shape) == {'data': 2, 'model': 4}
+
+# in the set but 8 % 3 != 0: falls back to the next feasible divisor
+m = largest_feasible_mesh(devs, model_divisors={2, 3}, prefer_model=3)
+assert dict(m.shape) == {'data': 4, 'model': 2}
+print('prefer_model edges OK')
+""", devices=8)
+
+
+def test_elastic_reshard_shrunk_mesh(subproc):
+    """Restore an 8-device state onto a 2-device mesh with model=1 —
+    the severe-degradation path: every sharded dim collapses onto the
+    data axis and values survive bit-exactly."""
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np, tempfile
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_test_mesh
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.elastic import reshard_state, largest_feasible_mesh
+
+mesh8 = make_test_mesh((4, 2), ('data', 'model'))
+x = jax.device_put(jnp.arange(64.0).reshape(8, 8),
+                   NamedSharding(mesh8, P('data', 'model')))
+d = tempfile.mkdtemp()
+m = CheckpointManager(d)
+m.save(1, {'w': x})
+
+devs = jax.devices()[:2]
+mesh2 = largest_feasible_mesh(devs, model_divisors={1, 2, 4},
+                              prefer_model=1)
+assert dict(mesh2.shape) == {'data': 2, 'model': 1}
+restored, step = m.restore_latest({'w': x})
+out = reshard_state(restored, {'w': ('batch', 'mlp')}, mesh2)
+np.testing.assert_array_equal(np.asarray(out['w']),
+                              np.arange(64.0).reshape(8, 8))
+assert len(out['w'].sharding.device_set) == 2
+print('shrunk reshard OK')
+""", devices=8)
+
+
 def test_elastic_reshard(subproc):
     """Save on an 8-device (4,2) mesh -> restore onto (2,2) after
     'failures' (elastic re-entry)."""

@@ -1,0 +1,104 @@
+"""Direct unit tests for the fault-tolerance primitives
+(``runtime/fault.py``) — previously only exercised through the Trainer;
+the cluster (``repro.cluster``) now depends on their exact edge
+behavior: repeat-fire suppression, warmup gating, and the trailing
+window median."""
+import pytest
+
+from repro.runtime.fault import (FailureInjector, StragglerEvent,
+                                 StragglerMonitor)
+from repro.serving import FailureInjector as ServingFailureInjector
+from repro.cluster import FailureInjector as ClusterFailureInjector
+
+
+def test_fault_types_exported_from_serving_and_cluster():
+    # one implementation, re-exported where it is consumed
+    assert ServingFailureInjector is FailureInjector
+    assert ClusterFailureInjector is FailureInjector
+
+
+# ---------------------------------------------------------------------------
+# FailureInjector
+# ---------------------------------------------------------------------------
+
+def test_injector_fires_at_exactly_the_named_steps():
+    inj = FailureInjector(fail_at=(3, 7))
+    for step in range(10):
+        if step in (3, 7):
+            with pytest.raises(RuntimeError, match=f"step {step}"):
+                inj.maybe_fail(step)
+        else:
+            inj.maybe_fail(step)          # no raise
+    assert inj.fired == {3, 7}
+
+
+def test_injector_suppresses_repeat_fire():
+    """A recovered-and-retried step must not die again — the injector
+    simulates a node loss, not a permanently poisoned step id."""
+    inj = FailureInjector(fail_at=(5,))
+    with pytest.raises(RuntimeError):
+        inj.maybe_fail(5)
+    inj.maybe_fail(5)                     # second pass: suppressed
+    assert inj.fired == {5}
+
+
+def test_injector_empty_never_fires():
+    inj = FailureInjector()
+    for step in range(20):
+        inj.maybe_fail(step)
+    assert inj.fired == set()
+
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor
+# ---------------------------------------------------------------------------
+
+def test_straggler_warmup_gates_detection():
+    """The first ``warmup`` samples can NEVER flag — there is no
+    trustworthy median yet, even for an enormous outlier."""
+    mon = StragglerMonitor(factor=3.0, window=10, warmup=5)
+    for step in range(5):
+        # 1000x outliers during warmup: silently recorded
+        assert not mon.record(step, 1000.0 if step else 0.001)
+    assert mon.events == []
+    # the 6th sample compares against the (outlier-polluted) median
+    assert mon.record(5, 1e7)
+    assert mon.events[-1].step == 5
+
+
+def test_straggler_flags_only_past_factor_times_median():
+    mon = StragglerMonitor(factor=3.0, window=50, warmup=3)
+    for step in range(6):
+        mon.record(step, 0.1)
+    assert not mon.record(6, 0.3)          # == 3x median: NOT a straggler
+    assert mon.record(7, 0.3001)           # just past: flagged
+    (ev,) = mon.events
+    assert isinstance(ev, StragglerEvent)
+    assert ev.step == 7 and ev.time_s == 0.3001 and ev.median_s == 0.1
+
+
+def test_straggler_trailing_window_forgets_old_regime():
+    """The median is over the trailing ``window`` samples only: after a
+    sustained slowdown the monitor adapts — the new normal stops being
+    an anomaly."""
+    mon = StragglerMonitor(factor=2.0, window=4, warmup=2)
+    for step in range(10):
+        mon.record(step, 0.1)              # old fast regime
+    assert mon.record(10, 0.5)             # first slow step: flagged
+    for step in range(11, 16):
+        mon.record(step, 0.5)              # slow becomes the norm
+    # the window (4) has rolled entirely onto 0.5s samples: the median
+    # adapted, and the same duration no longer flags
+    assert not mon.record(16, 0.5)
+    assert mon.events[-1].step < 16
+
+
+def test_straggler_record_returns_true_only_for_this_step():
+    """``record``'s return value means THIS step fired, not that some
+    earlier event exists — the cluster keys the ring bias off it."""
+    mon = StragglerMonitor(factor=2.0, window=8, warmup=2)
+    for step in range(4):
+        mon.record(step, 0.1)
+    assert mon.record(4, 1.0)              # fires
+    assert not mon.record(5, 0.1)          # healthy again: False
+    assert mon.events and mon.events[-1].step == 4
