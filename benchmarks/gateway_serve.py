@@ -36,10 +36,24 @@ walks through the pipeline stages and where the one sync point sits).
     PYTHONPATH=src python -m benchmarks.gateway_serve [--quick|--smoke]
                                                       [--shards S]
 
-``--shards S`` additionally serves the entropy lane through a gateway
-whose fleet data plane is a device-resident ``ShardedFleetBackend`` over
-S forced host devices — same bit-parity contract, plus the measured
-host->device ingest/snapshot traffic of the backend.
+``--shards S`` additionally serves the entropy lane through the SHARDED
+DISPATCH plane (docs/SHARDING.md): a device-resident
+``ShardedFleetBackend`` over S forced host devices with
+``shard_dispatch`` auto-enabled, so the per-tick edge→wire→server chains
+run per device, co-located with each session's fleet shard.  The lane
+always runs — a session count that does not divide over S pads the
+fleet capacity up, never skips — and asserts the same bit-parity plus
+the one-sync/one-D2H contract at every shard count before reporting.
+Sharded runs MERGE into an existing ``BENCH_gateway.json`` under the
+``shards[S]`` dimension (run the base bench first, then one process per
+shard count: ``force_host_devices`` must set ``XLA_FLAGS`` before jax
+initializes).
+
+Regime note for ``--shards`` numbers: forced host devices SLICE one
+CPU's cores into S fake devices — they add no compute, so frames/s
+scaling with S only manifests on real multi-chip meshes (or hosts with
+cores to spare); what CI pins is the contracts (parity, one sync,
+shard-local ingest), with throughput recorded per backend.
 """
 from __future__ import annotations
 
@@ -98,7 +112,10 @@ def _setup(n, *, shards=0, enc_kw=ENC_KW, policy=None, overlap=True):
     ks = policy.decide(obs)
     if shards:
         from repro.launch.mesh import make_sessions_mesh
-        backend = ShardedFleetBackend(capacity=n, window=16,
+        # pad capacity up to a multiple of the shard count so the lane
+        # runs at ANY n (the old gate skipped n % shards != 0 silently)
+        cap = -(-n // shards) * shards
+        backend = ShardedFleetBackend(capacity=cap, window=16,
                                       dim=cfg.d_embed,
                                       mesh=make_sessions_mesh(shards))
     else:
@@ -255,22 +272,44 @@ def run_all(*, quick=False, shards=0, smoke=False):
         row(f"gateway.bucketed.N{n}", 1e6 / gwf,
             f"{speedup:.1f}x vs per-frame, bit-identical, tick p50 "
             f"{pcts['p50']:.2f}ms p95 {pcts['p95']:.2f}ms")
-        if shards and n % shards == 0:
-            _, shf, exact_s, _, st = bench_gateway(n, iters=iters,
-                                                   shards=shards,
-                                                   baseline=False)
+        if shards:
+            _, shf, exact_s, spcts, st = bench_gateway(n, iters=iters,
+                                                       shards=shards,
+                                                       baseline=False)
             assert exact_s, \
-                f"sharded-backend embeddings diverged at N={n}"
+                f"sharded-dispatch embeddings diverged at N={n}"
             assert st.ingest_h2d_bytes == 0, \
                 "device-resident ingest must not move embedding payload"
+            assert st.device_syncs_per_tick == 1 \
+                and st.d2h_copies_per_tick == 1, \
+                f"sharded dispatch broke the one-sync contract at N={n}: " \
+                f"{st.device_syncs_per_tick} syncs, {st.d2h_copies_per_tick} d2h"
+            assert st.dispatch_shards == shards, \
+                f"dispatch plane ran on {st.dispatch_shards} shards, " \
+                f"asked for {shards}"
+            assert sum(st.dispatch_shard_frames) == st.frames, \
+                "per-shard dispatch counts do not cover every frame"
             result[n]["sharded_fps"] = shf
             result[n]["sharded"] = {
-                "shards": st.shards, "shard_frames": st.shard_frames,
+                "shards": st.shards,
+                "dispatch_shards": st.dispatch_shards,
+                "dispatch_shard_frames": list(st.dispatch_shard_frames),
+                "shard_frames": list(st.shard_frames),
+                "padded_capacity": -(-n // shards) * shards,
+                "device_syncs_per_tick": st.device_syncs_per_tick,
+                "tick_ms": spcts,
                 "ingest_h2d_bytes": st.ingest_h2d_bytes,
                 "snapshot_h2d_bytes": st.snapshot_h2d_bytes}
-            row(f"gateway.bucketed.sharded{st.shards}.N{n}", 1e6 / shf,
-                f"{shf / pf:.1f}x vs per-frame, bit-identical, ingest "
-                f"payload h2d {st.ingest_h2d_bytes} B (device-resident)")
+            row(f"gateway.dispatch.sharded{st.dispatch_shards}.N{n}",
+                1e6 / shf,
+                f"{shf / pf:.1f}x vs per-frame, bit-identical, 1 sync/tick, "
+                f"per-shard frames {list(st.dispatch_shard_frames)}, "
+                f"tick p50 {spcts['p50']:.2f}ms p95 {spcts['p95']:.2f}ms")
+    if shards:   # sharded runs merge into an existing base JSON
+        print("BENCH " + json.dumps(
+            {"bench": "gateway_serve", "shards": shards,
+             **{str(k): v for k, v in result.items()}}))
+        return result
     result["mixed_k"] = {}
     for n in MIXED_SIZES:
         m = bench_mixed(n, iters=max(2 if smoke else 8, 64 // n),
@@ -294,15 +333,43 @@ def run_all(*, quick=False, shards=0, smoke=False):
     return result
 
 
-def write_bench_json(result, path="BENCH_gateway.json"):
+def write_bench_json(result, path="BENCH_gateway.json", shards=0):
     """Machine-readable perf trajectory (tracked across PRs; uploaded as
-    a CI artifact — see docs/PERF.md for how to read it)."""
-    mixed = result.get("mixed_k", {})
-    doc = {
-        "bench": "gateway_serve",
-        "schema": 1,
-        "backend": jax.default_backend(),
-        "mixed_k": {
+    a CI artifact — see docs/PERF.md for how to read it).
+
+    Schema 2 adds the ``shards`` dimension: a base run (``shards=0``)
+    rewrites ``mixed_k``/``entropy`` while PRESERVING any ``shards``
+    entries already on disk, and a ``--shards S`` run updates only
+    ``shards[S]`` — so one base process plus one forced-device process
+    per shard count compose a single trajectory file (each process must
+    be fresh: the host device count is locked at first jax init)."""
+    doc = {"bench": "gateway_serve", "schema": 2,
+           "backend": jax.default_backend(),
+           "mixed_k": {}, "entropy": {}, "shards": {}}
+    try:
+        with open(path) as f:
+            old = json.load(f)
+        if old.get("bench") == "gateway_serve":
+            for key in ("mixed_k", "entropy", "shards"):
+                doc[key] = old.get(key, {})
+    except (OSError, ValueError):
+        pass
+    if shards:
+        doc["shards"][str(shards)] = {
+            str(n): {
+                "frames_per_s": v["sharded_fps"],
+                "frames_per_s_unsharded_same_host": v["gateway_fps"],
+                "dispatch_shard_frames": v["sharded"][
+                    "dispatch_shard_frames"],
+                "padded_capacity": v["sharded"]["padded_capacity"],
+                "device_syncs_per_tick": v["sharded"][
+                    "device_syncs_per_tick"],
+                "tick_ms": v["sharded"]["tick_ms"],
+                "bit_identical": v["bit_identical"],
+            } for n, v in result.items() if isinstance(n, int)}
+    else:
+        mixed = result.get("mixed_k", {})
+        doc["mixed_k"] = {
             str(n): {
                 "frames_per_s": {"sync": m["sync_fps"],
                                  "async": m["async_fps"]},
@@ -312,15 +379,14 @@ def write_bench_json(result, path="BENCH_gateway.json"):
                 "staged_h2d_bytes_per_tick": m["staged_h2d_bytes_per_tick"],
                 "tick_ms": m["tick_ms"],
                 "bit_identical": m["bit_identical"],
-            } for n, m in mixed.items()},
-        "entropy": {
+            } for n, m in mixed.items()}
+        doc["entropy"] = {
             str(n): {
                 "frames_per_s": v["gateway_fps"],
                 "speedup_vs_per_frame": v["speedup"],
                 "tick_ms": v["tick_ms"],
                 "bit_identical": v["bit_identical"],
-            } for n, v in result.items() if isinstance(n, int)},
-    }
+            } for n, v in result.items() if isinstance(n, int)}
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -335,12 +401,13 @@ if __name__ == "__main__":
                     help="tiny CI config: fewest iterations that still "
                          "exercise every assert")
     ap.add_argument("--shards", type=int, default=0,
-                    help="also serve through a device-resident "
-                         "ShardedFleetBackend over this many forced "
-                         "host devices")
+                    help="also serve through the sharded dispatch plane "
+                         "(per-device chains + shard-local ingest) over "
+                         "this many forced host devices; merges into an "
+                         "existing BENCH_gateway.json under shards[S]")
     args = ap.parse_args()
     if args.shards:
         from benchmarks.fleet_serve import force_host_devices
         force_host_devices(args.shards)
     out = run_all(quick=args.quick, shards=args.shards, smoke=args.smoke)
-    print("wrote", write_bench_json(out))
+    print("wrote", write_bench_json(out, shards=args.shards))

@@ -41,6 +41,19 @@ runtime (``repro.serving.StreamServer``, docs/STREAMING.md) exploits the
 seam for cross-tick pipelining: tick t+1 launches while tick t's chains
 are still in flight, and ``device_syncs_per_tick`` stays 1.
 
+On a multi-device ``ShardedFleetBackend`` the overlapped plane goes one
+step further and **shards the dispatch itself** (``shard_dispatch``,
+docs/SHARDING.md): each session's frames are staged into the block of a
+single sharded H2D transfer owned by its fleet shard (placement was
+decided at ``admit`` by the least-loaded free lists), every k-bucket's
+edge→wire→server chain executes per device against a per-shard replica
+of the encoder weights, per-shard embeddings reassemble into one global
+sharded array with zero cross-device copies
+(``jax.make_array_from_single_device_arrays``), and the fleet ring
+scatter (``insert_batch_placed``) is a ``shard_map`` over the same axis
+— so no frame's payload ever crosses a shard boundary and the
+one-sync/one-D2H contract survives verbatim at every shard count.
+
 All wall-clock reads go through the injectable ``clock=`` callable
 (default ``time.perf_counter``), so latency/uptime numbers in
 ``FrameResult``/``GatewayStats`` are deterministic under a fake clock in
@@ -72,18 +85,19 @@ class TickPlan:
     the NEXT tick under this one's chains (cross-tick pipelining)."""
 
     __slots__ = ("pending", "t0", "profile", "launched", "z_all", "t_d0",
-                 "syncs", "d2h", "seq")
+                 "syncs", "d2h", "seq", "rowmap")
 
     def __init__(self, pending, t0, profile=False, seq=0):
         self.pending = pending     # [(sid, FrameRequest, mel f32)] served
         self.t0 = t0               # clock at tick_launch entry
         self.profile = profile
-        self.launched = []         # (k, idx, wire bytes, per-bucket ms)
+        self.launched = []         # (k, idx, wire bytes, bucket ms, shard)
         self.z_all = None          # unmaterialized (B, d) device embeddings
         self.t_d0 = t0             # clock at dispatch start
         self.syncs = 0             # launch-phase waits (profile mode only)
         self.d2h = 0
         self.seq = seq             # launch order — collect must match
+        self.rowmap = None         # sharded plane: submission idx -> row
 
     def __len__(self):
         return len(self.pending)
@@ -136,6 +150,13 @@ class StreamSplitGateway:
         — one host staging + device round-trip per k-bucket — kept as
         the measured baseline of ``benchmarks/gateway_serve.py`` and the
         bit-parity reference of ``tests/test_gateway.py``.
+    shard_dispatch : run the overlapped plane sharded over the backend's
+        ``sessions`` mesh axis — per-device edge→wire→server chains
+        co-located with each session's fleet shard, shard-local ring
+        scatter, same one-sync/one-D2H contract.  Default ``None``
+        auto-enables on a device-resident sharded backend with > 1
+        shard; ``True`` forces it (valid on 1 shard too — the bitwise
+        parity configuration); ``False`` keeps the single-device plane.
     clock : zero-arg callable returning seconds (default
         ``time.perf_counter``) — every timing stat derives from it.
     """
@@ -144,7 +165,7 @@ class StreamSplitGateway:
                  backend=None, capacity=64, window=100, head_init=None,
                  head_apply=None, refine_every=0, quantize_wire=True,
                  sync_cfg=None, qos_reserve=None, refine_lr=1e-2, seed=0,
-                 overlap=True, clock=time.perf_counter):
+                 overlap=True, shard_dispatch=None, clock=time.perf_counter):
         if policy.L != enc_cfg.n_blocks:
             raise ValueError(
                 f"policy action space L={policy.L} != encoder "
@@ -168,6 +189,39 @@ class StreamSplitGateway:
                             else qos_reserve)
         self.refine_every = refine_every
         self.overlap = overlap
+        if shard_dispatch is None:
+            shard_dispatch = bool(
+                overlap and backend.device_ingest
+                and getattr(backend, "mesh", None) is not None
+                and backend.shards > 1)
+        if shard_dispatch:
+            if not overlap:
+                raise ValueError("shard_dispatch shards the overlapped "
+                                 "data plane; it needs overlap=True")
+            if not (backend.device_ingest
+                    and getattr(backend, "mesh", None) is not None):
+                raise ValueError(
+                    "shard_dispatch co-locates dispatch with fleet shards; "
+                    "it needs a device-resident sharded backend "
+                    "(ShardedFleetBackend)")
+            from repro.distributed.sharding import sessions_sharding
+            mesh = backend.mesh
+            self._mesh_devices = list(mesh.devices.flat)
+            self._staged_sharding = sessions_sharding(mesh, backend.axis)
+            # one replica of the encoder weights per dispatch shard,
+            # committed once at construction: a per-shard chain whose
+            # params already live on its device never pulls a weight
+            # byte cross-device at dispatch time
+            self._params_by_shard = [jax.device_put(params, d)
+                                     for d in self._mesh_devices]
+            # an idle shard still owes its (block, d) slice of the global
+            # reassembly; zeros blocks are immutable, so one upload per
+            # (shard, size) is cached and reused for every idle tick
+            self._zeros_blocks = {}
+        self.shard_dispatch = shard_dispatch
+        self._dispatch_shard_frames = np.zeros(
+            backend.shards if shard_dispatch else 1, np.int64)
+        self._last_profile = None
         self._clock = clock
         self._t_start = clock()
         self._key = jax.random.PRNGKey(seed)
@@ -496,6 +550,8 @@ class StreamSplitGateway:
         scatter — all issued WITHOUT a sync, so the work hides under the
         in-flight device chains (and, pipelined, under the PREVIOUS
         tick's chains too)."""
+        if self.shard_dispatch:
+            return self._launch_sharded(plan, buckets)
         pending, profile = plan.pending, plan.profile
         plan.t_d0 = self._clock()
         # (1) stage the whole tick's frames as ONE host->device transfer,
@@ -532,7 +588,7 @@ class StreamSplitGateway:
                 self._block(z_dev)
                 ms = (self._clock() - t_b) * 1e3 / len(idx)
             z_bufs.append(z_dev)
-            plan.launched.append((k, idx, wire, ms))
+            plan.launched.append((k, idx, wire, ms, 0))
             pos[idx] = offset + np.arange(len(idx), dtype=np.int32)
             offset += padded
         # (3) reassemble into submission order ON DEVICE — one gather
@@ -546,11 +602,107 @@ class StreamSplitGateway:
         # array over instead would duplicate (sid, slot) keys and push
         # insert_batch down its duplicate-fold path, whose own gather is
         # per-size too AND pays a host-side fold per tick
-        for k, idx, wire, _ in plan.launched:
-            self._account_bucket(k, idx, pending, wire)
+        for k, idx, wire, _, s in plan.launched:
+            self._account_bucket(k, idx, pending, wire, shard=s)
         if self.backend.device_ingest:
             self._ingest_fleet(pending,            # async device scatter
                                plan.z_all[:len(pending)])
+        self._sync_accounting(pending, now=plan.t_d0)
+
+    def _launch_sharded(self, plan, buckets):
+        """The sharded launch half (``shard_dispatch``): same contract as
+        the single-device plane — one staged H2D, async chains, zero
+        launch-phase syncs — but laid out over the backend's ``sessions``
+        mesh axis so every frame is dispatched ON the device that owns
+        its session's fleet shard:
+
+        (1) the tick's frames are grouped by fleet shard into EQUAL
+            pow2-padded blocks of one host array and staged with a single
+            sharded ``device_put`` — still ONE H2D, each block landing
+            shard-local (``plan.rowmap`` remembers submission idx → row);
+        (2) each shard's k-buckets gather from their zero-copy local view
+            (``addressable_shards``) and run against that shard's
+            committed weight replica, so every edge→wire→server chain —
+            fused Pallas wire kernel included — executes per device;
+        (3) per-shard reassembly gathers restore block order on each
+            device and ``make_array_from_single_device_arrays`` binds the
+            blocks into one global sharded ``(S·block, d)`` array — no
+            cross-device copy, and ``tick_collect`` still pays exactly
+            one sync + one D2H on it;
+        (4) the fleet scatter goes through ``insert_batch_placed`` — a
+            ``shard_map`` over the same axis, so ring ingest never
+            crosses a shard either."""
+        pending, profile = plan.pending, plan.profile
+        plan.t_d0 = self._clock()
+        S = self.backend.shards
+        sids = np.fromiter((sid for sid, _, _ in pending), np.int64,
+                           len(pending))
+        shard = self.backend.shards_of(sids)
+        by_shard = [np.flatnonzero(shard == s) for s in range(S)]
+        block = pad_pow2(max(1, max(len(b) for b in by_shard)))
+        mels = np.stack([m for _, _, m in pending])
+        mel_host = np.empty((S * block,) + mels.shape[1:], np.float32)
+        rowmap = np.empty(len(pending), np.int64)
+        for s, idx_s in enumerate(by_shard):
+            base = s * block
+            mel_host[base:base + len(idx_s)] = mels[idx_s]
+            # pad rows: any real frame's mel — never gathered by a chain,
+            # dropped by the placed scatter, so the content is free
+            mel_host[base + len(idx_s):base + block] = mels[0]
+            rowmap[idx_s] = base + np.arange(len(idx_s))
+        staged = jax.device_put(mel_host, self._staged_sharding)
+        self._staged_h2d += mel_host.nbytes
+        by_dev = {sh.device: sh.data for sh in staged.addressable_shards}
+        z_blocks = []
+        for s in range(S):
+            local = by_dev[self._mesh_devices[s]]
+            idx_s = by_shard[s]
+            if not len(idx_s):
+                z = self._zeros_blocks.get((s, block))
+                if z is None:
+                    z = jax.device_put(
+                        np.zeros((block, self.cfg.d_embed), np.float32),
+                        self._mesh_devices[s])
+                    self._zeros_blocks[(s, block)] = z
+                z_blocks.append(z)
+                continue
+            z_bufs = []
+            pos = np.zeros(block, np.int32)
+            offset = 0
+            for k in sorted(buckets):
+                in_shard = [i for i in buckets[k] if shard[i] == s]
+                if not in_shard:
+                    continue
+                t_b = self._clock() if profile else None
+                loc = (rowmap[in_shard] - s * block).astype(np.int32)
+                padded = pad_pow2(len(loc))
+                gather = np.concatenate(
+                    [loc, np.broadcast_to(loc[:1], (padded - len(loc),))])
+                mel_b = jnp.take(local, gather, axis=0)
+                z_dev, wire = self.engine.run_batch_async(
+                    self._params_by_shard[s], mel_b, k)
+                ms = None
+                if profile:   # diagnostic mode: per-chain round-trips
+                    self._block(z_dev)
+                    ms = (self._clock() - t_b) * 1e3 / len(in_shard)
+                z_bufs.append(z_dev)
+                plan.launched.append((k, in_shard, wire, ms, s))
+                pos[loc] = offset + np.arange(len(loc), dtype=np.int32)
+                offset += padded
+            z_blocks.append(jnp.take(jnp.concatenate(z_bufs), pos, axis=0))
+        plan.z_all = jax.make_array_from_single_device_arrays(
+            (S * block, self.cfg.d_embed), self._staged_sharding, z_blocks)
+        plan.rowmap = rowmap
+        for k, idx, wire, _, s in plan.launched:
+            self._account_bucket(k, idx, pending, wire, shard=s)
+        self.backend.insert_batch_placed(
+            sids,
+            np.fromiter((f.t for _, f, _ in pending), np.int64, len(sids)),
+            plan.z_all,
+            np.fromiter((f.label for _, f, _ in pending), np.int64,
+                        len(sids)),
+            rowmap)
+        self._shard_frames += np.bincount(shard, minlength=S)
         self._sync_accounting(pending, now=plan.t_d0)
 
     def _collect_overlapped(self, plan, results):
@@ -563,9 +715,13 @@ class StreamSplitGateway:
         pending = plan.pending
         z_host = self._d2h(self._block(plan.z_all))
         tick_ms = (self._clock() - plan.t_d0) * 1e3 / len(pending)
+        if plan.rowmap is not None:
+            # sharded plane: un-block the per-shard layout back into
+            # submission order (host-side permutation of the ONE copy)
+            z_host = z_host[plan.rowmap]
         if not self.backend.device_ingest:
             self._ingest_fleet(pending, z_host[:len(pending)])
-        for k, idx, wire, ms in plan.launched:
+        for k, idx, wire, ms, _s in plan.launched:
             route = self._route(k)
             for i in idx:
                 sid, req, _ = pending[i]
@@ -574,21 +730,55 @@ class StreamSplitGateway:
                     wire_bytes=wire,
                     latency_ms=ms if plan.profile else tick_ms,
                     bucket_size=len(idx))
+        if plan.profile:
+            self._last_profile = self._build_profile(plan)
+
+    def _build_profile(self, plan):
+        """Fold a profiled plan's per-chain timings into the
+        ``last_profile`` dict: per-bucket ms (summed across shards, so
+        the field means what it always did) plus per-shard totals —
+        frames, chains, total ms and that shard's own per-bucket split —
+        so cross-shard skew is visible without a profiler."""
+        per_bucket: dict[int, float] = {}
+        per_shard: dict[int, dict] = {}
+        for k, idx, _wire, ms, s in plan.launched:
+            total = (ms or 0.0) * len(idx)
+            per_bucket[k] = per_bucket.get(k, 0.0) + total
+            ps = per_shard.setdefault(
+                s, {"frames": 0, "chains": 0, "ms": 0.0,
+                    "per_bucket_ms": {}})
+            ps["frames"] += len(idx)
+            ps["chains"] += 1
+            ps["ms"] += total
+            ps["per_bucket_ms"][k] = ps["per_bucket_ms"].get(k, 0.0) + total
+        return {"per_bucket_ms": per_bucket, "per_shard": per_shard}
+
+    @property
+    def last_profile(self):
+        """Per-bucket AND per-shard stage timings of the most recent
+        ``tick(profile=True)`` on the overlapped plane (``None`` until
+        one runs).  Shape: ``{"per_bucket_ms": {k: ms}, "per_shard":
+        {shard: {"frames", "chains", "ms", "per_bucket_ms"}}}`` — the
+        single-device plane reports everything under shard 0."""
+        return self._last_profile
 
     def _route(self, k):
         return ("edge" if k >= self.cfg.n_blocks
                 else "server" if k == 0 else "split")
 
-    def _account_bucket(self, k, idx, pending, wire):
+    def _account_bucket(self, k, idx, pending, wire, shard=0):
         """Per-bucket serving counters + per-session accounting (pure
         host state — needs no embedding values, so the overlapped plane
         runs it under the in-flight dispatches; the PR-3 path shares it
-        so the two planes can never drift apart in what they report)."""
+        so the two planes can never drift apart in what they report).
+        On the sharded plane each (shard, k) chain is one dispatch;
+        ``shard`` feeds the per-shard dispatch counters."""
         route = self._route(k)
         self._dispatches += 1
         self._frames += len(idx)
         self._wire_bytes += wire * len(idx)
         self._routed[route] += len(idx)
+        self._dispatch_shard_frames[shard] += len(idx)
         for i in idx:
             sid = pending[i][0]
             s = self._sessions[sid]
@@ -693,6 +883,10 @@ class StreamSplitGateway:
             routed=dict(self._routed),
             backend=self.backend.kind, shards=self.backend.shards,
             shard_frames=tuple(int(v) for v in self._shard_frames),
+            dispatch_shards=(self.backend.shards if self.shard_dispatch
+                             else 1),
+            dispatch_shard_frames=tuple(
+                int(v) for v in self._dispatch_shard_frames),
             snapshot_h2d_bytes=self.backend.snapshot_h2d_bytes,
             ingest_h2d_bytes=self.backend.ingest_h2d_bytes,
             device_syncs_per_tick=self._tick_syncs,

@@ -218,6 +218,11 @@ class GatewayStats:
     backend: str = "host"      # FleetBackend.kind
     shards: int = 1            # session mesh-axis size (1 on host backend)
     shard_frames: tuple = ()   # frames ingested per session shard
+    # sharded dispatch plane (StreamSplitGateway shard_dispatch=True,
+    # docs/SHARDING.md): the per-tick edge→wire→server chains themselves
+    # run per device, co-located with each session's fleet shard
+    dispatch_shards: int = 1   # devices the tick dispatch spreads over
+    dispatch_shard_frames: tuple = ()  # frames dispatched per shard
     snapshot_h2d_bytes: int = 0  # fleet snapshot bytes copied per refine
     ingest_h2d_bytes: int = 0  # frame payload bytes moved host->device
     # overlapped tick data plane (docs/PERF.md): the dispatch chain is

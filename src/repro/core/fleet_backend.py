@@ -343,6 +343,20 @@ class ShardedFleetBackend(FleetBackend):
                     label.at[sids, slots].set(labels),
                     newest.at[sids].max(ts_newest))
 
+        def _ins_placed(z, t, label, newest, sid_zl, slots, ts, zs, labels,
+                        sid_nw, nw_ts):
+            # blocked shard-local scatter (insert_batch_placed): every
+            # operand is an equal per-shard block, so under shard_map each
+            # device scatters only its own rows.  Rows carrying the DROP
+            # sentinel (local sid == rows-per-shard: pads and superseded
+            # duplicate writes) fall out of range and mode="drop" makes
+            # them no-ops; ``newest`` maxes over ALL real rows, which is
+            # order-independent, so duplicates need no fold there.
+            return (z.at[sid_zl, slots].set(zs, mode="drop"),
+                    t.at[sid_zl, slots].set(ts, mode="drop"),
+                    label.at[sid_zl, slots].set(labels, mode="drop"),
+                    newest.at[sid_nw].max(nw_ts, mode="drop"))
+
         def _wipe_admit(z, t, label, newest, active, sid):
             return (z.at[sid].set(0.0),
                     t.at[sid].set(T_SENTINEL_DEV),
@@ -364,6 +378,11 @@ class ShardedFleetBackend(FleetBackend):
         shd = self._sharding
         self._insert_fn = jax.jit(_ins, donate_argnums=(0, 1, 2, 3),
                                   out_shardings=(shd,) * 4)
+        pa = P(axis)
+        self._insert_placed_fn = jax.jit(
+            shard_map(_ins_placed, mesh=mesh, in_specs=(pa,) * 11,
+                      out_specs=(pa,) * 4, check_vma=False),
+            donate_argnums=(0, 1, 2, 3))
         self._wipe_fn = jax.jit(_wipe_admit, donate_argnums=(0, 1, 2, 3, 4),
                                 out_shardings=(shd,) * 5)
         self._implant_fn = jax.jit(_implant, donate_argnums=(0, 1, 2, 3),
@@ -494,6 +513,80 @@ class ShardedFleetBackend(FleetBackend):
         semantics before the scatter, keeping the host-backend parity."""
         with self._lock:
             self._insert_batch_locked(sids, ts, zs, labels)
+
+    def insert_batch_placed(self, sids, ts, zs, labels, rows):
+        """Shard-local scatter of a tick batch already blocked per shard.
+
+        The sharded dispatch plane (``StreamSplitGateway`` with
+        ``shard_dispatch``) lays each tick's embeddings out as one global
+        ``(R, d)`` device array over the sessions axis in equal per-shard
+        blocks; ``rows[i]`` names frame ``i``'s global row in that layout,
+        and every frame's row must sit inside the block owned by its
+        session's shard (checked), so the scatter — a ``shard_map`` over
+        the same axis — never moves a payload byte across shards.  Rows
+        not named by ``rows`` (pads) and duplicate (sid, slot) writes
+        superseded by a later frame scatter with an out-of-range DROP
+        sentinel under ``mode="drop"``; ``newest`` still maxes over every
+        real row, matching ``insert_batch``'s last-wins + max-ts fold.
+        """
+        with self._lock:
+            sids = as_host(sids, np.int64)
+            ts = as_host(ts, np.int64)
+            rows = as_host(rows, np.int64)
+            if not self._active[sids].all():
+                raise KeyError("insert_batch into inactive session")
+            n = len(sids)
+            if n == 0:
+                return
+            if not isinstance(zs, jax.Array):
+                raise TypeError("insert_batch_placed takes the staged "
+                                "device array; host payloads go through "
+                                "insert_batch")
+            R = int(zs.shape[0])
+            if R % self.shards:
+                raise ValueError(f"blocked batch of {R} rows does not "
+                                 f"split over {self.shards} shards")
+            block = R // self.shards
+            rows_ps = self.capacity // self.shards
+            if int(ts.max()) > np.iinfo(np.int32).max:
+                raise ValueError("frame index exceeds the device ring's "
+                                 "int32 range; re-key session time or use "
+                                 "HostFleetBackend")
+            shard = self.shards_of(sids)
+            if not np.array_equal(rows // block, shard):
+                raise ValueError("frame placed in a row block that is not "
+                                 "its session's shard")
+            if labels is None:
+                labels = np.full(n, -1, np.int64)
+            labels32 = as_host(labels, np.int64).astype(np.int32)
+            loc = (sids - shard * rows_ps).astype(np.int32)
+            slots = np.asarray(ts % self.window, np.int32)
+            drop = np.int32(rows_ps)     # out of local range -> no-op
+            sid_zl = np.full(R, drop, np.int32)
+            slot_b = np.zeros(R, np.int32)
+            ts_b = np.zeros(R, np.int32)
+            lab_b = np.zeros(R, np.int32)
+            sid_nw = np.full(R, drop, np.int32)
+            nw_b = np.zeros(R, np.int32)
+            keep = np.ones(n, bool)
+            keys = sids * self.window + slots
+            if len(np.unique(keys)) < n:
+                last = {}
+                for i, k in enumerate(keys.tolist()):
+                    last[k] = i
+                keep[:] = False
+                keep[np.fromiter(last.values(), np.int64)] = True
+            kr = rows[keep]
+            sid_zl[kr] = loc[keep]
+            slot_b[kr] = slots[keep]
+            ts_b[kr] = ts[keep].astype(np.int32)
+            lab_b[kr] = labels32[keep]
+            sid_nw[rows] = loc
+            nw_b[rows] = ts.astype(np.int32)
+            self.ingest_d2d_bytes += n * self.dim * 4
+            self.z, self.t, self.label, self.newest = self._insert_placed_fn(
+                self.z, self.t, self.label, self.newest, sid_zl, slot_b,
+                ts_b, zs, lab_b, sid_nw, nw_b)
 
     def _insert_batch_locked(self, sids, ts, zs, labels):
         sids = as_host(sids, np.int64)

@@ -1,13 +1,18 @@
-"""Production meshes.
+"""Production meshes + the ``jax.distributed`` multi-host on-ramp.
 
 Functions, not module-level constants — importing this module never
 touches jax device state (device count is locked at first jax init, and
 smoke tests must see 1 device while the dry-run sees 512)."""
 from __future__ import annotations
 
+import os
+
 import jax
 
 from repro.compat import make_mesh as _mk
+
+# process-level latch: jax.distributed.initialize may run at most once
+_distributed = {"initialized": False}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -33,3 +38,43 @@ def make_sessions_mesh(n_shards=None, *, axis=None):
     from repro.distributed.sharding import SESSIONS_AXIS
     n = len(jax.devices()) if n_shards is None else n_shards
     return _mk((n,), (axis or SESSIONS_AXIS,))
+
+
+def maybe_init_distributed(*, env=None, initialize=None) -> bool:
+    """The multi-host on-ramp: initialize ``jax.distributed`` from the
+    launcher environment, or no-op in a plain single-process run.
+
+    Environment contract (presence of the coordinator turns this on)::
+
+        REPRO_COORDINATOR    host:port of process 0's coordinator service
+        REPRO_NUM_PROCESSES  total process count           (default 1)
+        REPRO_PROCESS_ID     this process's index           (default 0)
+
+    Call it before the first jax device query (first thing in a launcher
+    ``main``): after ``jax.distributed.initialize``, ``jax.devices()``
+    returns the GLOBAL device list, so ``make_sessions_mesh()`` with no
+    argument spans the whole job and the sharded fleet/dispatch planes
+    scale out with zero further configuration.  Returns True when the
+    process joined (or had already joined) a distributed job, False for
+    the single-process no-op.  Idempotent per process.
+
+    ``env``/``initialize`` are injection seams for tests — real callers
+    pass neither (``os.environ`` / ``jax.distributed.initialize``).
+    """
+    env = os.environ if env is None else env
+    coordinator = env.get("REPRO_COORDINATOR")
+    if not coordinator:
+        return False
+    if _distributed["initialized"]:
+        return True
+    n_proc = int(env.get("REPRO_NUM_PROCESSES", "1"))
+    proc_id = int(env.get("REPRO_PROCESS_ID", "0"))
+    if not 0 <= proc_id < n_proc:
+        raise ValueError(
+            f"REPRO_PROCESS_ID={proc_id} out of range for "
+            f"REPRO_NUM_PROCESSES={n_proc}")
+    init = jax.distributed.initialize if initialize is None else initialize
+    init(coordinator_address=coordinator, num_processes=n_proc,
+         process_id=proc_id)
+    _distributed["initialized"] = True
+    return True

@@ -288,6 +288,61 @@ def test_em_update_zero_weights_drop_frames():
 
 
 # ---------------------------------------------------------------------------
+# insert_batch_placed: the sharded dispatch plane's blocked scatter
+# ---------------------------------------------------------------------------
+
+def test_insert_batch_placed_matches_plain_scatter():
+    """The blocked shard-local scatter (``insert_batch_placed``) leaves
+    the rings exactly as ``insert_batch``: pad rows drop, duplicate
+    (sid, slot) writes keep the LAST payload, ``newest`` sees the max
+    timestamp — the same fold, expressed as drop-sentinel rows."""
+    rng = np.random.default_rng(0)
+    a = ShardedFleetBackend(capacity=4, window=6, dim=DIM)
+    b = ShardedFleetBackend(capacity=4, window=6, dim=DIM)
+    for x in (a, b):
+        for _ in range(3):
+            x.admit()
+    # three duplicates of (sid 0, slot 1): ts 7, 1 and 13 all land on
+    # slot 1 — last-wins keeps ts 13's payload, newest[0] becomes 13
+    sids = np.array([0, 2, 0, 1, 0])
+    ts = np.array([7, 3, 1, 2, 13])
+    zs = rng.normal(size=(5, DIM)).astype(np.float32)
+    labels = np.array([1, 2, 3, 4, 5])
+    a.insert_batch(sids, ts, jnp.asarray(zs), labels)
+    blocked = np.zeros((8, DIM), np.float32)   # 3 pad rows at the tail
+    rows = np.arange(5)
+    blocked[rows] = zs
+    b.insert_batch_placed(sids, ts,
+                          jax.device_put(jnp.asarray(blocked), b._sharding),
+                          labels, rows)
+    for xa, xb in zip((a.z, a.t, a.label, a.newest),
+                      (b.z, b.t, b.label, b.newest)):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+    # accounting counts the real frame payload, like insert_batch
+    assert b.ingest_d2d_bytes == a.ingest_d2d_bytes == 5 * DIM * 4
+    assert b.ingest_h2d_bytes == 0
+    # empty batch: the host-buffer no-op contract rides along
+    b.insert_batch_placed(np.array([], np.int64), np.array([], np.int64),
+                          b.z[:0, 0], None, np.array([], np.int64))
+
+
+def test_insert_batch_placed_validates_inputs():
+    b = ShardedFleetBackend(capacity=4, window=6, dim=DIM)
+    b.admit()
+    z1 = jax.device_put(jnp.zeros((2, DIM), jnp.float32), b._sharding)
+    with pytest.raises(TypeError):     # host payloads go via insert_batch
+        b.insert_batch_placed(np.array([0]), np.array([0]),
+                              np.zeros((2, DIM), np.float32), None,
+                              np.array([0]))
+    with pytest.raises(KeyError):      # inactive session
+        b.insert_batch_placed(np.array([3]), np.array([0]), z1, None,
+                              np.array([0]))
+    with pytest.raises(ValueError, match="int32"):
+        b.insert_batch_placed(np.array([0]), np.array([2 ** 40]), z1, None,
+                              np.array([0]))
+
+
+# ---------------------------------------------------------------------------
 # Multi-shard: forced host devices (subprocess -> slow/full CI lane)
 # ---------------------------------------------------------------------------
 

@@ -483,3 +483,217 @@ def test_gateway_rejects_backend_dim_mismatch(params):
         StreamSplitGateway(CFG, params, policy=FixedKPolicy(L, 1),
                            backend=HostFleetBackend(
                                capacity=2, window=8, dim=CFG.d_embed + 1))
+
+
+# ---------------------------------------------------------------------------
+# Sharded dispatch plane (shard_dispatch=True; docs/SHARDING.md)
+# ---------------------------------------------------------------------------
+
+def test_shard_dispatch_one_shard_bitwise_matches_overlapped(params):
+    """Forcing ``shard_dispatch`` on a 1-shard backend is the in-process
+    bitwise-parity configuration of the sharded plane: identical
+    results, identical staged bytes (the S=1 blocked layout IS the flat
+    layout), the one-sync contract, and rings identical to the plain
+    overlapped plane's ``insert_batch`` path."""
+    from repro.api import ShardedFleetBackend
+
+    def mk(**kw):
+        return StreamSplitGateway(
+            CFG, params, policy=SpreadPolicy(L), qos_reserve=0,
+            backend=ShardedFleetBackend(capacity=6, window=8,
+                                        dim=CFG.d_embed), **kw)
+
+    gw_a = mk()                       # plain overlapped plane (auto-off)
+    gw_b = mk(shard_dispatch=True)    # sharded plane on ONE shard
+    assert not gw_a.shard_dispatch and gw_b.shard_dispatch
+    rng = np.random.default_rng(3)
+    sa = [gw_a.open_session().sid for _ in range(5)]
+    sb = [gw_b.open_session().sid for _ in range(5)]
+    for t in range(3):
+        mels = [_mel(rng) for _ in range(5)]
+        for gw, sids in ((gw_a, sa), (gw_b, sb)):
+            for i, sid in enumerate(sids):
+                gw.submit(sid, FrameRequest(t=t, mel=mels[i],
+                                            label=t % N_CLASSES))
+        for ra, rb in zip(gw_a.tick(), gw_b.tick()):
+            np.testing.assert_array_equal(ra.z, rb.z)
+            assert ra.k == rb.k and ra.wire_bytes == rb.wire_bytes
+    st_a, st_b = gw_a.stats(), gw_b.stats()
+    assert st_b.device_syncs_per_tick == 1
+    assert st_b.d2h_copies_per_tick == 1
+    assert st_b.staged_h2d_bytes == st_a.staged_h2d_bytes
+    assert (st_a.dispatch_shards, st_b.dispatch_shards) == (1, 1)
+    assert sum(st_b.dispatch_shard_frames) == st_b.frames == 15
+    assert st_b.ingest_h2d_bytes == 0
+    for xa, xb in zip(gw_a.backend.snapshot(), gw_b.backend.snapshot()):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+def test_shard_dispatch_argument_validation(params):
+    from repro.api import HostFleetBackend, ShardedFleetBackend
+    with pytest.raises(ValueError, match="overlap"):
+        StreamSplitGateway(
+            CFG, params, policy=FixedKPolicy(L, 1), overlap=False,
+            shard_dispatch=True,
+            backend=ShardedFleetBackend(capacity=2, window=8,
+                                        dim=CFG.d_embed))
+    with pytest.raises(ValueError, match="device-resident"):
+        StreamSplitGateway(
+            CFG, params, policy=FixedKPolicy(L, 1), shard_dispatch=True,
+            backend=HostFleetBackend(capacity=2, window=8,
+                                     dim=CFG.d_embed))
+
+
+def test_shard_dispatch_profile_reports_per_shard(params):
+    """``tick(profile=True)`` surfaces per-shard stage timings next to
+    the per-bucket split (``gateway.last_profile``) on BOTH planes —
+    the single-device plane reports everything under shard 0."""
+    from repro.api import ShardedFleetBackend
+    rng = np.random.default_rng(5)
+
+    def run_profiled(gw):
+        sids = [gw.open_session().sid for _ in range(4)]
+        assert gw.last_profile is None
+        for sid in sids:
+            gw.submit(sid, FrameRequest(t=0, mel=_mel(rng)))
+        gw.tick(profile=True)
+        return gw.last_profile
+
+    prof = run_profiled(StreamSplitGateway(
+        CFG, params, policy=SpreadPolicy(L), qos_reserve=0,
+        shard_dispatch=True,
+        backend=ShardedFleetBackend(capacity=4, window=8,
+                                    dim=CFG.d_embed)))
+    assert set(prof["per_shard"]) == {0}
+    ps = prof["per_shard"][0]
+    assert ps["frames"] == 4
+    assert ps["chains"] == len(prof["per_bucket_ms"]) == 4
+    assert set(ps["per_bucket_ms"]) == set(prof["per_bucket_ms"])
+    assert all(v >= 0.0 for v in prof["per_bucket_ms"].values())
+    # plain overlapped plane: same shape, shard 0 only
+    prof_h = run_profiled(StreamSplitGateway(
+        CFG, params, policy=SpreadPolicy(L), capacity=4, window=8,
+        qos_reserve=0))
+    assert set(prof_h["per_shard"]) == {0}
+    assert prof_h["per_shard"][0]["frames"] == 4
+
+
+_SHARDED_DISPATCH_PARITY = """
+import jax, numpy as np
+S = @S@
+assert len(jax.devices()) == S
+from repro.api import FrameRequest, ShardedFleetBackend, StreamSplitGateway
+from repro.launch.mesh import make_sessions_mesh
+from repro.models.audio_encoder import AudioEncCfg, init_audio_encoder
+
+CFG = AudioEncCfg(widths=(8, 8, 8, 8), strides=(1, 1, 1, 1), n_mels=8,
+                  frames=8, d_embed=16, groups=2)
+L = CFG.n_blocks
+params = init_audio_encoder(CFG, jax.random.PRNGKey(0))
+
+class Spread:
+    def __init__(self, L):
+        self.L = L
+    def decide(self, obs):
+        return np.arange(len(obs), dtype=np.int64) % (self.L + 1)
+
+def mk(backend=None):
+    return StreamSplitGateway(CFG, params, policy=Spread(L), capacity=8,
+                              window=8, qos_reserve=0, backend=backend)
+
+n = 7                      # != 0 mod S: uneven per-shard blocks
+gw_ref = mk()              # host backend, single-device overlapped plane
+gw_sh = mk(ShardedFleetBackend(capacity=8, window=8, dim=CFG.d_embed,
+                               mesh=make_sessions_mesh(S)))
+assert gw_sh.shard_dispatch, "shard_dispatch must auto-enable on shards>1"
+rng = np.random.default_rng(0)
+sr = [gw_ref.open_session().sid for _ in range(n)]
+ss = [gw_sh.open_session().sid for _ in range(n)]
+
+def feed(gw, sids, t, mels):
+    for i, sid in enumerate(sids):
+        gw.submit(sid, FrameRequest(t=t, mel=mels[i], label=t % 3))
+
+# tick(): per-device chains, embeddings == the unsharded overlapped
+# plane serving the same admitted order, bit for bit
+for t in range(3):
+    mels = [rng.normal(size=(8, 8)).astype(np.float32) for _ in range(n)]
+    feed(gw_ref, sr, t, mels); feed(gw_sh, ss, t, mels)
+    for rr, rs in zip(gw_ref.tick(), gw_sh.tick()):
+        np.testing.assert_array_equal(rr.z, rs.z)
+        assert rr.k == rs.k and rr.wire_bytes == rs.wire_bytes
+st = gw_sh.stats()
+assert st.device_syncs_per_tick == 1 and st.d2h_copies_per_tick == 1
+assert st.dispatch_shards == S
+assert sum(st.dispatch_shard_frames) == st.frames == 3 * n
+assert all(f > 0 for f in st.dispatch_shard_frames)
+assert st.ingest_h2d_bytes == 0   # scatter stayed shard-local
+
+# a tick that leaves S-1 shards idle holds every contract too
+m = rng.normal(size=(8, 8)).astype(np.float32)
+gw_ref.submit(sr[0], FrameRequest(t=3, mel=m, label=0))
+gw_sh.submit(ss[0], FrameRequest(t=3, mel=m, label=0))
+np.testing.assert_array_equal(gw_ref.tick()[0].z, gw_sh.tick()[0].z)
+assert gw_sh.stats().device_syncs_per_tick == 1
+
+# interleaved tick_launch/tick_collect: the streaming runtime's
+# pipelining seam — one sync per collected tick survives two plans in
+# flight
+mels1 = [rng.normal(size=(8, 8)).astype(np.float32) for _ in range(n)]
+mels2 = [rng.normal(size=(8, 8)).astype(np.float32) for _ in range(n)]
+feed(gw_sh, ss, 4, mels1)
+p0 = gw_sh.tick_launch()
+feed(gw_sh, ss, 5, mels2)
+p1 = gw_sh.tick_launch()
+r0 = gw_sh.tick_collect(p0)
+r1 = gw_sh.tick_collect(p1)
+assert gw_sh.stats().device_syncs_per_tick == 1
+assert gw_sh.stats().d2h_copies_per_tick == 1
+for t, mels, res in ((4, mels1, r0), (5, mels2, r1)):
+    feed(gw_ref, sr, t, mels)
+    for rr, rs in zip(gw_ref.tick(), res):
+        np.testing.assert_array_equal(rr.z, rs.z)
+
+# the placed scatter left the rings exactly as host-backend ingest did
+# (admission order, not row index, is the cross-backend identity)
+zh, mh, lh = (np.asarray(a) for a in gw_ref.backend.snapshot())
+zd, md, ld = (np.asarray(a) for a in gw_sh.backend.snapshot())
+np.testing.assert_array_equal(zh[np.array(sr)], zd[np.array(ss)])
+np.testing.assert_array_equal(mh[np.array(sr)], md[np.array(ss)])
+np.testing.assert_array_equal(lh[np.array(sr)], ld[np.array(ss)])
+
+# misplacing a frame on a foreign shard's row block must raise, not
+# silently scatter cross-shard
+import jax.numpy as jnp
+be = gw_sh.backend
+zbad = jax.device_put(jnp.zeros((S, CFG.d_embed), jnp.float32),
+                      be._sharding)
+try:
+    wrong = (int(be.shards_of(np.array([ss[0]]))[0]) + 1) % S
+    be.insert_batch_placed(np.array([ss[0]]), np.array([99]), zbad, None,
+                           np.array([wrong]))
+    raise SystemExit("misplaced row was accepted")
+except ValueError:
+    pass
+
+# per-shard profile: every shard reports its own stage timings
+feed(gw_sh, ss, 6, mels1)
+gw_sh.tick(profile=True)
+prof = gw_sh.last_profile
+assert set(prof["per_shard"]) == set(range(S))
+assert sum(d["frames"] for d in prof["per_shard"].values()) == n
+print("OK", S)
+"""
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+def test_sharded_dispatch_multi_device_parity(subproc, shards):
+    """Tentpole contract, end to end on forced host devices: per-device
+    edge→wire→server chains over the sessions axis produce embeddings
+    bit-identical to the unsharded overlapped plane, with ONE device
+    sync and ONE D2H per collected tick — via ``tick()`` AND through
+    the interleaved launch/collect pipelining seam — shard-local ring
+    ingest, and per-shard profile timings."""
+    out = subproc(_SHARDED_DISPATCH_PARITY.replace("@S@", str(shards)),
+                  devices=shards)
+    assert out.strip().endswith(f"OK {shards}")

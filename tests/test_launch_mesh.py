@@ -1,0 +1,74 @@
+"""launch/mesh: session meshes + the ``jax.distributed`` multi-host
+on-ramp (``maybe_init_distributed``).
+
+The on-ramp smoke injects a fake ``initialize`` — a real coordinator
+needs a multi-process job, which is the follow-up PR's launcher config;
+what THIS repo pins is the env contract and the idempotence latch."""
+import jax
+import pytest
+
+from repro.launch import mesh as mesh_mod
+from repro.launch.mesh import (make_sessions_mesh, make_test_mesh,
+                               maybe_init_distributed)
+
+
+def test_sessions_mesh_defaults_to_visible_devices():
+    m = make_sessions_mesh()
+    assert m.shape == {"sessions": len(jax.devices())}
+    assert make_sessions_mesh(1, axis="rows").shape == {"rows": 1}
+
+
+def test_test_mesh_shape():
+    assert make_test_mesh((1, 1)).shape == {"data": 1, "model": 1}
+
+
+@pytest.fixture
+def fresh_latch():
+    """Each test sees an un-initialized process latch and restores it."""
+    saved = dict(mesh_mod._distributed)
+    mesh_mod._distributed["initialized"] = False
+    yield mesh_mod._distributed
+    mesh_mod._distributed.clear()
+    mesh_mod._distributed.update(saved)
+
+
+def test_maybe_init_distributed_noop_without_coordinator(fresh_latch):
+    calls = []
+    assert maybe_init_distributed(env={}, initialize=calls.append) is False
+    assert calls == [] and not fresh_latch["initialized"]
+
+
+def test_maybe_init_distributed_reads_env_contract(fresh_latch):
+    calls = []
+
+    def fake_init(**kw):
+        calls.append(kw)
+
+    env = {"REPRO_COORDINATOR": "10.0.0.1:1234",
+           "REPRO_NUM_PROCESSES": "4", "REPRO_PROCESS_ID": "2"}
+    assert maybe_init_distributed(env=env, initialize=fake_init) is True
+    assert calls == [{"coordinator_address": "10.0.0.1:1234",
+                      "num_processes": 4, "process_id": 2}]
+    # idempotent: a second call is a no-op returning True
+    assert maybe_init_distributed(env=env, initialize=fake_init) is True
+    assert len(calls) == 1
+
+
+def test_maybe_init_distributed_defaults_and_validation(fresh_latch):
+    calls = []
+
+    def fake_init(**kw):
+        calls.append(kw)
+
+    env = {"REPRO_COORDINATOR": "head:9999"}
+    assert maybe_init_distributed(env=env, initialize=fake_init) is True
+    # single-entry defaults: one process, id 0 — harmless to join
+    assert calls == [{"coordinator_address": "head:9999",
+                      "num_processes": 1, "process_id": 0}]
+    fresh_latch["initialized"] = False
+    with pytest.raises(ValueError, match="REPRO_PROCESS_ID"):
+        maybe_init_distributed(
+            env={"REPRO_COORDINATOR": "head:9999",
+                 "REPRO_NUM_PROCESSES": "2", "REPRO_PROCESS_ID": "2"},
+            initialize=fake_init)
+    assert len(calls) == 1 and not fresh_latch["initialized"]
