@@ -1,6 +1,8 @@
 """Multi-gateway federation benchmark: a ``GatewayCluster`` of N member
 ``StreamServer``s under steady mixed-k load, with a live ``drain()``
-(rolling-restart migration) in the middle of the run.
+(rolling-restart migration) in the middle of the run, plus a CHAOS lane
+(seeded member kill mid-stream, replication off vs on — the loss bound
+and the bit-identical journal-replay recovery are hard asserts).
 
 **Lane — drain under load, N ∈ {2, 4} members.**  ``sessions_per_member``
 sessions per member (consistent-hash placement), every session holding a
@@ -217,6 +219,124 @@ def bench_cluster_drain(members=2, *, rounds=8,
     }
 
 
+def _chaos_once(*, replicate, members, rounds, spm, cfg, params, us,
+                seed=0):
+    """One seeded kill-mid-stream run; same schedule, same kill step,
+    replication on or off.  Returns (cluster, infos, results, kill_step,
+    victim)."""
+    from repro.cluster import FailureInjector, GatewayCluster, HashRing
+    n = members * spm
+    names = [f"g{i}" for i in range(members)]
+    # the victim is the ring owner of gsid 0 — computable before the
+    # cluster exists (the ring is a pure function of membership + seed),
+    # so the injector can be installed at construction
+    victim = HashRing(names, seed=seed).owner(0)
+    kill_step = WARMUP_ROUNDS + max(1, rounds // 2)
+    results = []
+    cl = GatewayCluster({nm: _member(cfg, params, n) for nm in names},
+                        seed=seed, snapshot_every=2, replicate=replicate,
+                        on_result=results.append,
+                        injectors={victim: FailureInjector(
+                            fail_at=(kill_step,))})
+    infos = [cl.open_session() for _ in range(n)]
+    assert cl.session_member(infos[0].sid) == victim
+    # every round_ below is exactly one cluster step — no intermediate
+    # pump, so the injector's step id maps 1:1 onto the round index
+    t_next = 0
+
+    def round_():
+        nonlocal t_next
+        for i in infos:
+            cl.submit(i.sid, _req(i.sid, t_next, cfg, us))
+        cl.step()
+        t_next += 1
+        st = cl.stats()
+        assert st.conserved, (st.submitted, st.served, st.queue_depth,
+                              st.in_flight, st.shed_expired,
+                              st.lost_in_flight)
+
+    for _ in range(WARMUP_ROUNDS + rounds):
+        round_()
+    cl.pump()
+    st = cl.stats()
+    assert st.conserved and st.failures == 1
+    assert victim not in st.members
+    assert st.sessions_open == n and cl.lost_sessions == []
+    return cl, infos, results, t_next, victim
+
+
+def bench_cluster_chaos(members=2, *, rounds=8,
+                        spm=SESSIONS_PER_MEMBER):
+    """Seeded member kill mid-stream, replication OFF vs ON — the
+    self-healing lane.  Hard asserts: the ON run loses STRICTLY fewer
+    frames than the OFF run on the same schedule (with a per-step
+    journal flush: zero), and every recovered stream's (z, k) is
+    bit-identical to an unfailed replay on a fresh single gateway."""
+    from repro.api import StreamSplitGateway
+    from repro.models.audio_encoder import AudioEncCfg, init_audio_encoder
+    cfg = AudioEncCfg(**DEEP_KW)
+    params = init_audio_encoder(cfg, jax.random.PRNGKey(0))
+    n = members * spm
+    us = [float(u) for u in
+          np.random.default_rng(3).permutation(np.linspace(0.02, 0.98, n))]
+
+    cl_off, _, _, _, _ = _chaos_once(replicate=False, members=members,
+                                     rounds=rounds, spm=spm, cfg=cfg,
+                                     params=params, us=us)
+    lost_off = sum(cl_off.stats().lost_in_flight.values())
+    assert lost_off > 0     # checkpoint-only recovery drops the backlog
+
+    t0 = time.perf_counter()
+    cl_on, infos, results, t_next, victim = _chaos_once(
+        replicate=True, members=members, rounds=rounds, spm=spm,
+        cfg=cfg, params=params, us=us)
+    dt = time.perf_counter() - t0
+    st = cl_on.stats()
+    lost_on = sum(st.lost_in_flight.values())
+    assert lost_on < lost_off            # the headline loss bound
+    assert lost_on == 0                  # per-step flush: zero loss
+    assert st.failovers > 0 and st.replayed_frames > 0
+    assert st.served == st.submitted
+    assert sum(st.shed_expired.values()) == 0
+
+    # replay-parity oracle over EVERY session (recovered and not):
+    # checkpoint + journal replay must be invisible to the embedding
+    by_sid = {}
+    for r in results:
+        assert r.t not in by_sid.setdefault(r.sid, {})   # no dupes
+        by_sid[r.sid][r.t] = r
+    oracle = StreamSplitGateway(cfg, params,
+                                policy=MixedKPolicy(cfg.n_blocks),
+                                capacity=n, window=16,
+                                qos_reserve=0, overlap=True)
+    for gsid in sorted(by_sid):
+        assert sorted(by_sid[gsid]) == list(range(t_next))
+        osid = oracle.open_session().sid
+        for t in range(t_next):
+            oracle.submit(osid, _req(gsid, t, cfg, us))
+            (ref,) = oracle.tick()
+            got = by_sid[gsid][t]
+            assert (got.z == ref.z).all() and got.k == ref.k, \
+                f"recovered session {gsid} diverged at t={t}"
+
+    for i in infos:
+        cl_on.close_session(i.sid)
+    return {
+        "members": members,
+        "sessions": n,
+        "rounds": rounds,
+        "victim": victim,
+        "frames_per_s": (t_next * n) / dt,
+        "lost_replication_off": lost_off,
+        "lost_replication_on": lost_on,
+        "failovers": st.failovers,
+        "replayed_frames": st.replayed_frames,
+        "journal_bytes": st.journal_bytes,
+        "retries": st.retries,
+        "bit_identical_replay": True,
+    }
+
+
 def run_all(*, quick=False, smoke=False):
     result = {"cluster": {}}
     rounds = 4 if smoke else (6 if quick else 10)
@@ -235,6 +355,13 @@ def run_all(*, quick=False, smoke=False):
             f"{fps['during_drain']:.0f} frames/s during drain "
             f"(before {fps['before']:.0f}, after {fps['after']:.0f}), "
             "0 shed, 0 lost, bit-identical migrated replay")
+    c = bench_cluster_chaos(2, rounds=rounds)
+    result["chaos"] = {2: c}
+    row("cluster.chaos_lost_frames", float(c["lost_replication_on"]),
+        f"lost with replication ON (OFF run: "
+        f"{c['lost_replication_off']}), {c['failovers']} failovers, "
+        f"{c['replayed_frames']} journal frames replayed "
+        f"({c['journal_bytes']} B shipped), bit-identical recovery")
     print("BENCH " + json.dumps({"bench": "cluster_serve", **result}))
     return result
 

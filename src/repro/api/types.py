@@ -10,7 +10,7 @@ mutable state.
 from __future__ import annotations
 
 import pickle
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from enum import Enum
 
 import numpy as np
@@ -48,6 +48,44 @@ class AdmissionError(FleetFullError):
         super().__init__(
             f"admission refused for {qos.value} session: "
             f"{n_active}/{capacity} fleet rows in use")
+
+
+class ClusterDegradedError(RuntimeError):
+    """Typed degraded-mode refusal of a ``GatewayCluster``
+    (``repro.cluster``; docs/FEDERATION.md): live capacity fell below
+    the configured watermark, so new sessions are refused and BULK
+    frames are shed at the door — the surviving members' headroom is
+    reserved for the streams they already hold.  Counted
+    (``ClusterStats.rejected_degraded``), never silent; the refused
+    work never enters ``submitted``, so conservation is untouched."""
+
+    def __init__(self, live: int, expected: int, watermark: float,
+                 what: str = "admission"):
+        self.live = live
+        self.expected = expected
+        self.watermark = watermark
+        super().__init__(
+            f"cluster degraded: {live}/{expected} members live "
+            f"(watermark {watermark:.2f}) — {what} refused until "
+            "capacity recovers")
+
+
+class ClusterDrainTimeout(RuntimeError):
+    """Typed drain-stall summary of ``GatewayCluster.stop(drain=True)``:
+    the step budget ran out with frames still outstanding.  ``stragglers``
+    maps each stuck session's global sid to its outstanding frame count
+    (submitted but neither served, shed, nor counted lost) — before
+    this error a stalled drain exited only through an untyped pump
+    failure with no record of WHICH streams were stuck."""
+
+    def __init__(self, stragglers: dict, steps: int):
+        self.stragglers = dict(stragglers)
+        self.steps = steps
+        super().__init__(
+            f"cluster drain stalled after {steps} steps: "
+            f"{len(self.stragglers)} session(s) still hold "
+            f"{sum(self.stragglers.values())} outstanding frame(s) "
+            f"(gsids {sorted(self.stragglers)})")
 
 
 @dataclass(frozen=True)
@@ -337,6 +375,17 @@ class ClusterStats:
     failures: int              # members lost and recovered from
     ring_share: dict           # member -> owned fraction of hash space
     member_stats: dict         # member -> StreamStats (live members)
+    # self-healing federation (PR 9; cluster/{replication,health}.py):
+    degraded: bool = False     # live capacity below the watermark NOW
+    failovers: int = 0         # sessions restored onto a survivor
+    retries: int = 0           # transient member faults retried away
+    replayed_frames: int = 0   # journal entries re-queued by failovers
+    journal_bytes: int = 0     # bytes shipped over the owner->buddy seam
+    rejected_degraded: dict = field(default_factory=dict)
+    #                            class -> degraded-mode door refusals
+    #                            (not in ``submitted``, like other rejects)
+    drain_stragglers: int = 0  # sessions stuck at a stop(drain=True)
+    #                            timeout (see ClusterDrainTimeout)
 
     @property
     def conserved(self) -> bool:

@@ -1,25 +1,43 @@
 """Multi-gateway federation: consistent-hash routing, live session
-migration, and chaos-tested drain/rebalance (docs/FEDERATION.md).
+migration, frame journaling + buddy replication, heartbeat failure
+detection, and chaos-tested drain/rebalance (docs/FEDERATION.md).
 
 Public surface::
 
     from repro.cluster import GatewayCluster, HashRing, SessionSnapshot
     from repro.cluster import FailureInjector, StragglerMonitor
+    from repro.cluster import FrameJournal, ReplicationLog
+    from repro.cluster import HeartbeatMonitor, MemberHungError
+    from repro.cluster import RetryPolicy, TransientFault
 """
-from repro.api.types import (ClusterStats, ServerSessionSnapshot,
+from repro.api.types import (ClusterDegradedError, ClusterDrainTimeout,
+                             ClusterStats, ServerSessionSnapshot,
                              SessionSnapshot)
 from repro.cluster.cluster import GatewayCluster
 from repro.cluster.hashing import HashRing
-from repro.runtime.fault import (FailureInjector, StragglerEvent,
-                                 StragglerMonitor)
+from repro.cluster.health import HeartbeatMonitor, MemberHungError
+from repro.cluster.replication import (FrameJournal, JournalEntry,
+                                       ReplicationLog)
+from repro.runtime.fault import (FailureInjector, RetryPolicy,
+                                 StragglerEvent, StragglerMonitor,
+                                 TransientFault)
 
 __all__ = [
+    "ClusterDegradedError",
+    "ClusterDrainTimeout",
     "ClusterStats",
     "FailureInjector",
+    "FrameJournal",
     "GatewayCluster",
     "HashRing",
+    "HeartbeatMonitor",
+    "JournalEntry",
+    "MemberHungError",
+    "ReplicationLog",
+    "RetryPolicy",
     "ServerSessionSnapshot",
     "SessionSnapshot",
     "StragglerEvent",
     "StragglerMonitor",
+    "TransientFault",
 ]

@@ -1,4 +1,4 @@
-"""``GatewayCluster`` — multi-gateway federation over ``StreamServer``s.
+"""``GatewayCluster`` — self-healing multi-gateway federation.
 
 One gateway serves one accelerator's fleet; a deployment has several.
 This module federates N member servers behind a single session API:
@@ -15,18 +15,37 @@ This module federates N member servers behind a single session API:
   ORIGINAL deadline travel together, so a migrated stream is
   indistinguishable from one that never moved (the bit-parity oracle in
   ``tests/test_cluster.py`` pins this).
-- **Fault tolerance**: a member that dies mid-step (detected by the
-  exception, injected in tests via ``runtime/fault.FailureInjector``)
-  is removed from the ring; its sessions resume on survivors from the
-  last periodic checkpoint (``snapshot_every``).  Frames that were
-  queued or in flight on the dead member are counted — never silently
-  dropped — in ``ClusterStats.lost_in_flight``, which is exactly the
-  term that keeps the cluster-wide conservation identity
+- **Fault tolerance, bounded loss** (``cluster/replication.py``): with
+  ``replicate=True`` every accepted frame is write-ahead-journaled on a
+  deterministic buddy member (the next live ring node past the owner)
+  through the member's ``on_admit`` journal-ack hook, and recovery from
+  a member death is *import the last checkpoint + replay the journal's
+  open entries* through the ordinary ``import_session`` seam — so
+  ``lost_in_flight`` shrinks from "everything since ``snapshot_every``"
+  to "frames admitted but not yet journal-acked" (at most one
+  ``journal_flush_every`` window).  Whatever is still unrecoverable is
+  counted — never silently dropped — in ``ClusterStats.lost_in_flight``,
+  the term that keeps the cluster-wide conservation identity
 
       submitted == served + queue_depth + in_flight
                    + shed_expired + lost_in_flight
 
-  true at every ``stats()`` snapshot, including across failures.
+  true at every ``stats()`` snapshot, including across repeated
+  kill → recover → kill cycles.
+- **Failure detection** (``cluster/health.py``): a member that RAISES
+  dies at the exception seam, as before; a member that HANGS (makes no
+  progress without raising) is caught by heartbeat suspicion on the
+  injected timer and routed through the same recovery path.  Transient
+  faults (``runtime/fault.TransientFault``) from member submit / step /
+  checkpoint calls are retried with deterministic exponential backoff
+  (``RetryPolicy`` — no wall-clock sleeps) instead of executing the
+  member; only exhausted retries or fatal exceptions fail it over.
+- **Graceful degradation**: when live membership falls below
+  ``degraded_below`` × the peak membership, the cluster turns visibly
+  degraded — new sessions and BULK frames are refused with the typed
+  ``ClusterDegradedError`` (counted in ``rejected_degraded``), keeping
+  the survivors' headroom for the streams they already hold.  The mode
+  clears itself as soon as capacity returns via ``add_member``.
   ``StragglerMonitor`` feeds a slow-member signal that shrinks the
   member's hash-space share (placement bias; nothing is evicted).
 
@@ -52,8 +71,13 @@ from dataclasses import replace
 
 import numpy as np
 
-from repro.api.types import AdmissionError, ClusterStats, QoSClass
+from repro.api.types import (AdmissionError, ClusterDegradedError,
+                             ClusterDrainTimeout, ClusterStats, QoSClass,
+                             ServerSessionSnapshot)
 from repro.cluster.hashing import HashRing
+from repro.cluster.health import HeartbeatMonitor, MemberHungError
+from repro.cluster.replication import ReplicationLog
+from repro.runtime.fault import RetryPolicy, TransientFault
 from repro.serving.queues import QueueFullError, RateLimitError
 from repro.serving.server import _UNSET
 
@@ -79,6 +103,11 @@ class _ClusterSession:
         self.shed = 0
         self.lost = 0              # counted at member death, cumulative
 
+    @property
+    def outstanding(self) -> int:
+        """Frames accepted but not yet served, shed, or counted lost."""
+        return self.submitted - self.served - self.shed - self.lost
+
 
 class GatewayCluster:
     """Federates N ``StreamServer`` members behind one session API.
@@ -91,38 +120,78 @@ class GatewayCluster:
         (``cluster/hashing.py``).
     snapshot_every : take a failure-recovery checkpoint of every
         session each N cluster steps (0 disables; then a member failure
-        loses its sessions entirely — still counted, never silent).
+        loses its sessions entirely — still counted, never silent —
+        unless ``replicate`` is on, which checkpoints at admission and
+        after every move so a buddy journal always has a base to replay
+        onto).
+    replicate : write-ahead-journal every accepted frame on a buddy
+        member (``cluster/replication.py``) and recover member deaths
+        by checkpoint + journal replay.  Loss per failure is bounded by
+        the unflushed journal window instead of ``snapshot_every``.
+    journal_flush_every : ship pending journal entries to the buddy
+        every N cluster steps (1 = each step).  The replication lag —
+        and the loss bound — is at most one flush window.
+    heartbeat_timeout_s : declare a member HUNG (and fail it over) when
+        it completes no step for this long on the injected ``timer``
+        (None disables hang detection — raising members still die at
+        the exception seam).
+    retry : ``runtime/fault.RetryPolicy`` for transient member faults
+        at the submit/step/checkpoint seams (the default retries 3
+        attempts with deterministic exponential backoff; pass ``None``
+        to make every fault fatal like PR 7).
+    degraded_below : enter degraded mode when ``live_members <
+        degraded_below * peak_members`` — new sessions and BULK frames
+        get the typed ``ClusterDegradedError`` until capacity returns
+        (0 disables).
     on_result : like ``StreamServer``'s — invoked with each
         ``FrameResult`` re-addressed to the global sid; without it
         results buffer until ``drain_results()``.
     injectors : ``{name: FailureInjector}`` — chaos hook; the injector
-        fires at the top of that member's turn in ``step()``.
+        fires at the top of that member's turn in ``step()`` (and its
+        ``hanging`` window makes the cluster skip the member's turn —
+        a hang is the absence of progress, not an exception).
     straggler_factory : zero-arg callable returning a fresh
         ``StragglerMonitor`` per member (None disables detection).
     straggler_weight : ring weight applied to a flagged member
         (fraction of a healthy member's hash-space share).
-    timer : step-duration source for the straggler monitors and
-        migration-pause stats (injectable for deterministic tests;
-        defaults to ``time.perf_counter``).
+    timer : step-duration source for the straggler monitors, heartbeat
+        suspicion and migration-pause stats (injectable for
+        deterministic tests; defaults to ``time.perf_counter``).
     """
 
     def __init__(self, members: dict, *, seed: int = 0, vnodes: int = 64,
                  snapshot_every: int = 0, on_result=None,
                  injectors: dict | None = None,
+                 replicate: bool = False, journal_flush_every: int = 1,
+                 heartbeat_timeout_s: float | None = None,
+                 retry=_UNSET,
+                 degraded_below: float = 0.0,
                  straggler_factory=None, straggler_weight: float = 0.25,
                  timer=time.perf_counter):
         if not members:
             raise ValueError("a cluster needs at least one member")
         if not 0.0 < straggler_weight <= 1.0:
             raise ValueError("straggler_weight must be in (0, 1]")
+        if journal_flush_every < 1:
+            raise ValueError("journal_flush_every must be >= 1")
+        if not 0.0 <= degraded_below <= 1.0:
+            raise ValueError("degraded_below must be in [0, 1]")
         self._members: dict = {}
         self._ring = HashRing(seed=seed, vnodes=vnodes)
         self._on_result = on_result
         self._snapshot_every = int(snapshot_every)
         self._injectors = dict(injectors or {})
+        self._replicate = bool(replicate)
+        self._flush_every = int(journal_flush_every)
+        self._log = ReplicationLog() if replicate else None
+        self._retry = (RetryPolicy() if retry is _UNSET else retry)
+        self._degraded_below = float(degraded_below)
         self._straggler_factory = straggler_factory
         self._straggler_weight = float(straggler_weight)
         self._timer = timer
+        self._health = (HeartbeatMonitor(
+            suspect_after_s=heartbeat_timeout_s, clock=timer)
+            if heartbeat_timeout_s is not None else None)
         self._lock = threading.RLock()
         # federation books (cumulative; survive migration + death)
         self._submitted = {q.value: 0 for q in QoSClass}
@@ -131,6 +200,7 @@ class GatewayCluster:
         self._lost = {q.value: 0 for q in QoSClass}
         self._rejected_full = {q.value: 0 for q in QoSClass}
         self._rejected_rl = {q.value: 0 for q in QoSClass}
+        self._rejected_degraded = {q.value: 0 for q in QoSClass}
         self._sessions: dict = {}          # gsid -> _ClusterSession
         self._local: dict = {}             # (member, lsid) -> gsid
         self._orig_cb: dict = {}           # name -> pre-interpose hooks
@@ -145,6 +215,11 @@ class GatewayCluster:
         self._pause_ms: list = []
         self._drains = 0
         self._failures = 0
+        self._failovers = 0                # sessions restored on survivors
+        self._retries = 0                  # transient faults retried away
+        self._replayed_frames = 0          # journal entries re-queued
+        self._drain_stragglers = 0         # sessions stuck at stop(drain)
+        self._peak_members = 0             # high-water live membership
         self._drained: dict = {}           # name -> server, out of rotation
         self._dead: dict = {}              # name -> server, postmortem
         self._lost_sessions: list = []     # gsids dropped at member death
@@ -167,8 +242,9 @@ class GatewayCluster:
         # originals are kept so leaving the cluster (drain, death)
         # un-wraps — a drained member that rejoins via add_member must
         # not end up double-wrapped (every frame counted twice)
-        prev_r, prev_s = srv._on_result, srv._on_shed
-        self._orig_cb[name] = (prev_r, prev_s)
+        prev_r, prev_s, prev_a = (srv._on_result, srv._on_shed,
+                                  srv._on_admit)
+        self._orig_cb[name] = (prev_r, prev_s, prev_a)
         def on_result(r, _n=name, _p=prev_r):
             self._count_result(_n, r)
             if _p is not None:
@@ -177,12 +253,33 @@ class GatewayCluster:
             self._count_shed(_n, qf)
             if _p is not None:
                 _p(qf)
+        def on_admit(qf, _n=name, _p=prev_a):
+            # the journal-ack seam: write-ahead-record exactly the
+            # frames the member accepted, with their admission ledger
+            self._journal_admit(_n, qf)
+            if _p is not None:
+                _p(qf)
         srv._on_result = on_result
         srv._on_shed = on_shed
+        srv._on_admit = on_admit
         self._members[name] = srv
+        self._peak_members = max(self._peak_members, len(self._members))
         self._ring.add(name)
+        if self._health is not None:
+            self._health.watch(name)
         if self._straggler_factory is not None:
             self._stragglers[name] = self._straggler_factory()
+
+    def _release_member(self, name):
+        """Un-wrap the callbacks and detach every monitor — the common
+        tail of drain (graceful) and death (not)."""
+        srv = self._members.pop(name)
+        srv._on_result, srv._on_shed, srv._on_admit = \
+            self._orig_cb.pop(name)
+        self._stragglers.pop(name, None)
+        if self._health is not None:
+            self._health.forget(name)
+        return srv
 
     def add_member(self, name, srv) -> int:
         """Join a member and rebalance: ONLY sessions whose ring
@@ -190,7 +287,9 @@ class GatewayCluster:
         property).  Returns how many moved."""
         with self._lock:
             self._admit_member(name, srv)
-            return self._rebalance()
+            moved = self._rebalance()
+            self._rehome_journals()
+            return moved
 
     def drain(self, name) -> int:
         """Rolling-restart move: stop admission to the member (it
@@ -216,10 +315,23 @@ class GatewayCluster:
             for gsid in homed:
                 self._migrate(gsid)
             self._drains += 1
-            self._drained[name] = self._members.pop(name)
-            srv._on_result, srv._on_shed = self._orig_cb.pop(name)
-            self._stragglers.pop(name, None)
+            self._drained[name] = self._release_member(name)
+            self._injectors.pop(name, None)
+            # journals homed on the leaving member re-ship gracefully
+            # (it is alive — its data moves, nothing is cleared)
+            self._rehome_journals()
             return len(homed)
+
+    # -- degraded mode -------------------------------------------------------
+    def _degraded(self) -> bool:
+        return (self._degraded_below > 0.0 and self._peak_members > 0
+                and len(self._members)
+                < self._degraded_below * self._peak_members)
+
+    def _refuse_degraded(self, qos: QoSClass, what: str):
+        self._rejected_degraded[qos.value] += 1
+        raise ClusterDegradedError(len(self._members), self._peak_members,
+                                   self._degraded_below, what)
 
     # -- session API (any thread) --------------------------------------------
     def open_session(self, platform="pi4",
@@ -227,9 +339,14 @@ class GatewayCluster:
                      weight: float = 1.0, rate_limit=_UNSET):
         """Admit a session cluster-wide: place it on its ring owner,
         walking the preference order past members without headroom.
-        Returns ``SessionInfo`` whose ``sid`` is the GLOBAL session id
-        — valid at ``submit``/``close_session`` on this cluster only."""
+        In degraded mode new sessions are refused with the typed
+        ``ClusterDegradedError`` — the survivors' headroom belongs to
+        the streams they already hold.  Returns ``SessionInfo`` whose
+        ``sid`` is the GLOBAL session id — valid at ``submit``/
+        ``close_session`` on this cluster only."""
         with self._lock:
+            if self._degraded():
+                self._refuse_degraded(qos, "new session")
             gsid = self._next_gsid
             self._next_gsid += 1
             kw = {} if rate_limit is _UNSET else {"rate_limit": rate_limit}
@@ -247,6 +364,15 @@ class GatewayCluster:
                 cs = _ClusterSession(gsid, name, info.sid, qos, platform)
                 self._sessions[gsid] = cs
                 self._local[(name, info.sid)] = gsid
+                if self._log is not None:
+                    self._log.open(
+                        gsid, self._ring.buddy(gsid, exclude=(name,)))
+                # an immediate admission checkpoint: recovery must never
+                # find a journal with no base to replay onto (the
+                # satellite contract: lost_sessions stays empty whenever
+                # a buddy holds a journal)
+                if self._snapshot_every or self._replicate:
+                    self._snaps[gsid] = srv.checkpoint_session(info.sid)
                 return replace(info, sid=gsid)
             if last is not None:
                 raise last
@@ -255,13 +381,18 @@ class GatewayCluster:
     def submit(self, gsid, frame) -> None:
         """Route one frame to the session's current owner.  The same
         typed refusals as ``StreamServer.submit`` (``RateLimitError``,
-        ``QueueFullError``), counted at the federation boundary; an
-        accepted frame enters the cluster books here."""
+        ``QueueFullError``) plus the degraded-mode BULK door shed
+        (``ClusterDegradedError``), all counted at the federation
+        boundary; transient member faults are retried per the
+        ``RetryPolicy`` before anything is refused; an accepted frame
+        enters the cluster books here."""
         with self._lock:
             cs = self._require(gsid)
+            if cs.qos is QoSClass.BULK and self._degraded():
+                self._refuse_degraded(cs.qos, "BULK frame")
             srv = self._members[cs.member]
             try:
-                srv.submit(cs.lsid, frame)
+                self._call_member(lambda: srv.submit(cs.lsid, frame))
             except RateLimitError:
                 self._rejected_rl[cs.qos.value] += 1
                 raise
@@ -282,6 +413,8 @@ class GatewayCluster:
             del self._local[(cs.member, cs.lsid)]
             del self._sessions[gsid]
             self._snaps.pop(gsid, None)
+            if self._log is not None:
+                self._log.close(gsid)
 
     def session_member(self, gsid):
         """The member currently serving the session (observability —
@@ -295,7 +428,32 @@ class GatewayCluster:
             raise KeyError(f"cluster session {gsid} is not open")
         return cs
 
+    # -- retry seam ----------------------------------------------------------
+    def _call_member(self, fn):
+        """Run one member call under the transient-fault retry policy
+        (``runtime/fault.py``): ``TransientFault``s retry with
+        deterministic backoff and are counted; anything else — or an
+        exhausted policy — propagates to the caller's fatal path."""
+        if self._retry is None:
+            return fn()
+        return self._retry.call(fn, on_retry=self._count_retry)
+
+    def _count_retry(self, attempt, backoff_s, exc) -> None:
+        with self._lock:
+            self._retries += 1
+
     # -- federation books (member callbacks) ---------------------------------
+    def _journal_admit(self, name, qf) -> None:
+        if self._log is None:
+            return
+        with self._lock:
+            gsid = self._local.get((name, qf.sid))
+            if gsid is None:
+                return
+            self._log.record(gsid, t=qf.frame.t, frame=qf.frame,
+                             enq_s=qf.enq_s, deadline_s=qf.deadline_s,
+                             weight=qf.weight)
+
     def _count_result(self, name, r) -> None:
         with self._lock:
             gsid = self._local.get((name, r.sid))
@@ -304,6 +462,8 @@ class GatewayCluster:
             cs = self._sessions[gsid]
             cs.served += 1
             self._served[cs.qos.value] += 1
+            if self._log is not None:
+                self._log.settle(gsid, r.t)
             out = replace(r, sid=gsid)
             if self._on_result is None:
                 self._results.append(out)
@@ -322,6 +482,8 @@ class GatewayCluster:
             cs = self._sessions[gsid]
             cs.shed += 1
             self._shed[cs.qos.value] += 1
+            if self._log is not None:
+                self._log.settle(gsid, qf.frame.t)
 
     def drain_results(self) -> list:
         """All ``FrameResult``s (global sids) since the last drain —
@@ -332,27 +494,41 @@ class GatewayCluster:
 
     # -- the stepping loop ---------------------------------------------------
     def step(self) -> int:
-        """One cluster iteration: step every live member once (sorted
-        name order — deterministic), with the chaos hooks around each
-        turn: the member's ``FailureInjector`` may kill it (handled as
-        a real death), its step duration feeds the ``StragglerMonitor``
-        (a flagged member's ring share shrinks), and every
-        ``snapshot_every`` steps each session is checkpointed for
-        failure recovery.  Returns frames delivered cluster-wide."""
+        """One cluster iteration: ship pending journal entries to their
+        buddies (every ``journal_flush_every`` steps), then step every
+        live member once (sorted name order — deterministic), with the
+        chaos hooks around each turn: the member's ``FailureInjector``
+        may kill it (fatal — handled as a real death), raise a
+        ``TransientFault`` (retried per the policy), or HANG it (the
+        turn is skipped and no heartbeat lands); its step duration
+        feeds the ``StragglerMonitor`` (a flagged member's ring share
+        shrinks).  After the turns, heartbeat suspicion fails over any
+        member silent past the threshold, and every ``snapshot_every``
+        steps each session is checkpointed for failure recovery.
+        Returns frames delivered cluster-wide."""
         served = 0
         with self._lock:
             self._steps += 1
+            if self._log is not None and \
+                    self._steps % self._flush_every == 0:
+                self._log.flush_all()
             for name in sorted(self._members):
                 srv = self._members[name]
+                inj = self._injectors.get(name)
+                if inj is not None and inj.hanging(self._steps):
+                    continue       # stuck: no progress, no beat
                 t0 = self._timer()
+                def turn(_srv=srv, _inj=inj):
+                    if _inj is not None:
+                        _inj.maybe_fail(self._steps)
+                    return _srv.step()
                 try:
-                    inj = self._injectors.get(name)
-                    if inj is not None:
-                        inj.maybe_fail(self._steps)
-                    served += srv.step()
+                    served += self._call_member(turn)
                 except Exception as e:      # noqa: BLE001 — death seam
                     self._member_failed(name, e)
                     continue
+                if self._health is not None:
+                    self._health.beat(name)
                 mon = self._stragglers.get(name)
                 if mon is not None and mon.record(self._steps,
                                                   self._timer() - t0):
@@ -360,6 +536,11 @@ class GatewayCluster:
                             != self._straggler_weight):
                         self._ring.set_weight(name,
                                               self._straggler_weight)
+            if self._health is not None:
+                for name, silent in self._health.suspects():
+                    if name in self._members:
+                        self._member_failed(name, MemberHungError(
+                            name, silent, self._health.suspect_after_s))
             if (self._snapshot_every
                     and self._steps % self._snapshot_every == 0):
                 self._checkpoint_all()
@@ -389,7 +570,15 @@ class GatewayCluster:
             self._thread.start()
         return self
 
-    def stop(self, *, drain: bool = True, timeout: float = 60.0):
+    def stop(self, *, drain: bool = True, timeout: float = 60.0,
+             max_steps: int = 100_000):
+        """Stop the stepping thread, then (``drain=True``) pump every
+        member empty.  A drain that stalls — a member wedged, a stream
+        that cannot finish within ``max_steps`` — no longer exits
+        through an anonymous pump error: it raises the typed
+        ``ClusterDrainTimeout`` naming every straggler session and its
+        outstanding frame count, and the stragglers are counted into
+        ``ClusterStats.drain_stragglers``."""
         self._stopping = True
         t = self._thread
         if t is not None and t is not threading.current_thread():
@@ -398,7 +587,15 @@ class GatewayCluster:
                 raise TimeoutError("cluster stepping thread did not stop")
         self._thread = None
         if drain:
-            self.pump()
+            try:
+                self.pump(max_steps)
+            except RuntimeError as e:
+                with self._lock:
+                    strag = {g: cs.outstanding
+                             for g, cs in sorted(self._sessions.items())
+                             if cs.outstanding > 0}
+                    self._drain_stragglers += len(strag)
+                raise ClusterDrainTimeout(strag, max_steps) from e
         return self
 
     def _loop(self):
@@ -427,6 +624,40 @@ class GatewayCluster:
                 self._migrate(gsid)
                 moved += 1
         return moved
+
+    def _rehome_journal(self, gsid) -> None:
+        """Keep the session's journal on a live member that is not its
+        owner (the buddy invariant); a conflicting or missing buddy
+        re-ships the journal, metered."""
+        if self._log is None:
+            return
+        j = self._log.journal(gsid)
+        if j is None:
+            return
+        cs = self._sessions[gsid]
+        if (j.buddy is None or j.buddy == cs.member
+                or j.buddy not in self._members):
+            self._log.rehome(
+                gsid, self._ring.buddy(gsid, exclude=(cs.member,)))
+
+    def _rehome_journals(self) -> None:
+        if self._log is not None:
+            for gsid in list(self._sessions):
+                self._rehome_journal(gsid)
+
+    def _refresh_checkpoint(self, gsid) -> None:
+        """Re-checkpoint a session on its (new) owner right after a
+        move — the old checkpoint predates the move and a destructive
+        snapshot must never double as one.  A freshly imported session
+        has no frames in any in-flight plan, so this needs no quiesce."""
+        cs = self._sessions[gsid]
+        if self._snapshot_every or self._replicate:
+            self._snaps[gsid] = self._members[cs.member] \
+                .checkpoint_session(cs.lsid)
+            if self._log is not None:
+                self._log.checkpointed(gsid)
+        else:
+            self._snaps.pop(gsid, None)
 
     def _migrate(self, gsid) -> None:
         """Move one session to its ring-preferred live member: quiesce
@@ -458,11 +689,8 @@ class GatewayCluster:
                                       if snap.server else 0)
             self._migrated_bytes += snap.nbytes
             self._pause_ms.append((self._timer() - t0) * 1e3)
-            # the old checkpoint predates the move and a destructive
-            # snapshot must never double as one (its queued frames
-            # would double-count against lost_in_flight at a later
-            # failure) — recovery re-checkpoints on the new owner
-            self._snaps.pop(gsid, None)
+            self._refresh_checkpoint(gsid)
+            self._rehome_journal(gsid)
             return
         # nobody could take it: put it back where it came from
         info = src.import_session(snap)
@@ -483,50 +711,85 @@ class GatewayCluster:
                 srv.quiesce()               # in flight (migration-safe)
                 quiesced.add(cs.member)
             try:
-                self._snaps[gsid] = srv.checkpoint_session(cs.lsid)
+                self._snaps[gsid] = self._call_member(
+                    lambda _s=srv, _c=cs: _s.checkpoint_session(_c.lsid))
             except KeyError:
-                pass                        # closing under us
+                continue                    # closing under us
+            except TransientFault:
+                continue   # retries exhausted: keep the previous
+                #            checkpoint — the journal still bounds loss
+            if self._log is not None:
+                # the fresh checkpoint is the durable record of every
+                # settled frame: those journal entries can go
+                self._log.checkpointed(gsid)
 
     def _member_failed(self, name, exc) -> None:
-        """A member died mid-step.  Its queued + in-flight frames are
-        gone — counted per session into ``lost_in_flight`` (the books
-        are cluster-side, so the dead member's counters aren't needed)
-        — and every session resumes on a survivor from its last
-        checkpoint.  Sessions without a checkpoint are dropped, visibly
-        (``lost_sessions``)."""
+        """A member died (raised) or hung (heartbeat suspicion) — the
+        same recovery path either way.  Every session it homed resumes
+        on a survivor from its last checkpoint; with replication, the
+        buddy journal's open entries replay on top through the ordinary
+        ``import_session`` implant, so only frames whose journal append
+        never reached the buddy are counted into ``lost_in_flight``.
+        Journals HOMED on the dead member lose their shipped data
+        (cleared, re-homed — their sessions are exposed until the next
+        checkpoint).  Sessions with neither checkpoint nor journal are
+        dropped visibly (``lost_sessions``)."""
         self._failures += 1
-        srv = self._members.pop(name)
-        self._dead[name] = srv
-        srv._on_result, srv._on_shed = self._orig_cb.pop(name)
+        self._dead[name] = self._release_member(name)
         self._injectors.pop(name, None)
-        self._stragglers.pop(name, None)
         if self._ring.has(name):
             self._ring.remove(name)
+        if self._log is not None:
+            self._log.drop_member(name)
         for gsid, cs in list(self._sessions.items()):
             if cs.member != name:
                 continue
-            outstanding = cs.submitted - cs.served - cs.shed - cs.lost
-            cs.lost += outstanding
-            self._lost[cs.qos.value] += outstanding
+            j = self._log.journal(gsid) if self._log is not None else None
+            replay = j.replayable() if j is not None else []
+            if j is not None:
+                # pending appends die with the owner — it was the
+                # shipping side of the transport
+                j.entries = [e for e in j.entries if e.acked]
+            lost_now = max(0, cs.outstanding - len(replay))
+            cs.lost += lost_now
+            self._lost[cs.qos.value] += lost_now
             del self._local[(name, cs.lsid)]
             snap = self._snaps.get(gsid)
             restored = False
             if snap is not None:
+                sv = snap.server if snap.server is not None else \
+                    ServerSessionSnapshot(submitted=0, served=0, shed=0,
+                                          weight=1.0)
+                queued = tuple(e.snapshot() for e in replay)
+                resume = replace(
+                    snap, server=replace(
+                        sv, submitted=sv.submitted + len(queued),
+                        queued=queued))
                 for tname in self._ring.preference(gsid):
                     tsrv = self._members.get(tname)
                     if tsrv is None:
                         continue
                     try:
-                        info = tsrv.import_session(snap)
+                        info = tsrv.import_session(resume)
                     except AdmissionError:
                         continue
                     cs.member, cs.lsid = tname, info.sid
                     self._local[(tname, info.sid)] = gsid
+                    self._failovers += 1
+                    self._replayed_frames += len(queued)
+                    self._refresh_checkpoint(gsid)
+                    self._rehome_journal(gsid)
                     restored = True
                     break
             if not restored:
+                # the replayable frames found no home either: they are
+                # lost WITH the session — counted, like everything here
+                cs.lost += len(replay)
+                self._lost[cs.qos.value] += len(replay)
                 del self._sessions[gsid]
                 self._snaps.pop(gsid, None)
+                if self._log is not None:
+                    self._log.close(gsid)
                 self._lost_sessions.append(gsid)
 
     @property
@@ -586,4 +849,12 @@ class GatewayCluster:
                 drains=self._drains,
                 failures=self._failures,
                 ring_share=self._ring.share(),
-                member_stats=member_stats)
+                member_stats=member_stats,
+                degraded=self._degraded(),
+                failovers=self._failovers,
+                retries=self._retries,
+                replayed_frames=self._replayed_frames,
+                journal_bytes=(self._log.bytes_shipped
+                               if self._log is not None else 0),
+                rejected_degraded=dict(self._rejected_degraded),
+                drain_stragglers=self._drain_stragglers)

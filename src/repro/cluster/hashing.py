@@ -122,6 +122,19 @@ class HashRing:
                 out.append(m)
         return out
 
+    def buddy(self, key, exclude=()):
+        """The first member on ``key``'s ring walk not in ``exclude``
+        — the deterministic replication-buddy choice
+        (``cluster/replication.py``): with ``exclude=(owner,)`` this is
+        the next LIVE node past the owner, which is also exactly where
+        the owner's keys would land if it died, so the journal is
+        already on the member most likely to inherit the session.
+        ``None`` when no such member exists (single-member ring)."""
+        for m in self.preference(key):
+            if m not in exclude:
+                return m
+        return None
+
     def share(self) -> dict:
         """``member -> owned fraction of the hash space`` (sums to 1.0)
         — ``ClusterStats.ring_share``, and the observable the straggler

@@ -89,6 +89,16 @@ class StreamServer:
         (``repro.cluster``) counts cluster-wide sheds here.  Same
         contract as ``on_result``: keep it cheap, exceptions are
         printed and swallowed.
+    on_admit : optional callable invoked with the ``QueuedFrame`` the
+        moment ``submit`` accepts a frame into the queues (on the
+        SUBMITTING thread, past the rate-limit and capacity checks) —
+        the journal-ack seam: the federation layer's replication plane
+        (``repro.cluster.replication``) write-ahead-journals exactly
+        the frames the member accepted, with their original enqueue
+        time and deadline.  Frames implanted by ``import_session`` do
+        NOT fire it — their ledger (and journal entry) travelled with
+        them.  Exceptions propagate to the submitter: a frame whose
+        journal append failed was never durably accepted.
     clock : timing source; defaults to the gateway's injected clock so
         one fake clock drives queue waits, deadlines, rate limits and
         tick latency.
@@ -105,7 +115,7 @@ class StreamServer:
     def __init__(self, gateway, *, cfg: SchedulerCfg | None = None,
                  queue_maxlen: int = 256, queue_maxlens=None,
                  pipeline: bool = True, on_result=None, on_shed=None,
-                 clock=None,
+                 on_admit=None, clock=None,
                  rate_limit: tuple | None = None,
                  schedule_keep: int = 4096):
         if not gateway.overlap:
@@ -120,6 +130,7 @@ class StreamServer:
         self._clock = clock if clock is not None else gateway.clock
         self._on_result = on_result
         self._on_shed = on_shed
+        self._on_admit = on_admit
         self._rate_limit = rate_limit
         self._sessions: dict[int, _ServedSession] = {}
         self._lock = threading.RLock()        # session table + gateway admin
@@ -374,15 +385,41 @@ class StreamServer:
                                      s.bucket.retry_after_s(now))
             s.submitted += 1
         try:
-            self.queues.submit(sid, frame, s.qos, now=now,
-                               deadline_s=now + self.cfg.deadline_s(s.qos),
-                               weight=s.weight)
+            qf = self.queues.submit(sid, frame, s.qos, now=now,
+                                    deadline_s=now
+                                    + self.cfg.deadline_s(s.qos),
+                                    weight=s.weight)
         except BaseException:
             with self._lock:
                 s.submitted -= 1
                 if s.bucket is not None:
                     s.bucket.give_back()    # a refused frame costs no budget
             raise
+        if self._on_admit is not None:
+            # the journal-ack seam (repro.cluster.replication): a frame
+            # is only durably accepted once its write-ahead append
+            # succeeded.  On failure the frame is withdrawn (identity
+            # match — QueuedFrame's field equality is meaningless) and
+            # the books roll back like any other refusal; if the
+            # serving thread already staged it, acceptance stands.
+            try:
+                self._on_admit(qf)
+            except BaseException:
+                withdrawn = False
+                with self.queues.cond:
+                    cq = self.queues.by_class[s.qos]
+                    for i, x in enumerate(cq.q):
+                        if x is qf:
+                            del cq.q[i]
+                            cq.submitted -= 1
+                            withdrawn = True
+                            break
+                if withdrawn:
+                    with self._lock:
+                        s.submitted -= 1
+                        if s.bucket is not None:
+                            s.bucket.give_back()
+                raise
 
     # -- the serving loop ----------------------------------------------------
     def start(self) -> "StreamServer":

@@ -5,8 +5,9 @@ behavior: repeat-fire suppression, warmup gating, and the trailing
 window median."""
 import pytest
 
-from repro.runtime.fault import (FailureInjector, StragglerEvent,
-                                 StragglerMonitor)
+from repro.runtime.fault import (FailureInjector, RetryPolicy,
+                                 StragglerEvent, StragglerMonitor,
+                                 TransientFault, is_transient)
 from repro.serving import FailureInjector as ServingFailureInjector
 from repro.cluster import FailureInjector as ClusterFailureInjector
 
@@ -102,3 +103,126 @@ def test_straggler_record_returns_true_only_for_this_step():
     assert mon.record(4, 1.0)              # fires
     assert not mon.record(5, 0.1)          # healthy again: False
     assert mon.events and mon.events[-1].step == 4
+
+
+# ---------------------------------------------------------------------------
+# TransientFault / RetryPolicy
+# ---------------------------------------------------------------------------
+
+def test_transient_fault_taxonomy():
+    assert is_transient(TransientFault("blip"))
+    assert not is_transient(RuntimeError("fatal"))
+    assert isinstance(TransientFault("x"), RuntimeError)  # old seams catch it
+
+
+def test_retry_policy_deterministic_backoff_schedule():
+    pol = RetryPolicy(max_attempts=5, base_s=0.05, factor=2.0,
+                      max_backoff_s=0.15)
+    # exponential, capped — pure function of the retry index
+    assert [pol.backoff_s(i) for i in (1, 2, 3, 4)] == \
+        [0.05, 0.1, 0.15, 0.15]
+
+
+def test_retry_policy_retries_transient_then_succeeds():
+    pol = RetryPolicy(max_attempts=3, base_s=0.05, factor=2.0)
+    slept = []
+    pol.sleep = slept.append
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise TransientFault(f"blip {calls['n']}")
+        return "ok"
+
+    seen = []
+    assert pol.call(flaky, on_retry=lambda a, d, e: seen.append((a, d))) \
+        == "ok"
+    assert calls["n"] == 3 and pol.retries == 2
+    assert seen == [(1, 0.05), (2, 0.1)]     # deterministic schedule
+    assert slept == [0.05, 0.1]              # injected sleep, no wall clock
+    assert pol.backoff_s_total == pytest.approx(0.15)
+
+
+def test_retry_policy_exhaustion_reraises_last_fault():
+    pol = RetryPolicy(max_attempts=3)
+
+    def always():
+        raise TransientFault("still down")
+
+    with pytest.raises(TransientFault, match="still down"):
+        pol.call(always)
+    assert pol.retries == 2                  # attempts 1..3, two waits
+
+
+def test_retry_policy_does_not_retry_fatal():
+    pol = RetryPolicy(max_attempts=5)
+    calls = {"n": 0}
+
+    def fatal():
+        calls["n"] += 1
+        raise ValueError("not transient")
+
+    with pytest.raises(ValueError):
+        pol.call(fatal)
+    assert calls["n"] == 1 and pol.retries == 0
+
+
+# ---------------------------------------------------------------------------
+# FailureInjector: transient, probabilistic, hang modes
+# ---------------------------------------------------------------------------
+
+def test_injector_transient_at_fires_exactly_n_times():
+    inj = FailureInjector(transient_at={4: 2})
+    with pytest.raises(TransientFault):
+        inj.maybe_fail(4)
+    with pytest.raises(TransientFault):
+        inj.maybe_fail(4)
+    inj.maybe_fail(4)                        # budget spent: clean
+    assert inj.transients_fired == 2
+
+
+def test_injector_transient_sequence_form():
+    inj = FailureInjector(transient_at=(2, 5))   # once each
+    with pytest.raises(TransientFault):
+        inj.maybe_fail(2)
+    inj.maybe_fail(2)
+    with pytest.raises(TransientFault):
+        inj.maybe_fail(5)
+
+
+def test_injector_probabilistic_is_seed_deterministic():
+    def pattern(seed):
+        inj = FailureInjector(p_transient=0.3, seed=seed)
+        out = []
+        for step in range(50):
+            try:
+                inj.maybe_fail(step)
+                out.append(False)
+            except TransientFault:
+                out.append(True)
+        return out
+
+    a, b = pattern(11), pattern(11)
+    assert a == b and any(a) and not all(a)  # same seed, same chaos
+    assert pattern(12) != a                  # different seed, different
+
+
+def test_injector_hang_window():
+    inj = FailureInjector(hang_from=7)
+    assert not inj.hanging(6)
+    assert inj.hanging(7) and inj.hanging(100)   # hung is forever
+    inj.maybe_fail(7)                        # hanging raises nothing —
+    #                                          a hang is NOT an exception
+
+
+def test_straggler_times_bounded_by_window():
+    """Regression: ``times`` grew one entry per step forever — a
+    week-long serve leaked memory linearly.  The trailing buffer must
+    cap at ``window`` while the warmup gate still counts ALL samples."""
+    mon = StragglerMonitor(factor=3.0, window=8, warmup=4)
+    for step in range(1000):
+        mon.record(step, 0.1)
+    assert len(mon.times) == 8               # bounded, not 1000
+    assert mon.samples == 1000               # warmup bookkeeping intact
+    assert mon.record(1000, 1.0)             # detection still live
