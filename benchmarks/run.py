@@ -8,9 +8,11 @@ tracked across PRs: ``BENCH_gateway.json`` (frames/s, syncs/tick, staged
 H2D bytes, p50/p95 tick latency at N ∈ {32, 64}; docs/PERF.md),
 ``BENCH_stream.json`` (sustained streaming frames/s, per-class p95 queue
 waits, deadline-miss rates, preemption counts, syncs/tick;
-docs/STREAMING.md), and ``BENCH_cluster.json`` (federation drain lane:
+docs/STREAMING.md), ``BENCH_cluster.json`` (federation drain lane:
 migration pause p50/p95 ms, frames/s before/during/after a live drain,
-migrated volume; docs/FEDERATION.md).
+migrated volume; docs/FEDERATION.md), and ``BENCH_obs.json`` (telemetry
+plane: asserted <2% tracing-off overhead, schema-validated Prometheus
+export, flight-recorder exactness; docs/OBSERVABILITY.md).
 
     PYTHONPATH=src python -m benchmarks.run [--quick|--smoke] [--only PREFIX]
 
@@ -37,8 +39,8 @@ def main() -> None:
     quick = args.quick or args.smoke
 
     from benchmarks import (cluster_serve, fleet_serve, gateway_serve,
-                            kernels_bench, quality_tables, stream_serve,
-                            system_tables)
+                            kernels_bench, obs_bench, quality_tables,
+                            stream_serve, system_tables)
     print("name,us_per_call,derived")
     t0 = time.time()
 
@@ -57,12 +59,18 @@ def main() -> None:
         path = cluster_serve.write_bench_json(out)
         print(f"# wrote {path}", file=sys.stderr)
 
+    def obs():
+        out = obs_bench.run_all(quick=quick, smoke=args.smoke)
+        path = obs_bench.write_bench_json(out)
+        print(f"# wrote {path}", file=sys.stderr)
+
     suites = [("system", system_tables.run_all),
               ("kernels", kernels_bench.run_all),
               ("fleet", lambda: fleet_serve.run_all(quick=quick)),
               ("gateway", gateway),
               ("stream", stream),
-              ("cluster", cluster)]
+              ("cluster", cluster),
+              ("obs", obs)]
     if not quick:
         suites.insert(1, ("quality", quality_tables.run_all))
     for name, fn in suites:

@@ -75,6 +75,7 @@ from repro.core.env import EdgeCloudEnv
 from repro.core.fleet import FleetFullError, HostFleetBackend, pad_pow2
 from repro.core.splitter import SplitEngine
 from repro.core.sync import LazySync, SyncCfg
+from repro.obs import MetricsRegistry, to_prometheus
 
 
 class TickPlan:
@@ -165,7 +166,8 @@ class StreamSplitGateway:
                  backend=None, capacity=64, window=100, head_init=None,
                  head_apply=None, refine_every=0, quantize_wire=True,
                  sync_cfg=None, qos_reserve=None, refine_lr=1e-2, seed=0,
-                 overlap=True, shard_dispatch=None, clock=time.perf_counter):
+                 overlap=True, shard_dispatch=None, clock=time.perf_counter,
+                 registry: MetricsRegistry | None = None):
         if policy.L != enc_cfg.n_blocks:
             raise ValueError(
                 f"policy action space L={policy.L} != encoder "
@@ -228,27 +230,44 @@ class StreamSplitGateway:
         self._sessions: dict[int, _Session] = {}
         # (sid, request, validated float32 mel) — converted ONCE at submit
         self._pending: list[tuple[int, FrameRequest, np.ndarray]] = []
-        # aggregate counters (surfaced as GatewayStats)
-        self._ticks = 0
-        self._frames = 0
-        self._opened = 0
-        self._closed = 0
-        self._exported = 0      # sessions migrated out (repro.cluster)
-        self._imported = 0      # sessions migrated in
-        self._refusals = 0
-        self._dispatches = 0
-        self._wire_bytes = 0
-        self._sync_bytes = 0
-        self._sync_events = 0
-        self._refine_rounds = 0
+        # aggregate counters — live in the shared MetricsRegistry
+        # (repro.obs; docs/OBSERVABILITY.md) so GatewayStats is a VIEW
+        # over the same objects the hot path mutates and exporters walk
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        R = self.registry
+        self._ticks = R.counter("gateway_ticks")
+        self._frames = R.counter("gateway_frames")
+        self._opened = R.counter("gateway_sessions_opened")
+        self._closed = R.counter("gateway_sessions_closed")
+        # sessions migrated out/in (repro.cluster)
+        self._exported = R.counter("gateway_sessions_exported")
+        self._imported = R.counter("gateway_sessions_imported")
+        self._refusals = R.counter("gateway_admission_refusals")
+        self._dispatches = R.counter("gateway_dispatches")
+        self._wire_bytes = R.counter("gateway_wire_bytes")
+        self._sync_bytes = R.counter("gateway_sync_bytes")
+        self._sync_events = R.counter("gateway_sync_events")
+        self._refine_rounds = R.counter("gateway_refine_rounds")
         self._last_refine_loss = float("nan")
         self._last_tick_ms = 0.0
-        self._routed = {"edge": 0, "split": 0, "server": 0}
+        self._routed = {r: R.counter("gateway_routed_frames", route=r)
+                        for r in ("edge", "split", "server")}
         self._shard_frames = np.zeros(backend.shards, np.int64)
+        # always-on cheap stage timings: one EWMA multiply-add per tick
+        # (alpha 0.2), so launch/collect/tick spans are a live registry
+        # signal even with profiling off — tick(profile=True) and
+        # last_profile are debug detail now, not the only timing source
+        self._stage_ewma = {
+            stage: R.gauge("gateway_stage_ewma_ms", stage=stage)
+            for stage in ("launch", "collect", "tick")}
+        self._g_last_tick_ms = R.gauge("gateway_last_tick_ms")
+        self._g_syncs = R.gauge("gateway_device_syncs_per_tick")
+        self._g_d2h = R.gauge("gateway_d2h_copies_per_tick")
         # overlapped data plane instrumentation: every blocking wait and
         # every embedding D2H copy inside tick() goes through _block/_d2h,
         # so the single-sync contract is countable (and pinned by test)
-        self._staged_h2d = 0
+        self._staged_h2d = R.counter("gateway_staged_h2d_bytes")
         self._tick_syncs = 0
         self._tick_d2h = 0
         # launch/collect sequence numbers: plans MUST collect in launch
@@ -267,13 +286,13 @@ class StreamSplitGateway:
                 QoSClass.STANDARD: 1 + self.qos_reserve,
                 QoSClass.BULK: 1 + 2 * self.qos_reserve}[qos]
         if free < need:
-            self._refusals += 1
+            self._refusals.inc()
             raise AdmissionError(qos, self.backend.n_active,
                                  self.backend.capacity)
         try:
             return self.backend.admit()
         except FleetFullError:
-            self._refusals += 1
+            self._refusals.inc()
             raise AdmissionError(qos, self.backend.n_active,
                                  self.backend.capacity) from None
 
@@ -283,7 +302,7 @@ class StreamSplitGateway:
         ``FleetFullError``) when its QoS class finds no headroom."""
         sid = self._admit_row(qos)
         self._sessions[sid] = _Session(sid, platform, qos, self.sync_cfg)
-        self._opened += 1
+        self._opened.inc()
         return self.session(sid)
 
     def session(self, sid) -> SessionInfo:
@@ -301,7 +320,7 @@ class StreamSplitGateway:
         self._pending = [p for p in self._pending if p[0] != sid]
         self.backend.evict(sid)
         del self._sessions[sid]
-        self._closed += 1
+        self._closed.inc()
         return info
 
     def _require(self, sid) -> _Session:
@@ -344,7 +363,7 @@ class StreamSplitGateway:
         if remove:
             self.backend.evict(sid)
             del self._sessions[sid]
-            self._exported += 1
+            self._exported.inc()
         return snap
 
     def import_session(self, snap: SessionSnapshot) -> SessionInfo:
@@ -369,7 +388,7 @@ class StreamSplitGateway:
         self.backend.import_row(sid, snap.ring_z, snap.ring_t,
                                 snap.ring_label, snap.ring_newest)
         self._sessions[sid] = s
-        self._imported += 1
+        self._imported.inc()
         return self.session(sid)
 
     # -- ingest --------------------------------------------------------------
@@ -462,6 +481,7 @@ class StreamSplitGateway:
         if pending:
             self._launch_overlapped(plan, self._decide(pending))
         plan.syncs, plan.d2h = self._tick_syncs, self._tick_d2h
+        self._stage_ewma["launch"].ewma((self._clock() - t0) * 1e3)
         return plan
 
     def tick_collect(self, plan: TickPlan) -> list[FrameResult]:
@@ -482,9 +502,11 @@ class StreamSplitGateway:
         # gateway counters were reset by that launch — a collected tick
         # still reports exactly its own waits/copies
         self._tick_syncs, self._tick_d2h = plan.syncs, plan.d2h
+        t_c0 = self._clock()
         results: list[FrameResult | None] = [None] * len(plan.pending)
         if plan.pending:
             self._collect_overlapped(plan, results)
+        self._stage_ewma["collect"].ewma((self._clock() - t_c0) * 1e3)
         self._finish_tick(plan.t0)
         return results  # type: ignore[return-value]
 
@@ -505,16 +527,21 @@ class StreamSplitGateway:
 
     def _finish_tick(self, t0):
         """Tick epilogue shared by every plane: counters, the periodic
-        fleet refine round, and the clock-derived tick latency."""
-        self._ticks += 1
+        fleet refine round, the clock-derived tick latency, and the
+        always-on EWMA tick-span gauge."""
+        self._ticks.inc()
         if (self.backend.can_refine and self.refine_every
-                and self._ticks % self.refine_every == 0
+                and self._ticks.value % self.refine_every == 0
                 and self.backend.n_active):
-            key = jax.random.fold_in(self._key, self._refine_rounds)
+            key = jax.random.fold_in(self._key, self._refine_rounds.value)
             loss, _, _ = self.backend.refine(key)
-            self._refine_rounds += 1
+            self._refine_rounds.inc()
             self._last_refine_loss = loss
         self._last_tick_ms = (self._clock() - t0) * 1e3
+        self._g_last_tick_ms.set(self._last_tick_ms)
+        self._stage_ewma["tick"].ewma(self._last_tick_ms)
+        self._g_syncs.set(self._tick_syncs)
+        self._g_d2h.set(self._tick_d2h)
 
     def refine_due_next_tick(self) -> bool:
         """True when the NEXT collected tick will run a fleet refine
@@ -524,7 +551,7 @@ class StreamSplitGateway:
         ``_finish_tick``'s condition exactly, including ``n_active`` —
         an idle fleet never forces a pipeline drain."""
         return bool(self.backend.can_refine and self.refine_every
-                    and (self._ticks + 1) % self.refine_every == 0
+                    and (self._ticks.value + 1) % self.refine_every == 0
                     and self.backend.n_active)
 
     # instrumented sync points: every blocking wait and embedding D2H
@@ -567,7 +594,7 @@ class StreamSplitGateway:
                 [mel_host, np.broadcast_to(mel_host[:1], (pad_rows,)
                                            + mel_host.shape[1:])])
         staged = jax.device_put(mel_host)
-        self._staged_h2d += mel_host.nbytes
+        self._staged_h2d.inc(mel_host.nbytes)
         # (2) per-bucket device-side gathers + async dispatch chains
         z_bufs = []
         # frame i -> row in the padded concat; itself pow2-padded (pad
@@ -651,7 +678,7 @@ class StreamSplitGateway:
             mel_host[base + len(idx_s):base + block] = mels[0]
             rowmap[idx_s] = base + np.arange(len(idx_s))
         staged = jax.device_put(mel_host, self._staged_sharding)
-        self._staged_h2d += mel_host.nbytes
+        self._staged_h2d.inc(mel_host.nbytes)
         by_dev = {sh.device: sh.data for sh in staged.addressable_shards}
         z_blocks = []
         for s in range(S):
@@ -729,9 +756,12 @@ class StreamSplitGateway:
                     sid=sid, t=req.t, z=z_host[i], route=route, k=k,
                     wire_bytes=wire,
                     latency_ms=ms if plan.profile else tick_ms,
-                    bucket_size=len(idx))
+                    bucket_size=len(idx), shard=_s)
         if plan.profile:
             self._last_profile = self._build_profile(plan)
+            for k, ms in self._last_profile["per_bucket_ms"].items():
+                self.registry.gauge("gateway_profile_bucket_ms",
+                                    k=str(k)).set(ms)
 
     def _build_profile(self, plan):
         """Fold a profiled plan's per-chain timings into the
@@ -774,10 +804,10 @@ class StreamSplitGateway:
         On the sharded plane each (shard, k) chain is one dispatch;
         ``shard`` feeds the per-shard dispatch counters."""
         route = self._route(k)
-        self._dispatches += 1
-        self._frames += len(idx)
-        self._wire_bytes += wire * len(idx)
-        self._routed[route] += len(idx)
+        self._dispatches.inc()
+        self._frames.inc(len(idx))
+        self._wire_bytes.inc(wire * len(idx))
+        self._routed[route].inc(len(idx))
         self._dispatch_shard_frames[shard] += len(idx)
         for i in idx:
             sid = pending[i][0]
@@ -840,8 +870,8 @@ class StreamSplitGateway:
             for ev in s.sync.on_frame(req.t, charging=req.charging,
                                       bandwidth_mbps=req.bandwidth_mbps,
                                       now=now):
-                self._sync_bytes += ev.bytes
-                self._sync_events += 1
+                self._sync_bytes.inc(ev.bytes)
+                self._sync_events.inc()
 
     def _ingest(self, pending, results, now=0.0):
         """The PR-3 composite ingest (``overlap=False`` only): reassemble
@@ -868,19 +898,36 @@ class StreamSplitGateway:
     def ticks(self) -> int:
         """Collected-tick count (a launched-but-uncollected ``TickPlan``
         is not a tick yet)."""
-        return self._ticks
+        return self._ticks.value
 
     def stats(self) -> GatewayStats:
+        """The gateway scoreboard as a frozen view over the registry —
+        every counter field reads the same live metric the hot path
+        mutates, so the numbers exporters scrape and the numbers this
+        dataclass reports can never drift."""
+        # per-shard frame gauges are synced lazily here (stats/export
+        # time), not per tick: the numpy arrays ARE the hot-path
+        # accumulators and a per-tick loop over shards would tax the
+        # S=1 common case for nothing
+        for s, v in enumerate(self._shard_frames):
+            self.registry.gauge("gateway_shard_frames",
+                                shard=str(s)).set(int(v))
+        for s, v in enumerate(self._dispatch_shard_frames):
+            self.registry.gauge("gateway_dispatch_shard_frames",
+                                shard=str(s)).set(int(v))
         return GatewayStats(
-            ticks=self._ticks, frames=self._frames,
-            sessions_open=len(self._sessions), sessions_opened=self._opened,
-            sessions_closed=self._closed,
-            admission_refusals=self._refusals,
-            dispatches=self._dispatches, wire_bytes=self._wire_bytes,
-            sync_bytes=self._sync_bytes, sync_events=self._sync_events,
-            refine_rounds=self._refine_rounds,
+            ticks=self._ticks.value, frames=self._frames.value,
+            sessions_open=len(self._sessions),
+            sessions_opened=self._opened.value,
+            sessions_closed=self._closed.value,
+            admission_refusals=self._refusals.value,
+            dispatches=self._dispatches.value,
+            wire_bytes=self._wire_bytes.value,
+            sync_bytes=self._sync_bytes.value,
+            sync_events=self._sync_events.value,
+            refine_rounds=self._refine_rounds.value,
             last_refine_loss=self._last_refine_loss,
-            routed=dict(self._routed),
+            routed={r: c.value for r, c in self._routed.items()},
             backend=self.backend.kind, shards=self.backend.shards,
             shard_frames=tuple(int(v) for v in self._shard_frames),
             dispatch_shards=(self.backend.shards if self.shard_dispatch
@@ -891,8 +938,16 @@ class StreamSplitGateway:
             ingest_h2d_bytes=self.backend.ingest_h2d_bytes,
             device_syncs_per_tick=self._tick_syncs,
             d2h_copies_per_tick=self._tick_d2h,
-            staged_h2d_bytes=self._staged_h2d,
+            staged_h2d_bytes=self._staged_h2d.value,
             uptime_s=self._clock() - self._t_start,
             last_tick_ms=self._last_tick_ms,
-            sessions_exported=self._exported,
-            sessions_imported=self._imported)
+            sessions_exported=self._exported.value,
+            sessions_imported=self._imported.value)
+
+    def metrics(self) -> str:
+        """The gateway's registry in Prometheus text exposition format
+        (``repro.obs.export``; docs/OBSERVABILITY.md).  When the
+        gateway runs under a ``StreamServer`` the registry is shared, so
+        the server's ``metrics()`` supersedes this one."""
+        self.stats()                 # sync the lazy per-shard gauges
+        return to_prometheus(self.registry)

@@ -126,6 +126,9 @@ class FrameResult:
     # bucket — a diagnostic mode, not the serving path).
     latency_ms: float
     bucket_size: int           # how many frames shared this dispatch
+    shard: int = 0             # dispatch shard that ran this frame's
+    #                            chain (0 on the unsharded plane) — also
+    #                            stamped on the frame's trace span
 
 
 @dataclass(frozen=True)
@@ -158,6 +161,10 @@ class QueuedFrameSnapshot:
     preemptions: int = 0
     promoted: bool = False
     weight: float = 1.0
+    # the frame's live FrameTrace (repro.obs.trace) when it is sampled —
+    # the span itself migrates, so a trace begun on the source member
+    # continues seamlessly on the target (None when tracing is off)
+    trace: object = None
 
 
 @dataclass(frozen=True)
@@ -395,3 +402,41 @@ class ClusterStats:
             + self.in_flight[c] + self.shed_expired[c]
             + self.lost_in_flight[c]
             for c in (q.value for q in QoSClass))
+
+
+@dataclass(frozen=True)
+class ResourceSignals:
+    """The serving plane's resource state as a control-plane
+    observation (``StreamServer.resource_signals()``;
+    docs/OBSERVABILITY.md).
+
+    This is the view the paper's RL splitter needs beside embedding
+    ambiguity — "real-time resource monitoring" (PAPER.md §1) — and the
+    view the ROADMAP's open autoscaler item is blocked on.  Everything
+    is derived from the metrics registry at call time: queue pressure
+    (depth over capacity), tail latency (p95 admission wait + the
+    always-on EWMA stage timings), and loss pressure (shed/reject
+    fraction of recent submissions).  ``as_observation()`` flattens to
+    a normalized float vector shaped like the existing ``SplitPolicy``
+    observation convention (each component in [0, 1] or clamped there).
+    """
+
+    queue_depth: int           # frames waiting across all classes
+    queue_fill: float          # depth / total capacity, in [0, 1]
+    in_flight: int             # frames launched, not yet collected
+    wait_p95_ms: float         # p95 submit->admit wait (sketch)
+    stage_ewma_ms: float       # EWMA tick launch+collect span
+    shed_rate: float           # shed / submitted (cumulative), [0, 1]
+    reject_rate: float         # refused / offered at the door, [0, 1]
+    throughput_fps: float      # frames served per second of uptime
+
+    def as_observation(self) -> "np.ndarray":
+        """Normalized float32 vector for a ``SplitPolicy``: load,
+        latency (saturating at 1s), and loss pressure."""
+        return np.asarray(
+            [min(1.0, max(0.0, self.queue_fill)),
+             min(1.0, self.wait_p95_ms / 1e3),
+             min(1.0, self.stage_ewma_ms / 1e3),
+             min(1.0, max(0.0, self.shed_rate)),
+             min(1.0, max(0.0, self.reject_rate))],
+            dtype=np.float32)

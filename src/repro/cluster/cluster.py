@@ -77,11 +77,14 @@ from repro.api.types import (AdmissionError, ClusterDegradedError,
 from repro.cluster.hashing import HashRing
 from repro.cluster.health import HeartbeatMonitor, MemberHungError
 from repro.cluster.replication import ReplicationLog
+from repro.obs import FlightRecorder, MetricsRegistry, to_prometheus
 from repro.runtime.fault import RetryPolicy, TransientFault
 from repro.serving.queues import QueueFullError, RateLimitError
 from repro.serving.server import _UNSET
 
 __all__ = ["GatewayCluster"]
+
+_DUMP_KEEP = 8          # newest automatic failover dumps retained
 
 
 class _ClusterSession:
@@ -167,7 +170,9 @@ class GatewayCluster:
                  retry=_UNSET,
                  degraded_below: float = 0.0,
                  straggler_factory=None, straggler_weight: float = 0.25,
-                 timer=time.perf_counter):
+                 timer=time.perf_counter,
+                 registry: MetricsRegistry | None = None,
+                 recorder: FlightRecorder | None = None):
         if not members:
             raise ValueError("a cluster needs at least one member")
         if not 0.0 < straggler_weight <= 1.0:
@@ -183,24 +188,38 @@ class GatewayCluster:
         self._injectors = dict(injectors or {})
         self._replicate = bool(replicate)
         self._flush_every = int(journal_flush_every)
-        self._log = ReplicationLog() if replicate else None
+        # the federation's OWN telemetry plane (repro.obs;
+        # docs/OBSERVABILITY.md) — separate from the members': a dead
+        # member takes its registry down with it, the cluster's books
+        # must survive.  Names are cluster_*-prefixed.
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self.recorder = recorder if recorder is not None \
+            else FlightRecorder(clock=timer)
+        R = self.registry
+        self._log = ReplicationLog(registry=R) if replicate else None
         self._retry = (RetryPolicy() if retry is _UNSET else retry)
         self._degraded_below = float(degraded_below)
         self._straggler_factory = straggler_factory
         self._straggler_weight = float(straggler_weight)
         self._timer = timer
         self._health = (HeartbeatMonitor(
-            suspect_after_s=heartbeat_timeout_s, clock=timer)
+            suspect_after_s=heartbeat_timeout_s, clock=timer, registry=R)
             if heartbeat_timeout_s is not None else None)
         self._lock = threading.RLock()
-        # federation books (cumulative; survive migration + death)
-        self._submitted = {q.value: 0 for q in QoSClass}
-        self._served = {q.value: 0 for q in QoSClass}
-        self._shed = {q.value: 0 for q in QoSClass}
-        self._lost = {q.value: 0 for q in QoSClass}
-        self._rejected_full = {q.value: 0 for q in QoSClass}
-        self._rejected_rl = {q.value: 0 for q in QoSClass}
-        self._rejected_degraded = {q.value: 0 for q in QoSClass}
+        # federation books (cumulative; survive migration + death) —
+        # registry counters mutated only under the cluster lock, read
+        # by stats() / the exporters as views
+        def _per_class(name):
+            return {q.value: R.counter(name, qos=q.value)
+                    for q in QoSClass}
+        self._submitted = _per_class("cluster_frames_submitted")
+        self._served = _per_class("cluster_frames_served")
+        self._shed = _per_class("cluster_shed_expired")
+        self._lost = _per_class("cluster_lost_in_flight")
+        self._rejected_full = _per_class("cluster_rejected_full")
+        self._rejected_rl = _per_class("cluster_rejected_rate_limited")
+        self._rejected_degraded = _per_class("cluster_rejected_degraded")
         self._sessions: dict = {}          # gsid -> _ClusterSession
         self._local: dict = {}             # (member, lsid) -> gsid
         self._orig_cb: dict = {}           # name -> pre-interpose hooks
@@ -209,16 +228,30 @@ class GatewayCluster:
         self._results: list = []
         self._next_gsid = 0
         self._steps = 0
-        self._migrations = 0
-        self._migrated_frames = 0
-        self._migrated_bytes = 0
+        self._migrations = R.counter("cluster_migrations")
+        self._migrated_frames = R.counter("cluster_migrated_frames")
+        self._migrated_bytes = R.counter("cluster_migrated_bytes")
+        # full pause list stays (public migration_pauses_ms API —
+        # benchmarks slice cold vs warm by move order); the sketch is
+        # the bounded exporter/stats view of the same samples
         self._pause_ms: list = []
-        self._drains = 0
-        self._failures = 0
-        self._failovers = 0                # sessions restored on survivors
-        self._retries = 0                  # transient faults retried away
-        self._replayed_frames = 0          # journal entries re-queued
-        self._drain_stragglers = 0         # sessions stuck at stop(drain)
+        self._pause_hist = R.histogram("cluster_migration_pause_ms")
+        self._drains = R.counter("cluster_drains")
+        self._failures = R.counter("cluster_member_failures")
+        self._failovers = R.counter("cluster_failovers")
+        #                                    sessions restored on survivors
+        self._retries = R.counter("cluster_retries")
+        #                                    transient faults retried away
+        self._replayed_frames = R.counter("cluster_replayed_frames")
+        #                                    journal entries re-queued
+        self._drain_stragglers = R.counter("cluster_drain_stragglers")
+        #                                    sessions stuck at stop(drain)
+        self._g_sessions = R.gauge("cluster_sessions_open")
+        self._g_members = R.gauge("cluster_members_live")
+        # flight-recorder dumps taken automatically at member failure —
+        # the black box survives exactly the event it explains (bounded:
+        # newest _DUMP_KEEP kept)
+        self.failover_dumps: list = []
         self._peak_members = 0             # high-water live membership
         self._drained: dict = {}           # name -> server, out of rotation
         self._dead: dict = {}              # name -> server, postmortem
@@ -314,7 +347,7 @@ class GatewayCluster:
             srv.quiesce()
             for gsid in homed:
                 self._migrate(gsid)
-            self._drains += 1
+            self._drains.inc()
             self._drained[name] = self._release_member(name)
             self._injectors.pop(name, None)
             # journals homed on the leaving member re-ship gracefully
@@ -329,7 +362,10 @@ class GatewayCluster:
                 < self._degraded_below * self._peak_members)
 
     def _refuse_degraded(self, qos: QoSClass, what: str):
-        self._rejected_degraded[qos.value] += 1
+        self._rejected_degraded[qos.value].inc()
+        self.recorder.record("degraded_refusal", qos=qos.value,
+                             what=what, live=len(self._members),
+                             peak=self._peak_members)
         raise ClusterDegradedError(len(self._members), self._peak_members,
                                    self._degraded_below, what)
 
@@ -394,13 +430,13 @@ class GatewayCluster:
             try:
                 self._call_member(lambda: srv.submit(cs.lsid, frame))
             except RateLimitError:
-                self._rejected_rl[cs.qos.value] += 1
+                self._rejected_rl[cs.qos.value].inc()
                 raise
             except QueueFullError:
-                self._rejected_full[cs.qos.value] += 1
+                self._rejected_full[cs.qos.value].inc()
                 raise
             cs.submitted += 1
-            self._submitted[cs.qos.value] += 1
+            self._submitted[cs.qos.value].inc()
 
     def close_session(self, gsid) -> None:
         """Graceful cluster-wide close: the owner drains every accepted
@@ -440,7 +476,10 @@ class GatewayCluster:
 
     def _count_retry(self, attempt, backoff_s, exc) -> None:
         with self._lock:
-            self._retries += 1
+            self._retries.inc()
+            self.recorder.record("retry", attempt=attempt,
+                                 backoff_s=backoff_s,
+                                 error=type(exc).__name__)
 
     # -- federation books (member callbacks) ---------------------------------
     def _journal_admit(self, name, qf) -> None:
@@ -453,6 +492,8 @@ class GatewayCluster:
             self._log.record(gsid, t=qf.frame.t, frame=qf.frame,
                              enq_s=qf.enq_s, deadline_s=qf.deadline_s,
                              weight=qf.weight)
+            if qf.trace is not None:       # the journal hop, in-span
+                qf.trace.add("journal", qf.enq_s, gsid=gsid)
 
     def _count_result(self, name, r) -> None:
         with self._lock:
@@ -461,7 +502,7 @@ class GatewayCluster:
                 return
             cs = self._sessions[gsid]
             cs.served += 1
-            self._served[cs.qos.value] += 1
+            self._served[cs.qos.value].inc()
             if self._log is not None:
                 self._log.settle(gsid, r.t)
             out = replace(r, sid=gsid)
@@ -481,7 +522,7 @@ class GatewayCluster:
                 return
             cs = self._sessions[gsid]
             cs.shed += 1
-            self._shed[cs.qos.value] += 1
+            self._shed[cs.qos.value].inc()
             if self._log is not None:
                 self._log.settle(gsid, qf.frame.t)
 
@@ -594,7 +635,10 @@ class GatewayCluster:
                     strag = {g: cs.outstanding
                              for g, cs in sorted(self._sessions.items())
                              if cs.outstanding > 0}
-                    self._drain_stragglers += len(strag)
+                    self._drain_stragglers.inc(len(strag))
+                    for g, n in strag.items():
+                        self.recorder.record("drain_straggler", gsid=g,
+                                             outstanding=n)
                 raise ClusterDrainTimeout(strag, max_steps) from e
         return self
 
@@ -684,11 +728,16 @@ class GatewayCluster:
                 continue
             cs.member, cs.lsid = tname, info.sid
             self._local[(tname, info.sid)] = gsid
-            self._migrations += 1
-            self._migrated_frames += (len(snap.server.queued)
-                                      if snap.server else 0)
-            self._migrated_bytes += snap.nbytes
-            self._pause_ms.append((self._timer() - t0) * 1e3)
+            self._migrations.inc()
+            moved = len(snap.server.queued) if snap.server else 0
+            self._migrated_frames.inc(moved)
+            self._migrated_bytes.inc(snap.nbytes)
+            pause = (self._timer() - t0) * 1e3
+            self._pause_ms.append(pause)
+            self._pause_hist.observe(pause)
+            self.recorder.record("migrate_out", gsid=gsid, src=src_name,
+                                 dst=tname, frames=moved,
+                                 pause_ms=pause)
             self._refresh_checkpoint(gsid)
             self._rehome_journal(gsid)
             return
@@ -733,8 +782,15 @@ class GatewayCluster:
         Journals HOMED on the dead member lose their shipped data
         (cleared, re-homed — their sessions are exposed until the next
         checkpoint).  Sessions with neither checkpoint nor journal are
-        dropped visibly (``lost_sessions``)."""
-        self._failures += 1
+        dropped visibly (``lost_sessions``).  The whole recovery lands
+        in the flight recorder, and an automatic dump is appended to
+        ``failover_dumps`` at the end — the black box survives exactly
+        the event it exists to explain."""
+        self._failures.inc()
+        self.recorder.record(
+            "member_hung" if isinstance(exc, MemberHungError)
+            else "member_failed",
+            member=name, error=type(exc).__name__, detail=str(exc))
         self._dead[name] = self._release_member(name)
         self._injectors.pop(name, None)
         if self._ring.has(name):
@@ -752,7 +808,10 @@ class GatewayCluster:
                 j.entries = [e for e in j.entries if e.acked]
             lost_now = max(0, cs.outstanding - len(replay))
             cs.lost += lost_now
-            self._lost[cs.qos.value] += lost_now
+            self._lost[cs.qos.value].inc(lost_now)
+            if lost_now:
+                self.recorder.record("lost_in_flight", gsid=gsid,
+                                     qos=cs.qos.value, frames=lost_now)
             del self._local[(name, cs.lsid)]
             snap = self._snaps.get(gsid)
             restored = False
@@ -769,14 +828,37 @@ class GatewayCluster:
                     tsrv = self._members.get(tname)
                     if tsrv is None:
                         continue
+                    offer = resume
+                    if tsrv.tracer.enabled and queued:
+                        # journal-replay trace continuity: the replayed
+                        # frame keeps its ORIGINAL enqueue timestamp in
+                        # the implant; its span begins (adopt, not
+                        # maybe_begin — the real submit died with the
+                        # owner) at the replay hop, sampled by the
+                        # cluster-stable (gsid, t) decision
+                        tq = tuple(
+                            replace(qs, trace=tsrv.tracer.adopt(
+                                gsid, qs.frame.t, "replay",
+                                enq_s=qs.enq_s, member=tname))
+                            for qs in queued)
+                        offer = replace(resume, server=replace(
+                            offer.server, queued=tq))
                     try:
-                        info = tsrv.import_session(resume)
+                        info = tsrv.import_session(offer)
                     except AdmissionError:
                         continue
                     cs.member, cs.lsid = tname, info.sid
                     self._local[(tname, info.sid)] = gsid
-                    self._failovers += 1
-                    self._replayed_frames += len(queued)
+                    self._failovers.inc()
+                    self._replayed_frames.inc(len(queued))
+                    self.recorder.record("failover", gsid=gsid,
+                                         src=name, dst=tname,
+                                         replayed=len(queued),
+                                         lost=lost_now)
+                    if queued:
+                        self.recorder.record("journal_replay", gsid=gsid,
+                                             dst=tname,
+                                             frames=len(queued))
                     self._refresh_checkpoint(gsid)
                     self._rehome_journal(gsid)
                     restored = True
@@ -785,12 +867,21 @@ class GatewayCluster:
                 # the replayable frames found no home either: they are
                 # lost WITH the session — counted, like everything here
                 cs.lost += len(replay)
-                self._lost[cs.qos.value] += len(replay)
+                self._lost[cs.qos.value].inc(len(replay))
                 del self._sessions[gsid]
                 self._snaps.pop(gsid, None)
                 if self._log is not None:
                     self._log.close(gsid)
                 self._lost_sessions.append(gsid)
+                self.recorder.record("lost_in_flight", gsid=gsid,
+                                     qos=cs.qos.value,
+                                     frames=len(replay),
+                                     session_lost=True)
+        # the automatic black-box dump, AFTER every recovery decision
+        # above was recorded — bounded like everything always-on
+        self.failover_dumps.append(
+            self.recorder.dump(reason=f"member_failed:{name}"))
+        del self.failover_dumps[:-_DUMP_KEEP]
 
     @property
     def migration_pauses_ms(self) -> tuple:
@@ -824,37 +915,55 @@ class GatewayCluster:
                     depth[c] += v
                 for c, v in st.in_flight.items():
                     infl[c] += v
-            if self._pause_ms:
-                a = np.asarray(self._pause_ms, np.float64)
-                pause = {"p50": float(np.percentile(a, 50)),
-                         "p95": float(np.percentile(a, 95)),
-                         "max": float(a.max())}
-            else:
-                pause = {"p50": 0.0, "p95": 0.0, "max": 0.0}
+            # percentiles from the registry sketch — exact (bit-identical
+            # to numpy.percentile) below its exact_cap, which every
+            # realistic migration count sits under
+            s = self._pause_hist.summary()
+            pause = {"p50": s["p50"], "p95": s["p95"], "max": s["max"]}
+            self._g_sessions.set(len(self._sessions))
+            self._g_members.set(len(self._members))
+            def _view(d):
+                return {c: m.value for c, m in d.items()}
             return ClusterStats(
                 members=tuple(sorted(self._members)),
                 sessions_open=len(self._sessions),
-                submitted=dict(self._submitted),
-                served=dict(self._served),
+                submitted=_view(self._submitted),
+                served=_view(self._served),
                 queue_depth=depth,
                 in_flight=infl,
-                shed_expired=dict(self._shed),
-                lost_in_flight=dict(self._lost),
-                rejected_full=dict(self._rejected_full),
-                rejected_rate_limited=dict(self._rejected_rl),
-                migrations=self._migrations,
-                migrated_frames=self._migrated_frames,
-                migrated_bytes=self._migrated_bytes,
+                shed_expired=_view(self._shed),
+                lost_in_flight=_view(self._lost),
+                rejected_full=_view(self._rejected_full),
+                rejected_rate_limited=_view(self._rejected_rl),
+                migrations=self._migrations.value,
+                migrated_frames=self._migrated_frames.value,
+                migrated_bytes=self._migrated_bytes.value,
                 migration_pause_ms=pause,
-                drains=self._drains,
-                failures=self._failures,
+                drains=self._drains.value,
+                failures=self._failures.value,
                 ring_share=self._ring.share(),
                 member_stats=member_stats,
                 degraded=self._degraded(),
-                failovers=self._failovers,
-                retries=self._retries,
-                replayed_frames=self._replayed_frames,
+                failovers=self._failovers.value,
+                retries=self._retries.value,
+                replayed_frames=self._replayed_frames.value,
                 journal_bytes=(self._log.bytes_shipped
                                if self._log is not None else 0),
-                rejected_degraded=dict(self._rejected_degraded),
-                drain_stragglers=self._drain_stragglers)
+                rejected_degraded=_view(self._rejected_degraded),
+                drain_stragglers=self._drain_stragglers.value)
+
+    def metrics(self) -> str:
+        """The federation registry (``cluster_*`` metrics) in
+        Prometheus text exposition format.  Member-level metrics live
+        on each member's own registry (``member.metrics()``) — a dead
+        member's series disappear with it, by design; the cluster
+        series are the ones that survive."""
+        with self._lock:
+            self._g_sessions.set(len(self._sessions))
+            self._g_members.set(len(self._members))
+        return to_prometheus(self.registry)
+
+    def dump_trace(self, reason: str = "on_demand") -> dict:
+        """Flight-recorder dump of the federation black box (see also
+        ``failover_dumps`` for the automatic per-failure dumps)."""
+        return self.recorder.dump(reason=reason)

@@ -47,12 +47,14 @@ class HeartbeatMonitor:
     its lock, like every other piece of federation state.
     """
 
-    def __init__(self, *, suspect_after_s: float, clock):
+    def __init__(self, *, suspect_after_s: float, clock, registry=None):
         if suspect_after_s <= 0:
             raise ValueError("suspect_after_s must be > 0")
         self.suspect_after_s = float(suspect_after_s)
         self._clock = clock
         self._last: dict = {}      # member -> clock at last beat
+        self._beats = (registry.counter("cluster_heartbeats")
+                       if registry is not None else None)
 
     def watch(self, name) -> None:
         """Start (or reset) monitoring — admission counts as a beat, so
@@ -67,6 +69,8 @@ class HeartbeatMonitor:
         """The member completed a step — progress, by definition."""
         if name in self._last:
             self._last[name] = self._clock()
+            if self._beats is not None:
+                self._beats.inc()
 
     def silent_for_s(self, name) -> float:
         return self._clock() - self._last[name]

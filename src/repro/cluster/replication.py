@@ -138,14 +138,23 @@ class ReplicationLog:
 
     Owned by ``GatewayCluster`` and mutated only under the cluster
     lock; every byte that crosses the (in-process) owner→buddy seam is
-    metered into ``bytes_shipped`` → ``ClusterStats.journal_bytes``.
+    metered into ``bytes_shipped`` → ``ClusterStats.journal_bytes``
+    (a ``cluster_journal_bytes`` counter when a ``MetricsRegistry`` is
+    attached, so the exporters see it too).
     """
 
-    def __init__(self):
+    def __init__(self, registry=None):
         self._journals: dict = {}      # gsid -> FrameJournal
-        self.bytes_shipped = 0
-        self.replayed_frames = 0       # entries re-queued by failovers
+        if registry is not None:
+            self._bytes = registry.counter("cluster_journal_bytes")
+        else:
+            from repro.obs import Counter
+            self._bytes = Counter("cluster_journal_bytes", ())
         self.resets = 0                # journals cleared by buddy death
+
+    @property
+    def bytes_shipped(self) -> int:
+        return self._bytes.value
 
     def open(self, gsid, buddy) -> FrameJournal:
         j = FrameJournal(gsid, buddy)
@@ -167,7 +176,7 @@ class ReplicationLog:
 
     def flush_all(self) -> int:
         shipped = sum(j.flush() for j in self._journals.values())
-        self.bytes_shipped += shipped
+        self._bytes.inc(shipped)
         return shipped
 
     def settle(self, gsid, t) -> None:
@@ -189,8 +198,8 @@ class ReplicationLog:
             return
         j.buddy = buddy
         if buddy is not None:
-            self.bytes_shipped += sum(entry_nbytes(e) for e in j.entries
-                                      if e.acked)
+            self._bytes.inc(sum(entry_nbytes(e) for e in j.entries
+                                if e.acked))
 
     def drop_member(self, name) -> list:
         """The member died: journals HOMED on it lose their ACKED data

@@ -1,17 +1,42 @@
-"""Minimal metrics logging: JSONL sink + rolling means."""
+"""Minimal metrics logging: JSONL sink + rolling means.
+
+The structured registry lives in ``repro.obs`` (counters, gauges,
+quantile sketches, exporters); this logger is the lightweight
+*training/benchmark* sink — a JSONL line per ``log()`` call plus a
+rolling window mean per key, nothing else.  ``repro.obs.export
+.write_jsonl`` snapshots a whole registry through the same file
+format, so the two compose: benchmarks log their own scalars here and
+dump the serving registry beside them (``benchmarks/obs_bench.py``).
+"""
 from __future__ import annotations
 
 import json
 import os
 import time
-from collections import defaultdict, deque
+from collections import deque
 
 
 class MetricsLogger:
-    def __init__(self, path=None, window=50):
+    """JSONL sink + rolling means.
+
+    Parameters
+    ----------
+    path : append-target JSONL file (parent dirs created); ``None``
+        keeps the rolling means only.
+    window : samples per key retained for ``mean()``.
+    clock : timestamp source for the ``t`` field — injectable so
+        deterministic suites and fake-clock benchmarks stamp
+        reproducible times (defaults to ``time.time``).
+
+    Context-manager friendly: ``with MetricsLogger(p) as m: ...``
+    closes the sink on exit, exceptions included.
+    """
+
+    def __init__(self, path=None, window=50, *, clock=time.time):
         self.path = path
         self.window = window
-        self.buf = defaultdict(lambda: deque(maxlen=window))
+        self.clock = clock
+        self.buf: dict = {}            # key -> deque(maxlen=window)
         if path:
             os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
             self._f = open(path, "a")
@@ -20,16 +45,30 @@ class MetricsLogger:
 
     def log(self, step, **kv):
         for k, v in kv.items():
-            self.buf[k].append(float(v))
+            b = self.buf.get(k)
+            if b is None:
+                b = self.buf[k] = deque(maxlen=self.window)
+            b.append(float(v))
         if self._f:
-            self._f.write(json.dumps({"step": step, "t": time.time(), **{
-                k: float(v) for k, v in kv.items()}}) + "\n")
+            self._f.write(json.dumps({"step": step, "t": self.clock(),
+                                      **{k: float(v)
+                                         for k, v in kv.items()}}) + "\n")
             self._f.flush()
 
     def mean(self, key):
-        b = self.buf[key]
+        """Rolling mean of the last ``window`` samples; NaN for a key
+        never logged — and asking does NOT create the key (the old
+        defaultdict grew an empty deque per typo'd lookup)."""
+        b = self.buf.get(key)
         return sum(b) / len(b) if b else float("nan")
 
     def close(self):
         if self._f:
             self._f.close()
+            self._f = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -24,9 +24,10 @@ from __future__ import annotations
 
 import threading
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.api.types import FrameRequest, QoSClass
+from repro.obs import MetricsRegistry
 
 
 class QueueFullError(RuntimeError):
@@ -119,21 +120,82 @@ class QueuedFrame:
     preemptions: int = 0       # times bumped out of a staged tick
     weight: float = 1.0        # fair-share weight of the session (DRR)
     promoted: bool = False     # staged via the aging lane (max_wait_ms)
+    trace: object = None       # FrameTrace when this frame is sampled
+    #                            (repro.obs.trace; None on the hot path)
 
 
-@dataclass
 class ClassQueue:
     """One bounded FIFO plus its conservation counters.  Never locked on
-    its own — the owning ``QoSQueues`` serializes every access."""
+    its own — the owning ``QoSQueues`` serializes every access.
 
-    qos: QoSClass
-    maxlen: int
-    q: deque = field(default_factory=deque)
-    submitted: int = 0         # frames accepted (rejections excluded)
-    rejected: int = 0          # QueueFullError refusals
-    preempted: int = 0         # frames bumped from a staged tick ...
-    requeued: int = 0          # ... and put back (always == preempted)
-    shed_expired: int = 0      # frames dropped with deadline long past
+    The counters live in the shared ``MetricsRegistry``
+    (``stream_frames_submitted{class=...}`` etc.) so exporters and the
+    ``StreamStats`` view read the very objects this queue mutates; the
+    attribute names (``cq.submitted += 1``) are properties over those
+    registry counters, preserved because migration bookkeeping and the
+    scheduler write through them under ``QoSQueues.cond``."""
+
+    __slots__ = ("qos", "maxlen", "q", "_submitted", "_rejected",
+                 "_preempted", "_requeued", "_shed_expired")
+
+    def __init__(self, qos: QoSClass, maxlen: int,
+                 registry: MetricsRegistry):
+        self.qos = qos
+        self.maxlen = maxlen
+        self.q: deque = deque()
+        c = qos.value
+        # frames accepted (rejections excluded); decremented when a
+        # migration relocates the ledger to another member
+        self._submitted = registry.counter(
+            "stream_frames_submitted", qos=c)
+        # QueueFullError refusals
+        self._rejected = registry.counter("stream_rejected_full", qos=c)
+        # frames bumped from a staged tick ... and put back (==)
+        self._preempted = registry.counter("stream_preempted", qos=c)
+        self._requeued = registry.counter("stream_requeued", qos=c)
+        # frames dropped with deadline long past
+        self._shed_expired = registry.counter("stream_shed_expired",
+                                              qos=c)
+
+    @property
+    def submitted(self) -> int:
+        return self._submitted.value
+
+    @submitted.setter
+    def submitted(self, v: int) -> None:
+        self._submitted.value = v
+
+    @property
+    def rejected(self) -> int:
+        return self._rejected.value
+
+    @rejected.setter
+    def rejected(self, v: int) -> None:
+        self._rejected.value = v
+
+    @property
+    def preempted(self) -> int:
+        return self._preempted.value
+
+    @preempted.setter
+    def preempted(self, v: int) -> None:
+        self._preempted.value = v
+
+    @property
+    def requeued(self) -> int:
+        return self._requeued.value
+
+    @requeued.setter
+    def requeued(self, v: int) -> None:
+        self._requeued.value = v
+
+    @property
+    def shed_expired(self) -> int:
+        return self._shed_expired.value
+
+    @shed_expired.setter
+    def shed_expired(self, v: int) -> None:
+        self._shed_expired.value = v
 
 
 class QoSQueues:
@@ -153,16 +215,21 @@ class QoSQueues:
     aging passes both lean on this.
     """
 
-    def __init__(self, *, maxlen: int = 256, maxlens=None):
+    def __init__(self, *, maxlen: int = 256, maxlens=None,
+                 registry: MetricsRegistry | None = None):
         self.cond = threading.Condition()
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
         over = maxlens or {}
-        self.by_class = {q: ClassQueue(q, int(over.get(q, maxlen)))
+        self.by_class = {q: ClassQueue(q, int(over.get(q, maxlen)),
+                                       self.registry)
                          for q in QoSClass}
         self._seq = 0
 
     # -- producer side (any thread) ------------------------------------------
     def submit(self, sid, frame: FrameRequest, qos: QoSClass, *, now: float,
-               deadline_s: float, weight: float = 1.0) -> QueuedFrame:
+               deadline_s: float, weight: float = 1.0,
+               trace=None) -> QueuedFrame:
         """Enqueue one frame; raises ``QueueFullError`` at capacity."""
         with self.cond:
             cq = self.by_class[qos]
@@ -171,8 +238,11 @@ class QoSQueues:
                 raise QueueFullError(qos, len(cq.q), cq.maxlen)
             qf = QueuedFrame(sid=sid, frame=frame, qos=qos, seq=self._seq,
                              enq_s=now, deadline_s=deadline_s,
-                             weight=weight)
+                             weight=weight, trace=trace)
             self._seq += 1
+            if trace is not None:
+                trace.add("enqueue", now, qos=qos.value,
+                          depth=len(cq.q))
             cq.q.append(qf)
             cq.submitted += 1
             self.cond.notify_all()
@@ -268,7 +338,8 @@ class QoSQueues:
             qf = QueuedFrame(sid=sid, frame=snap.frame, qos=qos, seq=seq,
                              enq_s=snap.enq_s, deadline_s=snap.deadline_s,
                              preemptions=snap.preemptions,
-                             weight=snap.weight, promoted=snap.promoted)
+                             weight=snap.weight, promoted=snap.promoted,
+                             trace=getattr(snap, "trace", None))
             q.insert(i, qf)
             cq.submitted += 1
             out.append(qf)

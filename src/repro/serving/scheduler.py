@@ -57,12 +57,10 @@ happens inside ``queues.cond`` so a ``stats()`` snapshot is atomic.
 """
 from __future__ import annotations
 
-from collections import deque
 from dataclasses import dataclass, field
 
-import numpy as np
-
 from repro.api.types import QoSClass
+from repro.obs import MetricsRegistry
 from repro.serving.queues import QoSQueues, QueuedFrame
 
 # Default per-class deadline budgets (ms between submit and tick
@@ -173,17 +171,34 @@ class TickScheduler:
         dropped = sched.pop_shed()         # frames the shed pass removed
     """
 
-    def __init__(self, cfg: SchedulerCfg | None = None):
+    def __init__(self, cfg: SchedulerCfg | None = None, *,
+                 registry: MetricsRegistry | None = None,
+                 recorder=None):
         # cfg defaults to None, not a shared module-level SchedulerCfg:
         # the frozen dataclass holds mutable dicts, and a shared default
         # instance would leak mutations across servers
         self.cfg = cfg if cfg is not None else SchedulerCfg()
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self.recorder = recorder    # FlightRecorder or None: anomaly
+        #                             events (miss/shed/preempt) land
+        #                             there with full decision context
         self.staged: list[QueuedFrame] = []
-        self.admitted = {q.value: 0 for q in QoSClass}
-        self.deadline_misses = {q.value: 0 for q in QoSClass}
-        self.promoted = {q.value: 0 for q in QoSClass}
-        # bounded wait-sample rings -> p50/p95 queue wait per class
-        self.waits_ms = {q.value: deque(maxlen=4096) for q in QoSClass}
+        # admission-side counters in the shared registry; the dict-of-
+        # ints surface the tests and StreamStats read is the properties
+        # below (plain snapshots over these live counters)
+        self._admitted = {q.value: self.registry.counter(
+            "stream_admitted", qos=q.value) for q in QoSClass}
+        self._deadline_misses = {q.value: self.registry.counter(
+            "stream_deadline_misses", qos=q.value) for q in QoSClass}
+        self._promoted = {q.value: self.registry.counter(
+            "stream_promoted", qos=q.value) for q in QoSClass}
+        # bounded streaming quantile sketches -> p50/p95 queue wait per
+        # class (repro.obs: exact == numpy.percentile below exact_cap,
+        # log-binned and O(1)-memory beyond — the old deque rings grew
+        # no further but FORGOT, this forgets nothing and stays bounded)
+        self.wait_hist = {q.value: self.registry.histogram(
+            "stream_queue_wait_ms", qos=q.value) for q in QoSClass}
         # STANDARD fair-share state: per-session deficit counters plus
         # the tenant the ring last served (service resumes after it)
         self._drr_deficit: dict = {}
@@ -194,6 +209,21 @@ class TickScheduler:
         # frames the most recent admit's shed pass dropped, until the
         # server collects them (replaced — never grows — each admit)
         self._last_shed: list[QueuedFrame] = []
+
+    # admission counters as the plain {class: int} dicts they always
+    # were — snapshots over the registry counters, so exporters and the
+    # legacy readers see the same numbers
+    @property
+    def admitted(self) -> dict:
+        return {c: m.value for c, m in self._admitted.items()}
+
+    @property
+    def deadline_misses(self) -> dict:
+        return {c: m.value for c, m in self._deadline_misses.items()}
+
+    @property
+    def promoted(self) -> dict:
+        return {c: m.value for c, m in self._promoted.items()}
 
     # -- phase 1: reserve under the in-flight tick ---------------------------
     def stage(self, queues: QoSQueues, now: float | None = None) -> int:
@@ -208,6 +238,7 @@ class TickScheduler:
     def _fill_locked(self, queues, now) -> int:
         if now is not None:
             self._promote_locked(queues, now)
+        n0 = len(self.staged)
         for qos in PRIORITY:
             if len(self.staged) >= self.cfg.max_batch:
                 break
@@ -219,6 +250,10 @@ class TickScheduler:
                     if qf is None:
                         break
                     self.staged.append(qf)
+        if now is not None:
+            for qf in self.staged[n0:]:
+                if qf.trace is not None:
+                    qf.trace.add("stage", now)
         return len(self.staged)
 
     def _promote_locked(self, queues, now) -> None:
@@ -245,7 +280,10 @@ class TickScheduler:
                 return
             qf = queues.pop_locked(oldest_qos)
             qf.promoted = True
-            self.promoted[qf.qos.value] += 1
+            self._promoted[qf.qos.value].inc()
+            if qf.trace is not None:
+                qf.trace.add("promote", now,
+                             waited_ms=(now - qf.enq_s) * 1e3)
             self.staged.append(qf)
             n_promoted += 1
 
@@ -319,16 +357,26 @@ class TickScheduler:
             self._shed_locked(queues, now)
             self._fill_locked(queues, now)
             if self.cfg.preempt_bulk:
-                self._preempt_locked(queues)
+                self._preempt_locked(queues, now)
             batch = sorted(self.staged,
                            key=lambda f: (PRIORITY.index(f.qos), f.seq))
             self.staged = []
             for qf in batch:
                 cls = qf.qos.value
-                self.admitted[cls] += 1
-                self.waits_ms[cls].append((now - qf.enq_s) * 1e3)
-                if now > qf.deadline_s:
-                    self.deadline_misses[cls] += 1
+                self._admitted[cls].inc()
+                wait_ms = (now - qf.enq_s) * 1e3
+                self.wait_hist[cls].observe(wait_ms)
+                missed = now > qf.deadline_s
+                if missed:
+                    self._deadline_misses[cls].inc()
+                    if self.recorder is not None:
+                        self.recorder.record(
+                            "deadline_miss", now, sid=qf.sid,
+                            t=qf.frame.t, qos=cls,
+                            late_ms=(now - qf.deadline_s) * 1e3)
+                if qf.trace is not None:
+                    qf.trace.add("admit", now, wait_ms=wait_ms,
+                                 missed=missed)
             return batch
 
     def _shed_locked(self, queues, now) -> None:
@@ -347,8 +395,16 @@ class TickScheduler:
             shed.extend(queues.shed_expired_locked(qos, now, horizon))
         for qf in shed:
             cls = qf.qos.value
-            self.deadline_misses[cls] += 1
-            self.waits_ms[cls].append((now - qf.enq_s) * 1e3)
+            self._deadline_misses[cls].inc()
+            wait_ms = (now - qf.enq_s) * 1e3
+            self.wait_hist[cls].observe(wait_ms)
+            if self.recorder is not None:
+                self.recorder.record(
+                    "shed", now, sid=qf.sid, t=qf.frame.t, qos=cls,
+                    waited_ms=wait_ms,
+                    expired_ms=(now - qf.deadline_s) * 1e3)
+            if qf.trace is not None:
+                qf.trace.add("shed", now, waited_ms=wait_ms)
         self._last_shed = shed
 
     def pop_shed(self) -> list[QueuedFrame]:
@@ -358,7 +414,7 @@ class TickScheduler:
         out, self._last_shed = self._last_shed, []
         return out
 
-    def _preempt_locked(self, queues) -> None:
+    def _preempt_locked(self, queues, now=None) -> None:
         """While a higher-class frame waits and the staged batch holds
         preemptible BULK frames, bump the newest-staged one (LIFO —
         least committed) back to the front of its queue and stage the
@@ -374,8 +430,21 @@ class TickScheduler:
                     key=lambda i: self.staged[i].seq)
                 if bulk_at is None:
                     return
-                queues.requeue_front_locked(self.staged.pop(bulk_at))
-                self.staged.append(queues.pop_locked(qos))
+                bumped = self.staged.pop(bulk_at)
+                if now is not None:
+                    if bumped.trace is not None:
+                        bumped.trace.add("preempt", now, by=qos.value)
+                    if self.recorder is not None:
+                        self.recorder.record(
+                            "preempt", now, sid=bumped.sid,
+                            t=bumped.frame.t, qos=bumped.qos.value,
+                            by=qos.value,
+                            preemptions=bumped.preemptions + 1)
+                queues.requeue_front_locked(bumped)
+                taken = queues.pop_locked(qos)
+                if now is not None and taken.trace is not None:
+                    taken.trace.add("stage", now, via="preemption")
+                self.staged.append(taken)
 
     # -- live migration (repro.cluster) --------------------------------------
     def extract_session_locked(self, sid) -> list[QueuedFrame]:
@@ -400,16 +469,9 @@ class TickScheduler:
         return out
 
     def wait_percentiles(self) -> dict:
-        """{class: {"p50","p95","mean","max"}} over the retained wait
-        samples (empty classes report zeros)."""
-        out = {}
-        for cls, ring in self.waits_ms.items():
-            if ring:
-                a = np.asarray(ring, np.float64)
-                out[cls] = {"p50": float(np.percentile(a, 50)),
-                            "p95": float(np.percentile(a, 95)),
-                            "mean": float(a.mean()),
-                            "max": float(a.max())}
-            else:
-                out[cls] = {"p50": 0.0, "p95": 0.0, "mean": 0.0, "max": 0.0}
-        return out
+        """{class: {"p50","p95","mean","max"}} over the wait sketches
+        (empty classes report zeros).  Exact ``numpy.percentile``
+        values while a class has seen <= the sketch's ``exact_cap``
+        samples; bounded-error log-bin estimates beyond — ``mean`` and
+        ``max`` are exact always."""
+        return {cls: h.summary() for cls, h in self.wait_hist.items()}

@@ -35,10 +35,13 @@ from collections import deque
 from dataclasses import replace
 
 from repro.api.types import (FrameRequest, QoSClass,
-                             QueuedFrameSnapshot, ServerSessionSnapshot,
-                             SessionInfo, SessionSnapshot, StreamStats)
+                             QueuedFrameSnapshot, ResourceSignals,
+                             ServerSessionSnapshot, SessionInfo,
+                             SessionSnapshot, StreamStats)
+from repro.obs import FlightRecorder, Tracer, to_prometheus
 from repro.serving.queues import (QoSQueues, QueuedFrame,  # noqa: F401
-                                  RateLimitError, TokenBucket)
+                                  QueueFullError, RateLimitError,
+                                  TokenBucket)
 from repro.serving.scheduler import (SchedulerCfg, TickScheduler,
                                      clamp_weight)
 
@@ -117,7 +120,8 @@ class StreamServer:
                  pipeline: bool = True, on_result=None, on_shed=None,
                  on_admit=None, clock=None,
                  rate_limit: tuple | None = None,
-                 schedule_keep: int = 4096):
+                 schedule_keep: int = 4096,
+                 trace_sample: float = 0.0, recorder=None):
         if not gateway.overlap:
             raise ValueError(
                 "StreamServer pipelines tick_launch/tick_collect — "
@@ -125,9 +129,23 @@ class StreamServer:
         self.gateway = gateway
         self.cfg = cfg = cfg if cfg is not None else SchedulerCfg()
         self.pipeline = pipeline
-        self.queues = QoSQueues(maxlen=queue_maxlen, maxlens=queue_maxlens)
-        self.scheduler = TickScheduler(cfg)
         self._clock = clock if clock is not None else gateway.clock
+        # one telemetry plane for the whole stack (repro.obs;
+        # docs/OBSERVABILITY.md): the gateway's registry is shared down
+        # into the queues and scheduler, the flight recorder collects
+        # every anomaly, and the tracer samples per-frame spans
+        # (trace_sample=0.0 — the default — stamps NOTHING on the hot
+        # path: frames carry trace=None and every stamp site is one
+        # attribute test)
+        self.registry = gateway.registry
+        self.recorder = recorder if recorder is not None \
+            else FlightRecorder(clock=self._clock)
+        self.tracer = Tracer(trace_sample, clock=self._clock,
+                             recorder=self.recorder)
+        self.queues = QoSQueues(maxlen=queue_maxlen, maxlens=queue_maxlens,
+                                registry=self.registry)
+        self.scheduler = TickScheduler(cfg, registry=self.registry,
+                                       recorder=self.recorder)
         self._on_result = on_result
         self._on_shed = on_shed
         self._on_admit = on_admit
@@ -144,22 +162,32 @@ class StreamServer:
         self._step_lock = threading.Lock()
         self._plan = None                     # the in-flight TickPlan
         self._plan_classes: list[str] = []    # its frames' classes
+        self._plan_traces: list = []          # its frames' FrameTraces
+        #                                       (parallel; None when off)
         self._results: list = []              # drained by drain_results()
         # per tick: [(sid, t), ...] — BOUNDED: an always-on server must
         # not grow host state with uptime, so only the newest
         # ``schedule_keep`` ticks are retained for replay/debugging
         self._schedule: deque = deque(maxlen=schedule_keep)
-        self._pipelined_ticks = 0
-        self._ticks = 0
-        self._served = {q.value: 0 for q in QoSClass}
+        R = self.registry
+        self._pipelined_ticks = R.counter("stream_pipelined_ticks")
+        self._ticks = R.counter("stream_ticks")
+        self._served = {q.value: R.counter("stream_frames_served",
+                                           qos=q.value) for q in QoSClass}
         # frames admitted out of the queues but not yet delivered —
         # updated under _lock inside the admit/collect transitions so
         # the StreamStats conservation invariant holds at every snapshot
-        self._inflight = {q.value: 0 for q in QoSClass}
+        # (a Counter, not a Gauge: it is an integer level in the
+        # conservation identity and must stay bit-exact)
+        self._inflight = {q.value: R.counter("stream_in_flight",
+                                             qos=q.value)
+                          for q in QoSClass}
         # token-bucket refusals per class — admission control happens
         # before a frame touches the queues, so the counter lives here
         # (mutated and snapshotted under _lock)
-        self._rate_limited = {q.value: 0 for q in QoSClass}
+        self._rate_limited = {q.value: R.counter(
+            "stream_rejected_rate_limited", qos=q.value)
+            for q in QoSClass}
         self._thread: threading.Thread | None = None
         self._stopping = False
         self._drain_on_stop = True
@@ -263,6 +291,12 @@ class StreamServer:
                         self.queues.uncount_locked(s.qos, len(staged))
                     queued = self.queues.extract_session_locked(s.qos, sid)
                     frames = sorted(staged + queued, key=lambda qf: qf.seq)
+                    now = None      # lazy clock: only if a trace is live
+                    for qf in frames:
+                        if qf.trace is not None:
+                            if now is None:
+                                now = self._clock()
+                            qf.trace.add("migrate_out", now)
                     snap = self.gateway.export_session(sid)
                     del self._sessions[sid]
                     bucket = (None if s.bucket is None else
@@ -276,7 +310,8 @@ class StreamServer:
                                 frame=qf.frame, enq_s=qf.enq_s,
                                 deadline_s=qf.deadline_s,
                                 preemptions=qf.preemptions,
-                                promoted=qf.promoted, weight=qf.weight)
+                                promoted=qf.promoted, weight=qf.weight,
+                                trace=qf.trace)
                             for qf in frames))
                     return replace(snap, server=server)
 
@@ -344,8 +379,15 @@ class StreamServer:
                     s.submitted, s.served, s.shed = (
                         sv.submitted, sv.served, sv.shed)
                     self._sessions[info.sid] = s
-                    self.queues.implant_frames_locked(
+                    implanted = self.queues.implant_frames_locked(
                         info.sid, sv.queued, snap.qos)
+                    now = None   # lazy clock: only if a trace travelled
+                    for qf in implanted:
+                        if qf.trace is not None:
+                            if now is None:
+                                now = self._clock()
+                            qf.trace.add("migrate_in", now,
+                                         sid=info.sid)
                     return info
 
     def _check_fault(self) -> None:
@@ -380,20 +422,31 @@ class StreamServer:
             if s.closing:
                 raise KeyError(f"session {sid} is closing")
             if s.bucket is not None and not s.bucket.try_take(now):
-                self._rate_limited[s.qos.value] += 1
+                self._rate_limited[s.qos.value].inc()
+                self.recorder.record("rate_limited", now, sid=sid,
+                                     qos=s.qos.value, t=frame.t)
                 raise RateLimitError(sid, s.qos,
                                      s.bucket.retry_after_s(now))
             s.submitted += 1
+        # per-frame span begins here; with sampling off (the default)
+        # this is one float compare and tr stays None everywhere
+        tr = self.tracer.maybe_begin(sid, frame.t, now,
+                                     qos=s.qos.value) \
+            if self.tracer.sample > 0.0 else None
         try:
             qf = self.queues.submit(sid, frame, s.qos, now=now,
                                     deadline_s=now
                                     + self.cfg.deadline_s(s.qos),
-                                    weight=s.weight)
-        except BaseException:
+                                    weight=s.weight, trace=tr)
+        except BaseException as e:
             with self._lock:
                 s.submitted -= 1
                 if s.bucket is not None:
                     s.bucket.give_back()    # a refused frame costs no budget
+            if isinstance(e, QueueFullError):
+                self.recorder.record("queue_full", now, sid=sid,
+                                     qos=s.qos.value, t=frame.t,
+                                     depth=e.depth, maxlen=e.maxlen)
             raise
         if self._on_admit is not None:
             # the journal-ack seam (repro.cluster.replication): a frame
@@ -522,13 +575,18 @@ class StreamServer:
             shed = self.scheduler.pop_shed()
             with self._lock:                   # queue -> in-flight, atomic
                 for qf in batch:
-                    self._inflight[qf.qos.value] += 1
+                    self._inflight[qf.qos.value].inc()
                 # shed frames leave the system here: fold them into the
                 # per-session books so a draining close still completes
                 for qf in shed:
                     s = self._sessions.get(qf.sid)
                     if s is not None:
                         s.shed += 1
+        for qf in shed:
+            if qf.trace is not None:
+                # the scheduler already stamped the terminal "shed";
+                # hand the finished span to the flight recorder
+                self.tracer.retire(qf.trace)
         if shed and self._on_shed is not None:
             for qf in shed:        # outside the locks, like on_result
                 try:
@@ -538,6 +596,7 @@ class StreamServer:
                     traceback.print_exc()
         new_plan = None
         new_classes: list[str] = []
+        new_traces: list = []
         served = 0
         if batch:
             if self._plan is not None and (not self.pipeline
@@ -548,27 +607,48 @@ class StreamServer:
                 # on the client's thread) — skip the re-check here
                 gw.submit_validated(qf.sid, qf.frame)
                 new_classes.append(qf.qos.value)
+                new_traces.append(qf.trace)
             if self._plan is not None:
                 with self._lock:               # stats() reads under _lock
-                    self._pipelined_ticks += 1
+                    self._pipelined_ticks.inc()
             new_plan = gw.tick_launch()
+            if any(tr is not None for tr in new_traces):
+                # stamp dispatch with the bucket/shard the launch chose;
+                # idx indexes the submission-ordered batch
+                now = self._clock()
+                for k, idx, _wire, _ms, sh in new_plan.launched:
+                    for i in idx:
+                        tr = new_traces[i]
+                        if tr is not None:
+                            tr.add("dispatch", now, k=int(k),
+                                   shard=int(sh))
         self.scheduler.stage(self.queues, self._clock())
         if self._plan is not None:
             served += self._collect()
         self._plan, self._plan_classes = new_plan, new_classes
+        self._plan_traces = new_traces
         self._process_closes()
         return served
 
     def _collect(self) -> int:
         plan, classes = self._plan, self._plan_classes
-        self._plan, self._plan_classes = None, []
+        traces = self._plan_traces
+        self._plan, self._plan_classes, self._plan_traces = None, [], []
         results = self.gateway.tick_collect(plan)
+        now = None          # lazy: no clock read unless a trace is live
+        for r, tr in zip(results, traces):
+            if tr is not None:
+                if now is None:
+                    now = self._clock()
+                tr.add("collect", now)
+                self.tracer.finish(tr, "serve", now, route=r.route,
+                                   k=r.k, latency_ms=r.latency_ms)
         with self._lock:
-            self._ticks += 1
+            self._ticks.inc()
             self._schedule.append([(r.sid, r.t) for r in results])
             for r, cls in zip(results, classes):
-                self._served[cls] += 1
-                self._inflight[cls] -= 1
+                self._served[cls].inc()
+                self._inflight[cls].inc(-1)
                 s = self._sessions.get(r.sid)
                 if s is not None:
                     s.served += 1
@@ -629,7 +709,7 @@ class StreamServer:
         on it).  Raises if the serving loop died, so progress pollers
         fail fast instead of spinning forever."""
         self._check_fault()
-        return sum(self._served.values())
+        return sum(c.value for c in self._served.values())
 
     def drain_results(self) -> list:
         """All ``FrameResult``s delivered since the last drain."""
@@ -664,11 +744,13 @@ class StreamServer:
             promoted = dict(self.scheduler.promoted)
             waits = self.scheduler.wait_percentiles()
             with self._lock:
-                served = dict(self._served)
-                in_flight = dict(self._inflight)
-                rate_limited = dict(self._rate_limited)
-                ticks = self._ticks
-                pipelined = self._pipelined_ticks
+                served = {c: m.value for c, m in self._served.items()}
+                in_flight = {c: m.value
+                             for c, m in self._inflight.items()}
+                rate_limited = {c: m.value
+                                for c, m in self._rate_limited.items()}
+                ticks = self._ticks.value
+                pipelined = self._pipelined_ticks.value
         t = self._thread
         return StreamStats(
             running=t is not None and t.is_alive(),
@@ -687,3 +769,59 @@ class StreamServer:
             deadline_misses=misses,
             queue_wait_ms=waits,
             gateway=self.gateway.stats())
+
+    def metrics(self) -> str:
+        """The whole stack's registry in Prometheus text exposition
+        format (gateway + queues + scheduler + server share one
+        registry).  Calls ``gateway.stats()`` first so lazily-synced
+        gauges (per-shard frame counts) are fresh."""
+        self.gateway.stats()
+        return to_prometheus(self.registry)
+
+    def dump_trace(self, reason: str = "on_demand") -> dict:
+        """Flight-recorder dump: recent sampled spans plus every
+        anomalous event (shed, deadline miss, preemption, rate-limit /
+        queue-full refusal) with exact cumulative counts — see
+        ``repro.obs.FlightRecorder.dump``."""
+        return self.recorder.dump(reason=reason)
+
+    def resource_signals(self) -> ResourceSignals:
+        """Cheap load signals for adaptive policies — the same numbers
+        ``stats()`` reports, but as a small fixed-shape record whose
+        ``as_observation()`` vector a ``SplitPolicy`` can consume as
+        features (docs/OBSERVABILITY.md).  Safe to poll from a hot
+        loop: no percentile lists are built, only registry reads."""
+        with self.queues.cond:
+            depth = (self.queues.pending_locked()
+                     + len(self.scheduler.staged))
+            capacity = sum(cq.maxlen
+                           for cq in self.queues.by_class.values())
+            submitted = rejected = shed = 0
+            for cq in self.queues.by_class.values():
+                submitted += cq.submitted
+                rejected += cq.rejected
+                shed += cq.shed_expired
+            p95 = 0.0
+            for h in self.scheduler.wait_hist.values():
+                if h.count:
+                    p95 = max(p95, h.summary()["p95"])
+            with self._lock:
+                in_flight = sum(c.value
+                                for c in self._inflight.values())
+                served = sum(c.value for c in self._served.values())
+                limited = sum(c.value
+                              for c in self._rate_limited.values())
+        stage = self.registry.value("gateway_stage_ewma_ms",
+                                    stage="tick")
+        refused = rejected + limited
+        offered = submitted + refused
+        uptime = self._clock() - self.gateway._t_start
+        return ResourceSignals(
+            queue_depth=depth,
+            queue_fill=depth / capacity if capacity else 0.0,
+            in_flight=in_flight,
+            wait_p95_ms=p95,
+            stage_ewma_ms=stage,
+            shed_rate=shed / submitted if submitted else 0.0,
+            reject_rate=refused / offered if offered else 0.0,
+            throughput_fps=served / uptime if uptime > 0 else 0.0)

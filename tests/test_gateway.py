@@ -422,13 +422,16 @@ def test_injected_clock_makes_timing_deterministic(params):
     rng = np.random.default_rng(7)
     gw.submit(sid, FrameRequest(t=0, mel=_mel(rng)))
     (r,) = gw.tick()
-    # dispatch reads the clock twice: (t1 - t0) * 1e3 / bucket = 500ms
-    assert r.latency_ms == 500.0
+    # dispatch stamps t_d0 at read 2 and closes the span at read 5 (the
+    # always-on launch/collect EWMA stage gauges stamp reads 3 and 4 in
+    # between): (2.5 - 1.0) * 1e3 / bucket = 1500ms
+    assert r.latency_ms == 1500.0
     s = gw.stats()
-    # tick reads it at entry and exit around the dispatch pair: 1.5 s
-    assert s.last_tick_ms == 1500.0
-    # reads: ctor(0), tick entry(1), dispatch(2,3), tick exit(4), stats(5)
-    assert s.uptime_s == 0.5 * 5
+    # tick entry(1) .. exit(7) around dispatch + EWMA stamps: 3.0 s
+    assert s.last_tick_ms == 3000.0
+    # reads: ctor(0), entry(1), dispatch(2,5), launch/collect EWMA
+    # stamps(3,4,6), tick exit(7), stats(8)
+    assert s.uptime_s == 0.5 * 8
 
 
 def test_gateway_on_sharded_backend_bit_matches_host(params):
